@@ -1,0 +1,49 @@
+"""Render baseline vs optimized dry-run sweeps side by side (§Perf table).
+
+    PYTHONPATH=src python -m benchmarks.compare_runs \
+        dryrun_single.jsonl dryrun_final.jsonl
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import fraction_of_roofline, load
+
+
+def key(r):
+    return (r["arch"], r["shape"])
+
+
+def main(argv=None):
+    args = argv or sys.argv[1:]
+    base_path = args[0] if args else "dryrun_single.jsonl"
+    new_path = args[1] if len(args) > 1 else "dryrun_final.jsonl"
+    base = {key(r): r for r in load(base_path) if not r.get("multi_pod")}
+    new = {key(r): r for r in load(new_path) if not r.get("multi_pod")}
+
+    print("| arch | shape | step_s base -> opt | speedup | peak GiB base -> opt"
+          " | fits | roofline frac base -> opt |")
+    print("|---|---|---|---|---|---|---|")
+    total_base = total_new = 0.0
+    for k in sorted(new):
+        b, n = base.get(k), new[k]
+        if n["status"] != "ok" or not b or b["status"] != "ok":
+            continue
+        sb = b["roofline"]["step_s"]
+        sn = n["roofline"]["step_s"]
+        total_base += sb
+        total_new += sn
+        pb = b["bytes_per_device"]["peak_estimate"] / 2**30
+        pn = n["bytes_per_device"]["peak_estimate"] / 2**30
+        print(f"| {k[0]} | {k[1]} | {sb:.4g} -> {sn:.4g} | "
+              f"{sb / max(sn, 1e-12):.2f}x | {pb:.1f} -> {pn:.1f} | "
+              f"{'Y' if n.get('hbm_ok') else 'N'} | "
+              f"{fraction_of_roofline(b):.2f} -> {fraction_of_roofline(n):.2f} |")
+    print(f"\naggregate dominant-term time: {total_base:.2f}s -> "
+          f"{total_new:.2f}s ({total_base / max(total_new, 1e-9):.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

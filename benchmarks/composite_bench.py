@@ -1,0 +1,63 @@
+"""§V.C reproduction: global cloud-free composite throughput.
+
+Measures per-tile composite rate (the Pallas kernel's jnp oracle on CPU),
+then projects the paper's campaign — "43k square tiles ... 400 32-vCPU
+pre-emptible instances ... 8 hours, for a total of 100k CPU-hours and a
+cost of $1000" — from measured pixel throughput and the Table I cost model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps.composite import composite_tile
+from repro.configs.festivus_imagery import ImageryConfig
+from repro.core import perfmodel as pm
+from repro.data import imagery
+
+PAPER_TILES = 43_000
+PAPER_TILE_PX = 4096
+PAPER_DEPTH_EST = 64  # input scenes per tile over 3.4 years
+PAPER_CPU_HOURS = 100_000
+PAPER_COST = 1_000.0
+
+
+def run(verbose: bool = True, tile_px: int = 128, depth: int = 8) -> dict:
+    cfg = ImageryConfig()
+    spec = imagery.SceneSpec(tile_px=tile_px, temporal_depth=depth, seed=11)
+    imgs, _ = imagery.scene_stack(spec)
+    composite_tile(imgs, cfg, impl="ref")  # warm the jit
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        composite_tile(imgs, cfg, impl="ref")
+    dt = (time.perf_counter() - t0) / iters
+    px_rate = depth * tile_px * tile_px / dt  # input pixels/s/core
+
+    paper_px = PAPER_TILES * PAPER_TILE_PX**2 * PAPER_DEPTH_EST
+    projected_cpu_hours = paper_px / px_rate / 3600.0
+    projected_cost = projected_cpu_hours * 3600 * 32 \
+        * pm.COST_MODEL.linpack_gflops_s * 25.46 / 32  # $/core-s at cloud rate
+    result = {
+        "tile_px": tile_px, "depth": depth,
+        "seconds_per_tile": round(dt, 4),
+        "input_px_per_s_per_core": round(px_rate / 1e6, 2),
+        "paper_campaign_px": paper_px,
+        "projected_cpu_hours_at_measured_rate": round(projected_cpu_hours),
+        "paper_cpu_hours": PAPER_CPU_HOURS,
+        "paper_cost_usd": PAPER_COST,
+    }
+    if verbose:
+        print(f"composite: {result['seconds_per_tile']}s per "
+              f"{tile_px}px/{depth}-deep tile "
+              f"({result['input_px_per_s_per_core']} Mpx/s/core)")
+        print(f"projected global campaign: "
+              f"~{result['projected_cpu_hours_at_measured_rate']:,} CPU-hours "
+              f"(paper: {PAPER_CPU_HOURS:,} incl. I/O + JPEG2000 codec)")
+    return result
+
+
+if __name__ == "__main__":
+    run()

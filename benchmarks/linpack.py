@@ -1,0 +1,68 @@
+"""§IV.A reproduction: "1.21 Teraflops for $1/hr".
+
+Measures real matmul FLOP/s on the local device (the spirit of the paper's
+LINPACK parameter scan), then reprices per teraflop-hour with the Table I
+cost model, and extends the paper's 2000x price/performance trend to the
+TPU v5e target.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perfmodel as pm
+
+PAPER_TF = 1.21
+PAPER_COST_PER_TF_HR = 0.84
+ASCI_RED_COST_PER_TF_HR = 1749.0
+#: public us-central1 preemptible v5e list price (per chip-hour, 2024)
+V5E_PREEMPTIBLE_PER_HR = 0.60
+
+
+def measure_matmul_flops(n: int = 1024, iters: int = 8) -> float:
+    x = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    y = x
+    for _ in range(iters):
+        y = f(y)
+    y.block_until_ready()
+    dt = time.perf_counter() - t0
+    return 2.0 * n**3 * iters / dt
+
+
+def run(verbose: bool = True) -> dict:
+    local = measure_matmul_flops()
+    local_tf = local / 1e12
+    # price local flops at the Table I LINPACK rate
+    local_cost_per_tf_hr = pm.COST_MODEL.flops_cost(1e12) * 3600
+    v5e_cost_per_tf_hr = V5E_PREEMPTIBLE_PER_HR / (pm.TPU_PEAK_FLOPS_BF16 / 1e12)
+    result = {
+        "paper_teraflops": PAPER_TF,
+        "paper_cost_per_tf_hr": PAPER_COST_PER_TF_HR,
+        "asci_red_cost_per_tf_hr": ASCI_RED_COST_PER_TF_HR,
+        "paper_improvement_x": round(ASCI_RED_COST_PER_TF_HR
+                                     / PAPER_COST_PER_TF_HR),
+        "local_measured_gflops": round(local / 1e9, 1),
+        "table1_cost_per_tf_hr": round(local_cost_per_tf_hr, 3),
+        "tpu_v5e_bf16_tf": pm.TPU_PEAK_FLOPS_BF16 / 1e12,
+        "tpu_v5e_cost_per_tf_hr": round(v5e_cost_per_tf_hr, 4),
+        "trend_vs_paper_x": round(PAPER_COST_PER_TF_HR / v5e_cost_per_tf_hr),
+    }
+    if verbose:
+        print(f"paper: {PAPER_TF} TF at ${PAPER_COST_PER_TF_HR}/TF-hr "
+              f"({result['paper_improvement_x']}x vs ASCI Red)")
+        print(f"local CPU matmul: {result['local_measured_gflops']} GFLOP/s; "
+              f"Table I pricing: ${result['table1_cost_per_tf_hr']}/TF-hr")
+        print(f"TPU v5e target: {result['tpu_v5e_bf16_tf']} TF bf16 at "
+              f"${result['tpu_v5e_cost_per_tf_hr']}/TF-hr "
+              f"(a further {result['trend_vs_paper_x']}x on the paper)")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Recompute param-count-derived fields of dry-run records in place.
+
+The sweep's probe measurements (flops/bytes/collectives/memory) are exact;
+`params`, `model_flops` and `model_vs_hlo_flops` derive from a parameter
+count that an early sweep computed with an int32 overflow.  This script
+recomputes them from the configs (eval_shape only — no compilation) so a
+long sweep doesn't have to be re-run.
+
+    PYTHONPATH=src python -m benchmarks.patch_records dryrun_single.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+import jax
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import perfmodel
+from repro.models import build
+
+
+def true_params(arch: str) -> int:
+    model = build(get_config(arch))
+    tree = model.abstract_params()
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(tree))
+
+
+def patch(path: str) -> None:
+    counts = {}
+    out_lines = []
+    for line in open(path):
+        rec = json.loads(line)
+        if rec.get("status") != "ok":
+            out_lines.append(rec)
+            continue
+        arch = rec["arch"]
+        if arch not in counts:
+            counts[arch] = true_params(arch)
+        nparams = counts[arch]
+        shape = SHAPES[rec["shape"]]
+        cfg = get_config(arch)
+        model_flops = 6 * nparams * shape.tokens if shape.kind == "train" \
+            else 2 * nparams * (shape.tokens if shape.kind == "prefill"
+                                else shape.global_batch)
+        if cfg.is_moe:
+            active = cfg.param_count(active_only=True)
+            total = cfg.param_count(active_only=False)
+            model_flops = int(model_flops * active / max(1, total))
+        rec["params"] = nparams
+        rec["model_flops"] = model_flops
+        hlo_global = rec["flops_per_device"] * rec["chips"]
+        rec["model_vs_hlo_flops"] = model_flops / max(1.0, hlo_global)
+        out_lines.append(rec)
+    with open(path, "w") as f:
+        for rec in out_lines:
+            f.write(json.dumps(rec) + "\n")
+    print(f"patched {len(out_lines)} records; params: "
+          f"{ {k: f'{v/1e9:.1f}B' for k, v in counts.items()} }")
+
+
+if __name__ == "__main__":
+    patch(sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.jsonl")

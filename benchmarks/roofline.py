@@ -1,0 +1,95 @@
+"""§Roofline report: renders the per-(arch x shape) table from the dry-run
+sweep's JSONL records (launch/dryrun.py --out).
+
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_single.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from repro.core import perfmodel as pm
+
+
+def load(path: str) -> List[Dict]:
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    # keep the latest record per (arch, shape, mesh)
+    latest = {}
+    for r in records:
+        latest[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    return list(latest.values())
+
+
+def fraction_of_roofline(rec: Dict) -> float:
+    """Model-flops step time over the dominant-term step time."""
+    r = rec.get("roofline", {})
+    if not r or not rec.get("model_flops"):
+        return 0.0
+    ideal = rec["model_flops"] / (rec["chips"] * pm.TPU_PEAK_FLOPS_BF16)
+    return ideal / max(r.get("step_s", 0.0), 1e-12)
+
+
+def render(records: List[Dict], multi_pod: bool = False) -> str:
+    rows = [r for r in records if r.get("multi_pod", False) == multi_pod]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | status | HBM ok | peak GiB | compute s | "
+           "memory s | coll s | bottleneck | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       f"— | — | — | — | — | {r.get('reason', r.get('error', ''))[:60]} | — | — |")
+            continue
+        rf = r.get("roofline", {})
+        peak = r["bytes_per_device"]["peak_estimate"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{'Y' if r.get('hbm_ok') else 'N'} | {peak:.1f} | "
+            f"{rf.get('compute_s', 0):.4g} | {rf.get('memory_s', 0):.4g} | "
+            f"{rf.get('collective_s', 0):.4g} | "
+            f"{rf.get('bottleneck', '-').replace('_s', '')} | "
+            f"{r.get('model_vs_hlo_flops', 0):.2f} | "
+            f"{fraction_of_roofline(r):.2f} |")
+    return "\n".join(out)
+
+
+def summary(records: List[Dict]) -> Dict:
+    ok = [r for r in records if r["status"] == "ok"
+          and not r.get("multi_pod")]
+    by_bneck: Dict[str, int] = {}
+    worst = None
+    for r in ok:
+        b = r.get("roofline", {}).get("bottleneck", "?")
+        by_bneck[b] = by_bneck.get(b, 0) + 1
+        frac = fraction_of_roofline(r)
+        if r.get("model_flops") and (worst is None or frac < worst[1]):
+            worst = ((r["arch"], r["shape"]), frac)
+    return {"cells_ok": len(ok),
+            "hbm_fits": sum(1 for r in ok if r.get("hbm_ok")),
+            "bottlenecks": by_bneck,
+            "worst_roofline_fraction": worst}
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0] if (argv or sys.argv[1:]) \
+        else "dryrun_single.jsonl"
+    records = load(path)
+    print("## Roofline (single-pod 16x16, 256 chips)\n")
+    print(render(records, multi_pod=False))
+    if any(r.get("multi_pod") for r in records):
+        print("\n## Multi-pod check (2x16x16, 512 chips)\n")
+        print(render(records, multi_pod=True))
+    print("\n## Summary\n")
+    print(json.dumps(summary(records), indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

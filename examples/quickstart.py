@@ -1,0 +1,76 @@
+"""Quickstart: the whole stack in two minutes on a laptop CPU.
+
+1. Spin up an in-memory "cloud": object store + metadata KV + festivus.
+2. Store imagery through the chunk store; read it back at 4 MiB blocks.
+3. Run the paper's composite + segmentation on a synthetic tile.
+4. Train a few steps of a (smoke-sized) assigned LM architecture on the
+   festivus-backed token pipeline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import composite, segmentation
+from repro.configs import get_config
+from repro.configs.festivus_imagery import SMOKE as IMG_CFG
+from repro.core import ChunkStore, Festivus, InMemoryObjectStore
+from repro.data import TokenDataset, TokenDatasetSpec, imagery, write_corpus
+from repro.models import build
+from repro.train import OptimizerConfig, make_train_step
+from repro.train import optimizer as opt_mod
+
+
+def main():
+    # -- 1. the cloud --------------------------------------------------------
+    store = InMemoryObjectStore()
+    fs = Festivus(store)
+    cs = ChunkStore(fs, "bucket")
+    print("[1] festivus mounted over the object store")
+
+    # -- 2. imagery in, imagery out -----------------------------------------
+    spec = imagery.SceneSpec(tile_px=96, temporal_depth=6, seed=42)
+    imagery.write_scene_stack(cs, "tiles/quickstart", spec, chunk_px=32)
+    imgs, valid = imagery.read_scene_stack(cs, "tiles/quickstart")
+    print(f"[2] stored+read a {imgs.shape} scene stack "
+          f"({store.stats.bytes_written / 1e6:.1f} MB written, "
+          f"cache hit rate {fs.stats.hit_rate():.0%})")
+
+    # -- 3. the paper's analytics -------------------------------------------
+    comp = composite.composite_tile(imgs, IMG_CFG)
+    labels, geo = segmentation.segment_tile(imgs, valid, IMG_CFG)
+    print(f"[3] cloud-free composite mean={comp.mean():.3f}; "
+          f"segmentation found {len(geo['features'])} fields "
+          f"(ground truth {spec.num_fields})")
+
+    # -- 4. train an assigned arch on the same data plane --------------------
+    cfg = get_config("llama3-8b", "smoke")
+    model = build(cfg)
+    tds = TokenDatasetSpec(num_shards=4, shard_tokens=16384,
+                           vocab_size=cfg.vocab_size)
+    write_corpus(cs, tds)
+    ds = TokenDataset(cs, tds)
+    opt_cfg = OptimizerConfig(learning_rate=3e-3, warmup_steps=5,
+                              decay_steps=50)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt_mod.init(params, opt_cfg)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    first = last = None
+    for i, batch in enumerate(ds.batches(8, 64)):
+        if i >= 30:
+            break
+        params, state, m = step(params, state,
+                                {"tokens": jnp.asarray(batch["tokens"]),
+                                 "labels": jnp.asarray(batch["labels"])})
+        first = first if first is not None else float(m["nll"])
+        last = float(m["nll"])
+    print(f"[4] trained {cfg.arch_id} (smoke) 30 steps: "
+          f"nll {first:.2f} -> {last:.2f}")
+    assert last < first
+    print("QUICKSTART_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Serving example: batched greedy generation with KV caches.
+
+Runs the same decode step the decode_32k dry-run cells lower — at smoke
+scale, for two architecture families (dense GQA and attention-free SSM) to
+show the cache-vs-state contrast.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build
+from repro.train.serve_step import greedy_generate
+
+
+def main():
+    for arch in ("llama3-8b", "mamba2-2.7b"):
+        cfg = get_config(arch, "smoke")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                    cfg.vocab_size, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        out = greedy_generate(model, params, prompt, num_steps=24,
+                              max_len=64)
+        dt = time.perf_counter() - t0
+        state = model.init_decode(params, 4, 64)
+        state_bytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(state)
+            if hasattr(x, "size"))
+        print(f"[{arch:12s}] generated {out.shape} in {dt:.1f}s "
+              f"({4 * 24 / dt:.1f} tok/s); decode state "
+              f"{state_bytes / 1e6:.2f} MB "
+              f"({'KV cache grows with context' if cfg.num_heads else 'O(1) SSM state'})")
+    print("SERVE_LM_OK")
+
+
+if __name__ == "__main__":
+    main()

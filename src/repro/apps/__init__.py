@@ -1,0 +1,18 @@
+"""The paper's applications: calibration (§V.A), composite (§V.C),
+field segmentation (§V.B) — all tile-parallel over the task queue."""
+
+from repro.apps.calibration import (
+    SceneMeta,
+    make_raw_scene,
+    process_scene,
+    run_campaign,
+    toa_reflectance,
+)
+from repro.apps.composite import composite_tile, run_composite_campaign
+from repro.apps.segmentation import segment_tile, segment_to_store
+
+__all__ = [
+    "SceneMeta", "composite_tile", "make_raw_scene", "process_scene",
+    "run_campaign", "run_composite_campaign", "segment_tile",
+    "segment_to_store", "toa_reflectance",
+]

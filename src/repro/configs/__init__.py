@@ -1,0 +1,14 @@
+"""Architecture configs: the 10 assigned archs + the paper's imagery config.
+
+Use `repro.configs.get_config("<arch-id>")` (or `--arch` on the launchers).
+"""
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_archs,
+)
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeSpec", "get_config", "list_archs"]

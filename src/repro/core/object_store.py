@@ -1,0 +1,356 @@
+"""Cloud object storage abstraction (the paper's GCS stand-in).
+
+The paper (§III.A) characterizes object storage as: RESTful GET/PUT on
+immutable whole objects addressed by globally unique name, range reads,
+no rename, higher latency than local disk, no POSIX semantics.  This module
+implements that contract with two real backends (in-memory, local-dir) plus
+wrappers for failure injection and virtual-time performance accounting used
+by the Table III/IV benchmark reproductions.
+
+Everything above this layer (festivus, chunkstore, checkpointing, the data
+pipeline) speaks only this API, so swapping in a real GCS/S3 client is a
+one-class change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import random
+import tempfile
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+from repro.core import perfmodel
+
+
+class ObjectNotFound(KeyError):
+    pass
+
+
+class TransientStoreError(IOError):
+    """Retryable failure (503-equivalent)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectMeta:
+    key: str
+    size: int
+    etag: str
+    generation: int
+
+
+def _etag(data: bytes) -> str:
+    return hashlib.md5(data).hexdigest()
+
+
+class ObjectStore:
+    """Abstract object store: immutable objects, range GETs, atomic PUT."""
+
+    def put(self, key: str, data: bytes) -> ObjectMeta:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        meta = self.head(key)
+        return self.get_range(key, 0, meta.size)
+
+    def get_range(self, key: str, offset: int, length: int) -> bytes:
+        raise NotImplementedError
+
+    def head(self, key: str) -> ObjectMeta:
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> List[str]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        try:
+            self.head(key)
+            return True
+        except ObjectNotFound:
+            return False
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Request accounting — the raw material for bandwidth benchmarks."""
+
+    gets: int = 0
+    puts: int = 0
+    heads: int = 0
+    lists: int = 0
+    deletes: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+
+    def snapshot(self) -> "StoreStats":
+        return dataclasses.replace(self)
+
+    def delta(self, earlier: "StoreStats") -> "StoreStats":
+        return StoreStats(
+            gets=self.gets - earlier.gets,
+            puts=self.puts - earlier.puts,
+            heads=self.heads - earlier.heads,
+            lists=self.lists - earlier.lists,
+            deletes=self.deletes - earlier.deletes,
+            bytes_read=self.bytes_read - earlier.bytes_read,
+            bytes_written=self.bytes_written - earlier.bytes_written,
+        )
+
+
+class InMemoryObjectStore(ObjectStore):
+    """Dict-backed store; the default for tests and the virtual-time bench."""
+
+    def __init__(self):
+        self._objects: Dict[str, bytes] = {}
+        self._meta: Dict[str, ObjectMeta] = {}
+        self._lock = threading.RLock()
+        self._generation = 0
+        self.stats = StoreStats()
+
+    def put(self, key: str, data: bytes) -> ObjectMeta:
+        if not isinstance(data, (bytes, bytearray, memoryview)):
+            raise TypeError(f"object data must be bytes, got {type(data)}")
+        data = bytes(data)
+        with self._lock:
+            self._generation += 1
+            meta = ObjectMeta(key=key, size=len(data), etag=_etag(data),
+                              generation=self._generation)
+            self._objects[key] = data
+            self._meta[key] = meta
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
+            return meta
+
+    def get_range(self, key: str, offset: int, length: int) -> bytes:
+        with self._lock:
+            if key not in self._objects:
+                raise ObjectNotFound(key)
+            data = self._objects[key]
+            self.stats.gets += 1
+            out = data[offset:offset + length]
+            self.stats.bytes_read += len(out)
+            return out
+
+    def head(self, key: str) -> ObjectMeta:
+        with self._lock:
+            self.stats.heads += 1
+            if key not in self._meta:
+                raise ObjectNotFound(key)
+            return self._meta[key]
+
+    def list(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            self.stats.lists += 1
+            return sorted(k for k in self._objects if k.startswith(prefix))
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self.stats.deletes += 1
+            self._objects.pop(key, None)
+            self._meta.pop(key, None)
+
+
+class LocalDirObjectStore(ObjectStore):
+    """Filesystem-backed store with atomic PUT (temp file + rename).
+
+    Object keys map to files under `root`; '/' in keys becomes directory
+    structure.  PUT is atomic (crash mid-write never exposes a torn object),
+    which the checkpoint layer's manifest-last commit protocol relies on.
+    """
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self._lock = threading.RLock()
+        self._generation = 0
+        self.stats = StoreStats()
+
+    def _path(self, key: str) -> str:
+        if ".." in key.split("/"):
+            raise ValueError(f"invalid key: {key}")
+        return os.path.join(self.root, key)
+
+    def put(self, key: str, data: bytes) -> ObjectMeta:
+        data = bytes(data)
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        with self._lock:
+            self._generation += 1
+            gen = self._generation
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
+        return ObjectMeta(key=key, size=len(data), etag=_etag(data),
+                          generation=gen)
+
+    def get_range(self, key: str, offset: int, length: int) -> bytes:
+        path = self._path(key)
+        try:
+            with open(path, "rb") as f:
+                f.seek(offset)
+                out = f.read(length)
+        except FileNotFoundError:
+            raise ObjectNotFound(key) from None
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_read += len(out)
+        return out
+
+    def head(self, key: str) -> ObjectMeta:
+        path = self._path(key)
+        with self._lock:
+            self.stats.heads += 1
+        try:
+            size = os.path.getsize(path)
+        except FileNotFoundError:
+            raise ObjectNotFound(key) from None
+        return ObjectMeta(key=key, size=size, etag="", generation=0)
+
+    def list(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            self.stats.lists += 1
+        out = []
+        for dirpath, _, files in os.walk(self.root):
+            for name in files:
+                rel = os.path.relpath(os.path.join(dirpath, name), self.root)
+                key = rel.replace(os.sep, "/")
+                if key.startswith(prefix):
+                    out.append(key)
+        return sorted(out)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self.stats.deletes += 1
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+
+class FlakyObjectStore(ObjectStore):
+    """Failure-injection wrapper: pre-emptible cloud realism for tests.
+
+    Raises TransientStoreError on a deterministic pseudo-random fraction of
+    operations; festivus and the task queue must retry through it.
+    """
+
+    def __init__(self, inner: ObjectStore, failure_rate: float = 0.1,
+                 seed: int = 0):
+        self.inner = inner
+        self.failure_rate = failure_rate
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.injected_failures = 0
+
+    def _maybe_fail(self, op: str):
+        with self._lock:
+            if self._rng.random() < self.failure_rate:
+                self.injected_failures += 1
+                raise TransientStoreError(f"injected failure in {op}")
+
+    def put(self, key, data):
+        self._maybe_fail("put")
+        return self.inner.put(key, data)
+
+    def get_range(self, key, offset, length):
+        self._maybe_fail("get_range")
+        return self.inner.get_range(key, offset, length)
+
+    def head(self, key):
+        self._maybe_fail("head")
+        return self.inner.head(key)
+
+    def list(self, prefix=""):
+        return self.inner.list(prefix)
+
+    def delete(self, key):
+        self._maybe_fail("delete")
+        return self.inner.delete(key)
+
+
+def retrying(fn, *args, attempts: int = 5, base_delay_s: float = 0.001,
+             sleep=time.sleep, **kwargs):
+    """Exponential-backoff retry for TransientStoreError.
+
+    The paper runs on pre-emptible nodes where transient 5xx responses are
+    routine; every store access in the framework funnels through this.
+    """
+    for i in range(attempts):
+        try:
+            return fn(*args, **kwargs)
+        except TransientStoreError:
+            if i == attempts - 1:
+                raise
+            sleep(base_delay_s * (2**i))
+    raise AssertionError("unreachable")
+
+
+class VirtualTimeStore(ObjectStore):
+    """Virtual-clock wrapper: deterministic bandwidth accounting.
+
+    Each range-GET is assigned a *service time* from the calibrated
+    ObjectStoreModel, and per-(node, connection) virtual clocks advance
+    accordingly; node NIC and zone-fabric caps are applied analytically by
+    the benchmark layer (perfmodel.cluster_bandwidth).  Real data still
+    flows (correctness is never simulated), only time is virtual.
+    """
+
+    def __init__(self, inner: ObjectStore,
+                 model: perfmodel.ObjectStoreModel = perfmodel.FESTIVUS_STORE_MODEL):
+        self.inner = inner
+        self.model = model
+        self._lock = threading.Lock()
+        self._conn_clock: Dict[int, float] = {}
+        self.total_service_s = 0.0
+        self.completed_requests = 0
+        self.bytes_served = 0
+
+    def put(self, key, data):
+        return self.inner.put(key, data)
+
+    def head(self, key):
+        return self.inner.head(key)
+
+    def list(self, prefix=""):
+        return self.inner.list(prefix)
+
+    def delete(self, key):
+        return self.inner.delete(key)
+
+    def get_range(self, key: str, offset: int, length: int,
+                  conn_id: int = 0) -> bytes:
+        data = self.inner.get_range(key, offset, length)
+        dt = self.model.service_time_s(len(data))
+        with self._lock:
+            self._conn_clock[conn_id] = self._conn_clock.get(conn_id, 0.0) + dt
+            self.total_service_s += dt
+            self.completed_requests += 1
+            self.bytes_served += len(data)
+        return data
+
+    def elapsed_virtual_s(self, concurrency: Optional[int] = None) -> float:
+        """Makespan under `concurrency` parallel connections (water-filled)."""
+        with self._lock:
+            if concurrency:
+                return self.total_service_s / concurrency
+            if not self._conn_clock:
+                return 0.0
+            return max(self._conn_clock.values())
+
+    def bandwidth_bytes_per_s(self, concurrency: Optional[int] = None) -> float:
+        t = self.elapsed_virtual_s(concurrency)
+        return self.bytes_served / t if t > 0 else 0.0

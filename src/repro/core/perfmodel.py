@@ -1,0 +1,249 @@
+"""Paper-calibrated performance model for cloud object storage.
+
+Every constant here is traceable to a measurement in Warren et al.,
+"Data-Intensive Supercomputing in the Cloud" (cs.DC 2017):
+
+* Fig. 3  — single-stream TCP: ~40 us small-message latency, 8.6 Gb/s peak
+            single thread, 16 Gb/s aggregate on a 16-vCPU node.
+* Table I — fundamental $/s costs (storage, flops, network, labor).
+* Table III — aggregate festivus bandwidth vs node count (1 -> 512 nodes);
+            per-node ~1 GB/s up to 16 nodes, fabric contention beyond.
+* Table IV — single-node random-read bandwidth vs block size, festivus vs
+            gcsfuse.  Fitting t(B) = t0 + B/peak to the festivus rows gives
+            t0 ~ 2.7 ms per request (object-store GET first-byte latency with
+            cached metadata + persistent connections) and peak ~ 1.8 GB/s.
+            The gcsfuse rows fit t0 ~ 80 ms: every random read pays a
+            metadata HEAD + connection churn + readahead thrash — this is
+            precisely the overhead festivus's shared metadata KV store and
+            async block engine remove.
+* §IV.A  — LINPACK: 1.21 TF on 2x n1-highcpu-64 at $0.51/node/hr.
+
+The model is used ONLY by the benchmark/virtual-time paths; functional code
+(data pipeline, checkpointing) runs the same festivus implementation at
+native speed against real in-memory / on-disk backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+KiB = 1024
+MiB = 1024 * 1024
+GiB = 1024 * 1024 * 1024
+GB = 1.0e9  # decimal GB, as used in the paper's tables
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Single-node network path model (paper Fig. 3 + Table IV fits)."""
+
+    #: small-message wire latency, seconds (Fig. 3 dashed curve, ~40 us)
+    wire_latency_s: float = 40e-6
+    #: peak single-stream bandwidth, bytes/s (Fig. 3: 8.6 Gb/s)
+    single_stream_bps: float = 8.6e9 / 8
+    #: per-vCPU NIC allocation, bits/s (GCE egress model: 2 Gb/s per vCPU)
+    nic_bps_per_vcpu: float = 2e9
+    #: NIC cap, bits/s (paper: "total bandwidth reaches 16 Gigabits/second")
+    nic_bps_cap: float = 16e9
+
+    def node_nic_bytes_per_s(self, vcpus: int) -> float:
+        return min(self.nic_bps_per_vcpu * vcpus, self.nic_bps_cap) / 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectStoreModel:
+    """Random-range-GET service-time model, t(B) = t0 + B/peak.
+
+    Two parameter sets: the festivus path (persistent connections + shared
+    metadata KV -> millisecond first-byte) and a gcsfuse-like baseline
+    (per-read open/HEAD/validate -> ~80 ms fixed overhead).  Both fitted by
+    least squares to Table IV (see tests/test_perfmodel.py for residuals).
+    """
+
+    #: fixed per-request overhead, seconds
+    request_overhead_s: float = 2.7e-3
+    #: streaming bandwidth once flowing, bytes/s
+    stream_bytes_per_s: float = 1.81e9
+    #: requests a single node can keep in flight before queueing
+    max_inflight_per_node: int = 64
+
+    def service_time_s(self, nbytes: int) -> float:
+        return self.request_overhead_s + nbytes / self.stream_bytes_per_s
+
+    def single_request_bandwidth(self, nbytes: int) -> float:
+        """Bandwidth of back-to-back random reads of `nbytes` (bytes/s)."""
+        return nbytes / self.service_time_s(nbytes)
+
+
+#: festivus path (Table IV left column)
+FESTIVUS_STORE_MODEL = ObjectStoreModel(
+    request_overhead_s=2.7e-3, stream_bytes_per_s=1.81e9
+)
+
+#: gcsfuse-like baseline (Table IV right column): pays metadata + connection
+#: churn on every random read.
+GCSFUSE_STORE_MODEL = ObjectStoreModel(
+    request_overhead_s=80.0e-3, stream_bytes_per_s=1.98e9, max_inflight_per_node=1
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricModel:
+    """Zone-fabric contention model (Table III fit).
+
+    Aggregate bandwidth is linear (per-node NIC-limited) up to
+    `contention_onset_nodes`; beyond that a fitted power law
+    ``agg(N) = a * N**b`` matches the measured 64/128/512-node rows to
+    within ~3% (a=0.930 GB/s, b=0.886; see DESIGN.md §5).
+    """
+
+    per_node_bytes_per_s: float = 1.0875 * GB  # 17.4 GB/s over 16 nodes
+    contention_onset_nodes: int = 16
+    fabric_coeff: float = 0.930 * GB
+    fabric_exponent: float = 0.886
+
+    def aggregate_bytes_per_s(self, nodes: int) -> float:
+        linear = nodes * self.per_node_bytes_per_s
+        if nodes <= self.contention_onset_nodes:
+            return linear
+        return min(linear, self.fabric_coeff * nodes**self.fabric_exponent)
+
+
+FABRIC_MODEL = FabricModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Table I: fundamental computing costs, $/s per giga-unit (2016)."""
+
+    cloud_storage_gb_s: float = 1.0e-8
+    persistent_disk_gb_s: float = 1.5e-8
+    local_ssd_gb_s: float = 6.5e-8
+    linpack_gflops_s: float = 1.6e-7
+    node_memory_gb_s: float = 2.5e-7
+    local_network_gbps_s: float = 3.8e-5
+    wan_gbps_s: float = 1.0e-2
+    human_labor_s: float = 2.8e-2
+    internet_egress_gbps_s: float = 1.0e-1
+
+    def storage_cost(self, nbytes: int, seconds: float) -> float:
+        return (nbytes / GB) * seconds * self.cloud_storage_gb_s
+
+    def flops_cost(self, flops: float) -> float:
+        return (flops / 1e9) * self.linpack_gflops_s
+
+    def teraflop_hour_cost(self) -> float:
+        """$/TF-hour implied by Table I (cf. §IV.A's measured $0.84)."""
+        return self.linpack_gflops_s * 1e3 * 3600.0
+
+
+COST_MODEL = CostModel()
+
+# ---------------------------------------------------------------------------
+# TPU v5e target-hardware constants (roofline denominators; harness-provided)
+# ---------------------------------------------------------------------------
+TPU_PEAK_FLOPS_BF16 = 197e12  # per chip
+TPU_HBM_BYTES_PER_S = 819e9  # per chip
+TPU_ICI_BYTES_PER_S_PER_LINK = 50e9  # per link
+TPU_HBM_BYTES = 16 * GiB  # v5e HBM capacity
+
+
+def paper_table_iv_rows():
+    """(blocksize_bytes, festivus_MB_s, gcsfuse_MB_s) verbatim from Table IV."""
+    return [
+        (32768, 12.5, 0.4),
+        (65536, 22.6, 0.8),
+        (131072, 47.3, 1.6),
+        (262144, 93.0, 2.8),
+        (524288, 156.8, 7.3),
+        (1048576, 271.0, 13.7),
+        (2097152, 472.0, 24.8),
+        (4194304, 852.3, 46.7),
+        (8388608, 1046.4, 109.5),
+        (16777216, 1248.0, 200.3),
+        (33554432, 1593.3, 339.7),
+    ]
+
+
+def paper_table_iii_rows():
+    """(vcpus, nodes, aggregate_GB_s) verbatim from Table III."""
+    return [
+        (1, 1, 0.43),
+        (4, 1, 0.85),
+        (16, 1, 1.0),
+        (32, 1, 1.44),
+        (16, 4, 4.1),
+        (16, 16, 17.4),
+        (16, 64, 36.3),
+        (16, 128, 70.5),
+        (16, 512, 231.3),
+    ]
+
+
+#: single-node festivus efficiency law, fitted to Table III's 1/4/16/32-vCPU
+#: rows: b(v) = 0.43 GB/s x v^0.349 — the FUSE+TLS+checksum CPU cost that
+#: keeps a node below its nominal NIC rate (the paper's 32-vCPU row reaches
+#: "over 70% of its network capacity"; smaller nodes proportionally less).
+FESTIVUS_NODE_LAW_COEFF = 0.43 * GB
+FESTIVUS_NODE_LAW_EXP = 0.349
+
+
+def single_node_bandwidth(vcpus: int, model: ObjectStoreModel, *, block_bytes: int,
+                          inflight: int) -> float:
+    """Modeled single-node aggregate read bandwidth (bytes/s).
+
+    min of: `inflight` concurrent range-GET streams, the NIC, and the
+    fitted per-node CPU-efficiency law (see FESTIVUS_NODE_LAW_*).
+    """
+    net = NetworkModel()
+    per_stream = model.single_request_bandwidth(block_bytes)
+    cpu_law = FESTIVUS_NODE_LAW_COEFF * vcpus**FESTIVUS_NODE_LAW_EXP
+    return min(per_stream * max(1, inflight),
+               net.node_nic_bytes_per_s(vcpus), cpu_law)
+
+
+def cluster_bandwidth(nodes: int, vcpus: int, model: ObjectStoreModel, *,
+                      block_bytes: int, inflight: int) -> float:
+    """Modeled aggregate bandwidth for `nodes` nodes (bytes/s), Table III."""
+    per_node = single_node_bandwidth(vcpus, model, block_bytes=block_bytes,
+                                     inflight=inflight)
+    return min(nodes * per_node, FABRIC_MODEL.aggregate_bytes_per_s(nodes))
+
+
+def fit_service_time_params(rows):
+    """Least-squares fit of t(B) = t0 + B/peak to (blocksize, MB/s) rows.
+
+    Returns (t0_seconds, peak_bytes_per_s).  Used by tests to confirm the
+    constants above against Table IV.
+    """
+    xs = [float(b) for b, _ in rows]
+    ts = [b / (mb * 1e6) for b, mb in rows]
+    n = len(xs)
+    mx = sum(xs) / n
+    mt = sum(ts) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    sxt = sum((x - mx) * (t - mt) for x, t in zip(xs, ts))
+    slope = sxt / sxx
+    t0 = mt - slope * mx
+    return t0, 1.0 / slope
+
+
+def mfu(flops: float, seconds: float, chips: int,
+        peak: float = TPU_PEAK_FLOPS_BF16) -> float:
+    return flops / (seconds * chips * peak)
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                   chips: int, *, ici_links: int = 4):
+    """The three §Roofline terms, in seconds (lower wins; max dominates)."""
+    compute_s = hlo_flops / (chips * TPU_PEAK_FLOPS_BF16)
+    memory_s = hlo_bytes / (chips * TPU_HBM_BYTES_PER_S)
+    collective_s = collective_bytes / (
+        chips * ici_links * TPU_ICI_BYTES_PER_S_PER_LINK
+    )
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k])
+    terms["step_s"] = max(compute_s, memory_s, collective_s)
+    return terms

@@ -1,0 +1,263 @@
+"""Asynchronous task queue (the paper's Celery/Redis layer, §V.A).
+
+"As worker nodes are provisioned and start, they connect to the Celery
+broker to receive processing tasks in the queue."  Worker-*pull* scheduling
+is what gives the paper's pipeline its elasticity (pre-emptible nodes join
+and leave freely) and fault tolerance (a dead worker's tasks simply get
+re-delivered).  This module implements that contract on the shared
+MetadataStore, with the production features a thousand-node deployment
+needs:
+
+* **Leases with deadlines** — a claimed task must be completed or
+  heartbeated before its lease expires, else it returns to the queue
+  (crash/pre-emption recovery with no coordinator).
+* **Bounded retries + dead-letter** — poison tasks can't wedge the fleet.
+* **Straggler mitigation** — tasks running far beyond the observed median
+  are speculatively re-issued to another worker; first completion wins,
+  duplicates are ignored (idempotent completion).
+* **Priorities and batch submit** — pipeline stages enqueue downstream work.
+
+All timing is injected (``clock``), so fault-tolerance tests run
+deterministically in virtual time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import statistics
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.metadata import MetadataStore
+
+PENDING = "pending"
+RUNNING = "running"
+DONE = "done"
+DEAD = "dead"
+
+
+@dataclasses.dataclass
+class Task:
+    task_id: str
+    payload: Any
+    priority: int = 0
+    max_retries: int = 3
+    state: str = PENDING
+    attempt: int = 0
+    worker: Optional[str] = None
+    lease_deadline: float = 0.0
+    started_at: float = 0.0
+    completed_at: float = 0.0
+    result: Any = None
+    error: Optional[str] = None
+    #: how many workers hold (possibly speculative) claims right now
+    active_claims: int = 0
+
+
+class TaskQueue:
+    """Worker-pull task queue with leases, retries, and speculation."""
+
+    def __init__(self, meta: Optional[MetadataStore] = None,
+                 default_lease_s: float = 60.0,
+                 speculation_factor: float = 3.0,
+                 min_completions_for_speculation: int = 5,
+                 clock: Callable[[], float] = time.monotonic):
+        self.meta = meta if meta is not None else MetadataStore()
+        self.default_lease_s = default_lease_s
+        self.speculation_factor = speculation_factor
+        self.min_completions = min_completions_for_speculation
+        self.clock = clock
+        self._tasks: Dict[str, Task] = {}
+        self._ready: List = []  # heap of (-priority, seq, task_id)
+        self._seq = 0
+        self._lock = threading.RLock()
+        self._durations: List[float] = []
+        self.stats = {"submitted": 0, "completed": 0, "retried": 0,
+                      "expired": 0, "speculated": 0, "dead": 0,
+                      "duplicate_completions": 0}
+
+    # -- producer side --------------------------------------------------------
+    def submit(self, task_id: str, payload: Any, priority: int = 0,
+               max_retries: int = 3) -> Task:
+        with self._lock:
+            if task_id in self._tasks:
+                raise ValueError(f"duplicate task id {task_id}")
+            task = Task(task_id=task_id, payload=payload, priority=priority,
+                        max_retries=max_retries)
+            self._tasks[task_id] = task
+            self._push_ready(task)
+            self.stats["submitted"] += 1
+            return task
+
+    def submit_batch(self, items: Dict[str, Any], priority: int = 0):
+        for task_id, payload in items.items():
+            self.submit(task_id, payload, priority=priority)
+
+    def _push_ready(self, task: Task):
+        self._seq += 1
+        heapq.heappush(self._ready, (-task.priority, self._seq, task.task_id))
+
+    # -- worker side ----------------------------------------------------------
+    def claim(self, worker: str, lease_s: Optional[float] = None) -> Optional[Task]:
+        """Claim the next task: pending first, then a straggler to speculate."""
+        lease = lease_s if lease_s is not None else self.default_lease_s
+        now = self.clock()
+        with self._lock:
+            self._reap_expired(now)
+            while self._ready:
+                _, _, tid = heapq.heappop(self._ready)
+                task = self._tasks[tid]
+                if task.state != PENDING:
+                    continue  # stale heap entry
+                task.state = RUNNING
+                task.worker = worker
+                task.attempt += 1
+                task.active_claims += 1
+                task.started_at = now
+                task.lease_deadline = now + lease
+                return task
+            # nothing pending: speculate on a straggler
+            straggler = self._pick_straggler(now, exclude_worker=worker)
+            if straggler is not None:
+                straggler.active_claims += 1
+                straggler.lease_deadline = max(straggler.lease_deadline,
+                                               now + lease)
+                self.stats["speculated"] += 1
+                return straggler
+            return None
+
+    def heartbeat(self, task_id: str, worker: str,
+                  lease_s: Optional[float] = None) -> bool:
+        lease = lease_s if lease_s is not None else self.default_lease_s
+        with self._lock:
+            task = self._tasks.get(task_id)
+            if task is None or task.state != RUNNING:
+                return False
+            task.lease_deadline = self.clock() + lease
+            return True
+
+    def complete(self, task_id: str, worker: str, result: Any = None) -> bool:
+        """Idempotent completion; the first finisher wins."""
+        with self._lock:
+            task = self._tasks.get(task_id)
+            if task is None:
+                return False
+            if task.state == DONE:
+                self.stats["duplicate_completions"] += 1
+                return False
+            task.state = DONE
+            task.worker = worker
+            task.result = result
+            task.completed_at = self.clock()
+            task.active_claims = 0
+            if task.started_at:
+                self._durations.append(task.completed_at - task.started_at)
+            self.stats["completed"] += 1
+            return True
+
+    def fail(self, task_id: str, worker: str, error: str) -> None:
+        with self._lock:
+            task = self._tasks.get(task_id)
+            if task is None or task.state in (DONE, DEAD):
+                return
+            task.active_claims = max(0, task.active_claims - 1)
+            if task.active_claims > 0:
+                return  # a speculative twin is still running
+            task.error = error
+            if task.attempt > task.max_retries:
+                task.state = DEAD
+                self.stats["dead"] += 1
+            else:
+                task.state = PENDING
+                self.stats["retried"] += 1
+                self._push_ready(task)
+
+    # -- maintenance -----------------------------------------------------------
+    def _reap_expired(self, now: float) -> None:
+        for task in self._tasks.values():
+            if task.state == RUNNING and now >= task.lease_deadline:
+                task.active_claims = 0
+                self.stats["expired"] += 1
+                if task.attempt > task.max_retries:
+                    task.state = DEAD
+                    task.error = "lease expired (max retries)"
+                    self.stats["dead"] += 1
+                else:
+                    task.state = PENDING
+                    self._push_ready(task)
+
+    def _pick_straggler(self, now: float, exclude_worker: str) -> Optional[Task]:
+        if len(self._durations) < self.min_completions:
+            return None
+        median = statistics.median(self._durations)
+        threshold = self.speculation_factor * max(median, 1e-9)
+        candidates = [t for t in self._tasks.values()
+                      if t.state == RUNNING and t.active_claims == 1
+                      and t.worker != exclude_worker
+                      and (now - t.started_at) > threshold]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda t: now - t.started_at)
+
+    # -- introspection ----------------------------------------------------------
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            out = {PENDING: 0, RUNNING: 0, DONE: 0, DEAD: 0}
+            for t in self._tasks.values():
+                out[t.state] += 1
+            return out
+
+    def pending(self) -> int:
+        return self.counts()[PENDING]
+
+    def done(self) -> bool:
+        c = self.counts()
+        return c[PENDING] == 0 and c[RUNNING] == 0
+
+    def results(self) -> Dict[str, Any]:
+        with self._lock:
+            return {tid: t.result for tid, t in self._tasks.items()
+                    if t.state == DONE}
+
+    def dead_tasks(self) -> List[Task]:
+        with self._lock:
+            return [t for t in self._tasks.values() if t.state == DEAD]
+
+
+def run_workers(queue: TaskQueue, handler: Callable[[Any], Any],
+                num_workers: int = 4, poll_s: float = 0.001,
+                max_idle_polls: int = 50) -> None:
+    """Thread-pool worker fleet for tests/examples/benchmarks.
+
+    Each worker loops: claim -> run handler -> complete/fail.  Exceptions in
+    the handler are converted to `fail` (triggering retry), reproducing the
+    paper's pre-emptible-worker behaviour.
+    """
+
+    def worker_loop(worker_id: int):
+        name = f"w{worker_id}"
+        idle = 0
+        while idle < max_idle_polls:
+            task = queue.claim(name)
+            if task is None:
+                if queue.done():
+                    return
+                idle += 1
+                time.sleep(poll_s)
+                continue
+            idle = 0
+            try:
+                result = handler(task.payload)
+            except Exception as e:  # noqa: BLE001 — worker must not die
+                queue.fail(task.task_id, name, f"{type(e).__name__}: {e}")
+            else:
+                queue.complete(task.task_id, name, result)
+
+    threads = [threading.Thread(target=worker_loop, args=(i,), daemon=True)
+               for i in range(num_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()

@@ -1,0 +1,7 @@
+"""Data plane: token corpus, synthetic imagery, async prefetch pipeline."""
+
+from repro.data.pipeline import PrefetchLoader
+from repro.data.tokens import TokenDataset, TokenDatasetSpec, write_corpus
+
+__all__ = ["PrefetchLoader", "TokenDataset", "TokenDatasetSpec",
+           "write_corpus"]

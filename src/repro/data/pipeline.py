@@ -1,0 +1,57 @@
+"""Async input pipeline: background prefetch between store and device.
+
+The festivus lesson applied to the training feed: keep enough requests in
+flight that the accelerator never waits on storage.  A bounded queue of
+prefetched batches is filled by a reader thread (which itself fans out
+range-GETs through festivus's block engine); `__next__` pops a ready batch
+and (optionally) device_puts it with the step's input shardings so the
+host->device copy of batch N+1 overlaps step N.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+
+class PrefetchLoader:
+    """Wraps a batch iterator with a daemon prefetch thread."""
+
+    def __init__(self, batches: Iterator, depth: int = 2,
+                 shardings: Any = None):
+        self._src = batches
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._shardings = shardings
+        self._done = object()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _prepare(self, batch):
+        if self._shardings is not None:
+            return jax.tree.map(
+                lambda x, s: jax.device_put(x, s), batch, self._shardings)
+        return batch
+
+    def _fill(self):
+        try:
+            for batch in self._src:
+                self._q.put(self._prepare(batch))
+        except BaseException as e:  # noqa: BLE001 — surfaced on next()
+            self._err = e
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Four kernels, each with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py:
+
+    flash_attention  tiled GQA attention (LM train/prefill hot spot)
+    composite        weighted temporal composite (paper §V.C)
+    grad_mag         cloud-masked temporal gradient accumulation (paper §V.B)
+    ssd_scan         Mamba-2 SSD chunked scan (mamba2/jamba archs)
+
+Validated in interpret=True mode on CPU (tests/test_kernels.py sweeps
+shapes and dtypes against the oracles).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

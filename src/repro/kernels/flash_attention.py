@@ -1,0 +1,138 @@
+"""Tiled GQA flash attention (Pallas TPU).
+
+The LM-stack hot spot.  TPU-native design notes (vs the CUDA original,
+FlashAttention arXiv:2205.14135):
+
+* Grid ``(B*Hq, Sq/block_q, Sk/block_k)`` — the TPU executes the trailing
+  grid axis sequentially per core, so the online-softmax running state
+  (m, l, acc) lives in VMEM scratch and is carried across k-blocks; no
+  atomics, no shared-memory tiling.
+* Blocks are MXU-aligned: block_q x D and block_k x D tiles feed the
+  128x128 systolic array directly; m/l scratch is (block_q, 128) to keep
+  stores lane-aligned (the official TPU flash kernel's convention).
+* GQA is handled by the k/v index maps (Hq/Hkv query heads share one kv
+  head), so kv tiles are fetched once per group from HBM.
+* Causal skipping is a grid-step predicate (pl.when): fully-masked blocks
+  issue no MXU work.
+
+Queries are right-aligned against keys (q position i attends to
+k positions <= i + Sk - Sq), which covers both training (Sq == Sk) and
+chunked prefill (Sq < Sk).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch, acc_scratch,
+                 *, scale: float, causal: bool, block_q: int, block_k: int,
+                 seq_q: int, seq_k: int):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # k block
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    offset = seq_k - seq_q  # right-aligned causal offset
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0) + offset
+            k_pos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scratch[:, :1]                        # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)        # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                   # [bq, 1]
+        l_new = corr * l_scratch[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scratch[...] = corr * acc_scratch[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+        l_scratch[...] = jnp.broadcast_to(l_new, l_scratch.shape)
+
+    if causal:
+        # skip blocks where every (q, k) pair is masked:
+        # max q_pos = i*bq + bq - 1 + offset  <  min k_pos = j*bk
+        fully_masked = (i * block_q + block_q - 1 + offset) < (j * block_k)
+        pl.when(jnp.logical_not(fully_masked))(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_scratch[:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, :] = (acc_scratch[...] / l_safe).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, scale: float | None = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} % Hkv={Hkv} != 0")
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(f"seq ({Sq},{Sk}) not divisible by blocks "
+                         f"({block_q},{block_k})")
+    scale = (D ** -0.5) if scale is None else scale
+
+    qr = q.reshape(B * Hq, Sq, D)
+    kr = k.reshape(B * Hkv, Sk, D)
+    vr = v.reshape(B * Hkv, Sk, D)
+
+    def kv_index(bh, i, j):
+        b, h = bh // Hq, bh % Hq
+        return (b * Hkv + h // group, j, 0)
+
+    grid = (B * Hq, Sq // block_q, Sk // block_k)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k,
+                          seq_q=Sq, seq_k=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            # m, l broadcast across 128 lanes (TPU store alignment);
+            # acc is the f32 output accumulator.
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, D)

@@ -1,0 +1,109 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Backend dispatch: on TPU the Pallas path runs natively; everywhere else
+``interpret=True`` executes the kernel body faithfully (used by the test
+suite), and models default to the pure-jnp reference implementations from
+:mod:`repro.kernels.ref` (set ``impl='pallas'`` to force kernels — e.g. the
+interpret-mode correctness sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.composite import composite_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.grad_mag import grad_mag_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_interpret(interpret):
+    return (not _on_tpu()) if interpret is None else interpret
+
+
+def _divisor_block(n: int, preferred: int) -> int:
+    """Largest block <= preferred that divides n (TPU-friendly powers of 2 first)."""
+    for b in (preferred, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if b <= preferred and n % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q",
+                                              "block_k", "interpret",
+                                              "chunk_unroll"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None,
+                    chunk_unroll: bool = False):
+    """GQA attention: q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D] -> [B,Hq,Sq,D]."""
+    if impl == "auto":
+        # off-TPU, long sequences take the exact query-chunked path so the
+        # lowered graph never materializes S^2 (the flash kernel's role)
+        impl = "pallas" if _on_tpu() else (
+            "chunked" if q.shape[2] >= 1024 else "ref")
+    if impl == "ref":
+        return ref.attention(q, k, v, causal=causal)
+    if impl == "chunked":
+        return ref.attention_chunked(q, k, v, causal=causal,
+                                     unroll=chunk_unroll)
+    Sq, Sk = q.shape[2], k.shape[2]
+    bq = _divisor_block(Sq, block_q)
+    bk = _divisor_block(Sk, block_k)
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                               interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_h", "interpret"))
+def composite(images, weights, *, impl: str = "auto", block_h: int = 8,
+              interpret: bool | None = None):
+    """Weighted temporal composite: [T,H,W,C] x [T,H,W] -> [H,W,C]."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.composite(images, weights)
+    bh = _divisor_block(images.shape[1], block_h)
+    return composite_fwd(images, weights, block_h=bh,
+                         interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_h", "interpret"))
+def grad_mag(images, valid, *, impl: str = "auto", block_h: int = 8,
+             interpret: bool | None = None):
+    """Masked temporal gradient accumulation -> (grad_sum, count), [H,W]."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.grad_mag(images, valid)
+    bh = _divisor_block(images.shape[1], block_h)
+    return grad_mag_fwd(images, valid, block_h=bh,
+                        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "interpret"))
+def ssd(x, dt, a, b, c, *, d_skip=None, impl: str = "auto", chunk: int = 128,
+        interpret: bool | None = None):
+    """Mamba-2 SSD scan: see kernels.ref.ssd_scan for shapes/semantics."""
+    if impl == "auto":
+        # off-TPU use the chunked jnp algorithm (matmul-structured, same
+        # dataflow as the Pallas kernel) when the length allows
+        if _on_tpu():
+            impl = "pallas"
+        else:
+            impl = "chunked" if x.shape[1] % chunk == 0 else "ref"
+    if impl == "chunked":
+        return ref.ssd_scan_chunked(x, dt, a, b, c, chunk=chunk,
+                                    d_skip=d_skip)
+    if impl == "ref":
+        return ref.ssd_scan(x, dt, a, b, c, d_skip=d_skip)
+    ck = _divisor_block(x.shape[1], chunk)
+    return ssd_scan_fwd(x, dt, a, b, c, chunk=ck, d_skip=d_skip,
+                        interpret=_auto_interpret(interpret))

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD chunked scan (Pallas TPU) — arXiv:2405.21060.
+
+State-space duality: within a chunk of Q tokens the recurrence is computed
+as a (masked, decay-weighted) quadratic attention-like product — pure MXU
+work — while chunk-to-chunk state is carried linearly.  TPU mapping:
+
+* Grid ``(B*H, L/Q)`` with the chunk axis trailing (sequential), so the
+  running [N, P] state matrix lives in VMEM scratch across chunks — the
+  recurrent carry costs no HBM traffic at all.
+* Intra-chunk math is two MXU contractions ((Q,N)x(N,Q) and (Q,Q)x(Q,P))
+  plus VPU exp/cumsum for the decay mask; Q defaults to 128 to fill the
+  systolic array.
+* All decay math in f32 (exp of cumulative sums is precision-critical);
+  inputs may be bf16.
+
+The wrapper reshapes [B, L, H, ...] tensors to head-major [B*H, L, ...] so
+each grid row streams one head's sequence contiguously.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state, *,
+                chunk: int):
+    z = pl.program_id(1)
+
+    @pl.when(z == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)      # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)    # [Q, 1]
+    a = a_ref[0, 0].astype(jnp.float32)   # scalar
+    b = b_ref[0].astype(jnp.float32)      # [Q, N]
+    c = c_ref[0].astype(jnp.float32)      # [Q, N]
+
+    log_dec = a * dt[:, 0]                              # [Q]
+    cum = jnp.cumsum(log_dec)                           # inclusive, [Q]
+    total = cum[-1]
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (c_i . b_j) dt_j x_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    w = cb * l_mat * dt[None, :, 0]                     # [Q, Q]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+
+    # inter-chunk: y_i += exp(cum_i) * c_i^T S_in
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: S_out = exp(total) S_in + sum_j exp(total - cum_j) dt_j b_j x_j^T
+    dec_to_end = jnp.exp(total - cum) * dt[:, 0]        # [Q]
+    bx = jax.lax.dot_general(b * dec_to_end[:, None], x,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [N, P]
+    state[...] = jnp.exp(total) * state[...] + bx
+
+    y_ref[0, :, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_fwd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, *, chunk: int = 128,
+                 d_skip: jax.Array | None = None,
+                 interpret: bool = True) -> jax.Array:
+    """x: [B,L,H,P]; dt: [B,L,H]; a: [H]; b, c: [B,L,H,N] -> y: [B,L,H,P].
+
+    Semantics identical to kernels.ref.ssd_scan (sequential recurrence).
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, L)
+    if L % chunk:
+        raise ValueError(f"L={L} not divisible by chunk={chunk}")
+
+    # head-major layouts: [B*H, L, ...]
+    xr = jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, L, P)
+    dtr = jnp.transpose(dt, (0, 2, 1)).reshape(B * H, L, 1)
+    br = jnp.transpose(b, (0, 2, 1, 3)).reshape(B * H, L, N)
+    cr = jnp.transpose(c, (0, 2, 1, 3)).reshape(B * H, L, N)
+    ar = jnp.asarray(a, jnp.float32).reshape(H, 1)
+
+    grid = (B * H, L // chunk)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, z: (bh, z, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, z: (bh, z, 0)),
+            pl.BlockSpec((1, 1), lambda bh, z, H=H: (bh % H, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, z: (bh, z, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, z: (bh, z, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, z: (bh, z, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+
+    y = y.reshape(B, H, L, P).transpose(0, 2, 1, 3)
+    if d_skip is not None:
+        y = (y.astype(jnp.float32) +
+             d_skip.astype(jnp.float32)[None, None, :, None] *
+             x.astype(jnp.float32)).astype(x.dtype)
+    return y

@@ -1,0 +1,14 @@
+"""Launch layer: meshes, sharding rules, dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun must be executed as a fresh process (it sets
+XLA_FLAGS before importing jax); do not import it from here.
+"""
+
+from repro.launch.mesh import (
+    dp_axes,
+    dp_size,
+    make_local_mesh,
+    make_production_mesh,
+)
+
+__all__ = ["dp_axes", "dp_size", "make_local_mesh", "make_production_mesh"]

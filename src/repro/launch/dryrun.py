@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 virtual host devices back the production meshes, every cell's
+step function is jit-lowered with full shardings, compiled, and its
+memory_analysis / cost_analysis / collective schedule recorded.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init) — do not move it.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch all --mesh both --out dryrun.json
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.core import perfmodel
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import build, decode_specs, input_specs
+from repro.models import common as model_common
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import make_train_step
+from repro.train.serve_step import make_prefill
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+_DEF_RE = re.compile(r"%?([\w\.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+#: per-device wire-byte multiplier vs the reference size (ring algorithms)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * size
+
+
+def collective_bytes_per_device(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, from partitioned HLO.
+
+    Shapes in post-SPMD HLO are per-device.  For each collective op we count
+    operand bytes (symbol table over defining lines) times a ring-algorithm
+    wire factor; all-gather counts result bytes (operand is the unconcat
+    shard).  Start/done pairs (async collectives) are counted once via the
+    -start op.
+    """
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+
+    out = {k: 0.0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.search(stripped)
+        if not m:
+            continue
+        rest = stripped[m.end():]
+        for kind in _COLL_KINDS:
+            # match `= shape kind(` and async `kind-start(`; skip -done ops
+            if re.search(rf"\b{kind}(-start)?\(", rest):
+                if kind == "all-gather":
+                    out[kind] += _WIRE_FACTOR[kind] * _shape_bytes(
+                        m.group(2), m.group(3))
+                else:
+                    ops = re.findall(r"%?([\w\.\-]+)(?:,|\))",
+                                     rest.split("(", 1)[1])
+                    op_bytes = sum(sizes.get(o, 0) for o in ops)
+                    out[kind] += _WIRE_FACTOR[kind] * op_bytes
+                break
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+def _lower_one(cfg, shape, mesh, *, moments: str, microbatches: int,
+               donate: bool, policy: str = "2d", cache_shard: str = "seq",
+               grads_dtype: str = "float32"):
+    """Lower + compile one configuration; returns the compiled executable."""
+    model = build(cfg)
+    tp_axes = () if policy == "dp_only" else ("model",)
+    model_common.set_activation_mesh(mesh, dp_axes(mesh) + (("model",)
+                                     if policy == "dp_only" else ()),
+                                     tp_axes)
+    try:
+        with mesh:
+            params_abs = model.abstract_params()
+            p_sh = shd.param_shardings(mesh, params_abs, policy)
+
+            if shape.kind == "train":
+                opt_cfg = opt_mod.OptimizerConfig(moments_dtype=moments)
+                opt_abs = opt_mod.abstract_init(params_abs, opt_cfg)
+                o_sh = shd.opt_state_shardings(mesh, opt_abs, policy)
+                specs = input_specs(cfg, shape)
+                b_sh = shd.batch_shardings(mesh, specs, policy)
+                step = make_train_step(model, opt_cfg,
+                                       num_microbatches=microbatches,
+                                       grads_dtype=grads_dtype)
+                fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1) if donate else ())
+                lowered = fn.lower(params_abs, opt_abs, specs)
+            elif shape.kind == "prefill":
+                specs = input_specs(cfg, shape)
+                b_sh = shd.batch_shardings(mesh, specs, policy)
+                from repro.models.model_zoo import padded_vocab
+                logits_sh = shd.to_named_sharding(
+                    mesh, ("dp", None, "tp"),
+                    (shape.global_batch, shape.seq_len, padded_vocab(cfg)),
+                    policy)
+                prefill = make_prefill(model)
+                fn = jax.jit(lambda p, b: prefill(p, **b),
+                             in_shardings=(p_sh, b_sh),
+                             out_shardings=logits_sh)
+                lowered = fn.lower(params_abs, specs)
+            else:  # decode
+                # serving runs bf16 weights (an f32 llama4 is 12 GB/chip of
+                # pure waste at inference); cast the abstract params
+                params_abs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        s.shape, jnp.bfloat16
+                        if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+                    params_abs)
+                p_sh = shd.param_shardings(mesh, params_abs, policy)
+                dspecs = decode_specs(cfg, shape)
+                d_sh = shd.decode_shardings(mesh, dspecs, shape.global_batch,
+                                            policy, cache_shard)
+                fn = jax.jit(model.decode_step,
+                             in_shardings=(p_sh, d_sh["state"], d_sh["token"]),
+                             out_shardings=(d_sh["state"], None),
+                             donate_argnums=(1,) if donate else ())
+                lowered = fn.lower(params_abs, dspecs["state"],
+                                   dspecs["token"])
+            compiled = lowered.compile()
+    finally:
+        model_common.clear_activation_mesh()
+    import math
+    nparams = sum(math.prod(l.shape) if l.shape else 1
+                  for l in jax.tree.leaves(params_abs))
+    return compiled, nparams
+
+
+def _probe_cfg(cfg, n: int):
+    """Reduced-depth, fully-unrolled config for exact cost accounting.
+
+    XLA's cost_analysis counts while-loop bodies once (ignoring trip count),
+    so scanned-layer lowerings under-report flops/bytes/collectives by ~L x.
+    Probes unroll the layer scan (no while loop) at depth 1 and 2; the
+    difference is the exact per-layer cost and the full-depth cost is
+    reconstructed linearly (stacks are homogeneous by construction).
+    Probes keep the production chunked-attention path but unroll its
+    query-block scan too (scan_unroll plumbs through), so attention flops
+    and bytes are counted exactly as lowered.
+    """
+    reps = dict(scan_unroll=True,
+                attention_impl="chunked" if cfg.num_heads else "auto")
+    if cfg.is_encdec:
+        reps.update(enc_layers=n, num_layers=n)
+    elif cfg.is_hybrid:
+        reps.update(num_layers=n * cfg.attn_layer_period)
+    else:
+        reps.update(num_layers=n)
+    import dataclasses
+    return dataclasses.replace(cfg, **reps)
+
+
+def _layer_trips(cfg) -> int:
+    if cfg.is_hybrid:
+        return cfg.num_layers // cfg.attn_layer_period
+    return cfg.num_layers
+
+
+def _costs_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes_per_device(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            **{f"coll_{k}": v for k, v in coll.items()}}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               moments: str = "int8", microbatches: int = 1,
+               probes: bool = True, policy: str = "2d",
+               cache_shard: str = "seq", grads_dtype: str = "float32",
+               sequence_parallel: bool = False, remat_policy: str = "full"):
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    cfg = get_config(arch)
+    if shape_name not in cfg.shape_names:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skip",
+                "reason": "long_500k inapplicable: pure full attention "
+                          "(see DESIGN.md §Arch-applicability)"}
+    shape = SHAPES[shape_name]
+    import dataclasses as _dc
+    if sequence_parallel:
+        cfg = _dc.replace(cfg, sequence_parallel=True)
+    if remat_policy != "full":
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    opts = dict(policy=policy, cache_shard=cache_shard,
+                grads_dtype=grads_dtype)
+
+    # 1) primary lowering: production config (scan over layers, chunked
+    #    attention, donation) -> authoritative memory analysis
+    compiled, nparams = _lower_one(cfg, shape, mesh, moments=moments,
+                                   microbatches=microbatches, donate=True,
+                                   **opts)
+    t_primary = time.time() - t0
+    mem = compiled.memory_analysis()
+    peak = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "chips": chips,
+        "compile_s": round(t_primary, 1),
+        "bytes_per_device": {
+            "arguments": int(mem.argument_size_in_bytes),
+            "outputs": int(mem.output_size_in_bytes),
+            "temps": int(mem.temp_size_in_bytes),
+            "aliased": int(mem.alias_size_in_bytes),
+            "peak_estimate": peak,
+        },
+        "hbm_ok": bool(peak < perfmodel.TPU_HBM_BYTES),
+        "params": nparams,
+    }
+
+    # 2) cost probes: unrolled depth-1/depth-2 -> exact per-layer costs
+    if probes:
+        t1 = time.time()
+        c1, _ = _lower_one(_probe_cfg(cfg, 1), shape, mesh, moments=moments,
+                           microbatches=1, donate=False, **opts)
+        c2, _ = _lower_one(_probe_cfg(cfg, 2), shape, mesh, moments=moments,
+                           microbatches=1, donate=False, **opts)
+        p1, p2 = _costs_of(c1), _costs_of(c2)
+        trips = _layer_trips(cfg)
+
+        def _extrapolate(k):
+            delta = p2[k] - p1[k]
+            if delta < 0:
+                # partitioner strategy flipped between depths (seen on
+                # decode cells: depth-1 replicates the cache, depth-2
+                # shards it) — extrapolate proportionally from depth-2,
+                # which matches the production depth's strategy
+                return p2[k] * trips / 2.0
+            return p1[k] + (trips - 1) * delta
+
+        total = {k: _extrapolate(k) for k in p1}
+        record["probe_s"] = round(time.time() - t1, 1)
+        record["cost_probe"] = {"depth1": p1, "depth2": p2, "trips": trips}
+        record["flops_per_device"] = total["flops"]
+        record["hlo_bytes_per_device"] = total["bytes"]
+        record["collective_bytes_per_device"] = {
+            k[5:]: v for k, v in total.items() if k.startswith("coll_")}
+
+        # memory term from the analytic TPU-traffic model (CPU-backend
+        # bytes-accessed reflects unfused CPU thunks; see models/costs.py);
+        # flops + collectives from the probes (backend-independent).
+        from repro.models import costs as costs_mod
+        from repro.models.model_zoo import padded_vocab
+        traffic = costs_mod.traffic_bytes(cfg, shape, nparams,
+                                          padded_vocab(cfg), moments=moments)
+        terms = perfmodel.roofline_terms(
+            total["flops"] * chips, traffic["total"],
+            total["coll_total"] * chips, chips)
+        record["roofline"] = {k: (v if isinstance(v, str) else float(v))
+                              for k, v in terms.items()}
+        record["roofline"]["memory_s_raw_xla"] = (
+            total["bytes"] / perfmodel.TPU_HBM_BYTES_PER_S)
+        record["traffic_model_bytes_global"] = {
+            k: float(v) for k, v in traffic.items()}
+        # how much of the compiled compute is "useful" (remat/dispatch waste)
+        model_flops = 6 * nparams * shape.tokens if shape.kind == "train" \
+            else 2 * nparams * (shape.tokens if shape.kind == "prefill"
+                                else shape.global_batch)
+        if cfg.is_moe:
+            active = get_config(arch).param_count(active_only=True)
+            dense_total = get_config(arch).param_count(active_only=False)
+            model_flops = int(model_flops * active / max(1, dense_total))
+        record["model_flops"] = model_flops
+        record["model_vs_hlo_flops"] = (
+            model_flops / max(1.0, total["flops"] * chips))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--moments", default="int8", choices=["int8", "fp32"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled cost probes (memory check only)")
+    ap.add_argument("--policy", default="2d", choices=["2d", "dp_only"])
+    ap.add_argument("--cache-shard", default="seq", choices=["seq", "heads"])
+    ap.add_argument("--grads", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--seqpar", action="store_true",
+                    help="Megatron sequence parallelism for the residual stream")
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                try:
+                    rec = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                     moments=args.moments,
+                                     microbatches=args.microbatches,
+                                     probes=not args.no_probes,
+                                     policy=args.policy,
+                                     cache_shard=args.cache_shard,
+                                     grads_dtype=args.grads,
+                                     sequence_parallel=args.seqpar,
+                                     remat_policy=args.remat_policy)
+                    rec["options"] = {"policy": args.policy,
+                                      "cache_shard": args.cache_shard,
+                                      "grads": args.grads,
+                                      "seqpar": args.seqpar,
+                                      "microbatches": args.microbatches}
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    rec = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                line = json.dumps(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+                brief = {k: v for k, v in rec.items() if k != "trace"}
+                print(json.dumps(brief), flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

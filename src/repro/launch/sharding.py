@@ -1,0 +1,266 @@
+"""Sharding rules: logical parameter/activation layout -> mesh PartitionSpecs.
+
+One suffix-matching rule table covers every architecture in the zoo (the
+payoff of pure-dict params with stable names).  Logical axes:
+
+    "dp"    data parallel (+FSDP): maps to ("pod","data") on multi-pod
+    "tp"    tensor/expert/sequence parallel: maps to "model"
+    "flat"  fully flattened (quantized optimizer payloads): dp x tp
+
+Conventions (Megatron/MaxText lineage):
+
+* matrices are (contracting -> "dp"-FSDP, output -> "tp") on the up
+  projections and transposed on the down projections, so forward passes
+  all-gather weights over `data` (FSDP) and reduce activations over
+  `model` (TP);
+* embeddings shard vocab over "tp" (padded to 256 lanes in model_zoo) and
+  d_model over "dp";
+* MoE expert banks shard the expert axis over "tp" (expert parallelism);
+* decode KV caches shard sequence over "tp" (split-K decode; kv-head counts
+  as low as 2 cannot fill a 16-wide model axis, sequence always can), and
+  batch over "dp" — for global_batch=1 (long_500k) the batch axis is
+  dropped by the divisibility guard and sequence absorbs "dp" too.
+
+Any rule that does not divide evenly for a given leaf falls back to
+replication on that dim (guarded, logged via `explain`): correctness never
+depends on a rule firing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import dp_axes
+
+MATRIX_NAMES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_in",
+                "w_out", "w_xz", "w_bc", "w_dt", "out_proj", "router",
+                "embed", "unembed", "frontend_proj", "in_proj", "conv_x_w",
+                "conv_bc_w"}
+
+
+def _path_names(path) -> List[str]:
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+        elif hasattr(entry, "idx"):
+            names.append(f"[{entry.idx}]")
+        else:
+            names.append(str(entry))
+    return names
+
+
+def param_logical_spec(names: List[str]) -> Tuple[Optional[str], ...]:
+    """Trailing-dims logical spec for a parameter leaf, by name suffix."""
+    last = names[-1] if names else ""
+    in_moe = "moe" in names and "shared" not in names
+
+    # quantized optimizer payloads: the int8 payload is parameter-shaped and
+    # takes the parameter's spec verbatim; the per-row scale tensor is the
+    # parameter reduced over its last axis, so it takes the spec minus the
+    # last entry
+    if last == "qv":
+        return param_logical_spec(names[:-1])
+    if last == "qscale":
+        return param_logical_spec(names[:-1])[:-1] or (None,)
+
+    if last in ("embed", "unembed"):
+        return ("tp", "dp")
+    if last == "frontend_proj":
+        return (None, "tp")
+    if last in ("wq", "wk", "wv"):
+        return ("dp", "tp")
+    if last == "wo":
+        return ("tp", "dp")
+    if last in ("bq", "bk", "bv"):
+        return ("tp",)
+    if last == "router":
+        return ("dp", None)
+    if in_moe and last in ("w_gate", "w_up"):
+        return ("tp", "dp", None)  # [E, d, ff]
+    if in_moe and last == "w_down":
+        return ("tp", None, "dp")  # [E, ff, d]
+    if last in ("w_gate", "w_up", "w_in"):
+        return ("dp", "tp")
+    if last in ("w_down", "w_out", "out_proj"):
+        return ("tp", "dp")
+    if last == "b_in":
+        return ("tp",)
+    if last == "w_xz":
+        return ("dp", "tp")
+    if last in ("w_bc", "w_dt"):
+        return ("dp", None)
+    if last == "conv_x_w":
+        return (None, "tp")
+    if last == "conv_x_b":
+        return ("tp",)
+    if last == "scale" and "mamba" in names:
+        return ("tp",)  # gated-norm scale is d_inner-sized
+    # norms, biases, dt/a/d vectors, conv_bc: replicate
+    return (None,)
+
+
+def cache_logical_spec(names: List[str], batch_is_one: bool
+                       ) -> Tuple[Optional[str], ...]:
+    """Trailing-dims spec for decode-cache leaves."""
+    last = names[-1] if names else ""
+    seq = ("dp", "tp") if batch_is_one else "tp"
+    if last in ("k", "v", "cross_k", "cross_v"):
+        # [B, Hkv, S, D]
+        return (None if batch_is_one else "dp", None, seq, None)
+    if last == "conv_x":
+        return (None if batch_is_one else "dp", None, "tp")
+    if last == "conv_bc":
+        return (None if batch_is_one else "dp", None, None)
+    if last == "ssm":
+        return (None if batch_is_one else "dp", "tp", None, None)
+    return (None,)
+
+
+def _resolve_axis(logical: Optional[str], mesh, policy: str = "2d") -> Any:
+    """policy "2d": dp x tp Megatron layout.  policy "dp_only": the model
+    axis folds into data parallelism (small archs where 16-way TP is pure
+    collective overhead) — "tp" pins dissolve, "dp" spans every axis."""
+    if logical is None:
+        return None
+    dp = dp_axes(mesh)
+    if policy == "dp_only":
+        if logical == "tp":
+            return None
+        if logical in ("dp", "flat"):
+            return dp + ("model",)
+    if logical == "dp":
+        return dp if len(dp) > 1 else dp[0]
+    if logical == "tp":
+        return "model"
+    if logical == "flat":
+        return dp + ("model",)
+    if isinstance(logical, tuple):  # e.g. ("dp", "tp") for b1 sequence
+        out = []
+        for item in logical:
+            r = _resolve_axis(item, mesh, policy)
+            if r is not None:
+                out.extend(r if isinstance(r, tuple) else (r,))
+        return tuple(out) or None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def _axis_size(mesh, resolved) -> int:
+    if resolved is None:
+        return 1
+    if isinstance(resolved, tuple):
+        size = 1
+        for a in resolved:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[resolved]
+
+
+def to_named_sharding(mesh, logical: Sequence, shape: Tuple[int, ...],
+                      policy: str = "2d") -> NamedSharding:
+    """Logical trailing spec -> NamedSharding, with rank padding and a
+    divisibility guard (non-dividing dims fall back to replication)."""
+    logical = tuple(logical)
+    if len(logical) < len(shape):
+        logical = (None,) * (len(shape) - len(logical)) + logical
+    elif len(logical) > len(shape):
+        logical = logical[len(logical) - len(shape):]
+    resolved = []
+    for dim, ax in zip(shape, logical):
+        r = _resolve_axis(ax, mesh, policy)
+        if r is not None and dim % _axis_size(mesh, r) != 0:
+            r = None  # guard: replicate instead of uneven shard
+        resolved.append(r)
+    return NamedSharding(mesh, P(*resolved))
+
+
+def tree_shardings(mesh, abstract_tree, spec_fn, policy: str = "2d") -> Any:
+    """Map spec_fn(path_names, leaf) -> logical spec over a pytree."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        logical = spec_fn(names)
+        return to_named_sharding(mesh, logical, leaf.shape, policy)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_tree)
+
+
+def param_shardings(mesh, abstract_params, policy: str = "2d") -> Any:
+    return tree_shardings(mesh, abstract_params, param_logical_spec, policy)
+
+
+def opt_state_shardings(mesh, abstract_state, policy: str = "2d") -> Any:
+    """Optimizer state: moments follow the parameter rules (the QTensor
+    fields match via their own names); `step` replicates."""
+
+    def spec(names):
+        if names and names[-1] == "step":
+            return ()
+        return param_logical_spec(names)
+
+    return tree_shardings(mesh, abstract_state, spec, policy)
+
+
+def batch_shardings(mesh, batch_specs: Dict[str, Any],
+                    policy: str = "2d") -> Dict[str, Any]:
+    """Train/prefill inputs: leading batch dim over dp, rest replicated."""
+    out = {}
+    for k, s in batch_specs.items():
+        logical = ("dp",) + (None,) * (len(s.shape) - 1)
+        out[k] = to_named_sharding(mesh, logical, s.shape, policy)
+    return out
+
+
+def decode_shardings(mesh, decode_specs: Dict[str, Any], batch: int,
+                     policy: str = "2d", cache_shard: str = "seq") -> Dict:
+    """State + token shardings for the decode cells.
+
+    cache_shard "seq": split-K over the cache sequence axis (universal).
+    cache_shard "heads": shard kv heads over `model` instead — viable when
+    num_kv_heads divides the model axis (e.g. gemma's 16), and avoids the
+    dynamic-update-slice on a sharded axis entirely.
+    """
+    b1 = batch == 1
+
+    def spec_fn(names):
+        s = cache_logical_spec(names, b1)
+        if cache_shard == "heads" and names and names[-1] in (
+                "k", "v", "cross_k", "cross_v"):
+            return (None if b1 else "dp", "tp", None, None)
+        return s
+
+    state_sh = tree_shardings(mesh, decode_specs["state"], spec_fn, policy)
+    token_sh = to_named_sharding(mesh, ("dp", None),
+                                 decode_specs["token"].shape, policy)
+    return {"state": state_sh, "token": token_sh}
+
+
+def explain(shardings, abstract_tree, max_rows: int = 0) -> List[str]:
+    """Human-readable (path, shape, spec) rows for logging/EXPERIMENTS."""
+    rows = []
+
+    def one(path, leaf):
+        sh = None
+        # walk the shardings tree in parallel
+        sub = shardings
+        for entry in path:
+            key = getattr(entry, "key", getattr(entry, "name", None))
+            if key is None:
+                key = getattr(entry, "idx", None)
+            try:
+                sub = sub[key] if not hasattr(sub, "_fields") else getattr(sub, key)
+            except Exception:
+                return
+        rows.append(f"{'/'.join(_path_names(path)):60s} {str(leaf.shape):24s}"
+                    f" {sub.spec}")
+
+    jax.tree_util.tree_map_with_path(one, abstract_tree)
+    return rows[:max_rows] if max_rows else rows

@@ -1,0 +1,9 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM architectures.
+
+All models are pure-functional pytrees (no flax/haiku), scanned over layers,
+with abstract (ShapeDtypeStruct) init for the multi-pod dry-run.
+"""
+
+from repro.models.model_zoo import Model, build, decode_specs, input_specs
+
+__all__ = ["Model", "build", "decode_specs", "input_specs"]

@@ -1,0 +1,144 @@
+"""Grouped-query attention layer: train/prefill path + cached decode path.
+
+Sharding contract (see launch/sharding.py): projection weights are
+Megatron-sharded over the `model` axis (columns for wq/wk/wv, rows for wo);
+decode KV caches are sharded over the *sequence* axis on `model` (split-K /
+flash-decoding style) because assigned archs have as few as 2 kv heads —
+head-sharding cannot fill a 16-wide model axis, sequence sharding always
+can.  GSPMD turns the softmax/PV reductions over the sharded axis into the
+log-sum-exp-combine collective pattern automatically.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import common
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache for one attention layer."""
+
+    k: jax.Array  # [B, Hkv, S_max, D]
+    v: jax.Array  # [B, Hkv, S_max, D]
+    length: jax.Array  # [] int32 — tokens currently valid
+
+
+def init_attn(key, cfg: ModelConfig):
+    dq = cfg.num_heads * cfg.head_dim
+    dkv = cfg.num_kv_heads * cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    params = {
+        "wq": common.dense_init(kq, cfg.d_model, dq),
+        "wk": common.dense_init(kk, cfg.d_model, dkv),
+        "wv": common.dense_init(kv, cfg.d_model, dkv),
+        "wo": common.dense_init(ko, dq, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((dq,), jnp.float32)
+        params["bk"] = jnp.zeros((dkv,), jnp.float32)
+        params["bv"] = jnp.zeros((dkv,), jnp.float32)
+    return params
+
+
+def _project_qkv(params, cfg: ModelConfig, x: jax.Array,
+                 positions: Optional[jax.Array], *, rope: bool = True):
+    B, S, _ = x.shape
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    if rope and positions is not None:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(params, cfg: ModelConfig, x: jax.Array, *,
+                 causal: bool = True,
+                 positions: Optional[jax.Array] = None,
+                 rope: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: [B, S, d_model]."""
+    B, S, _ = x.shape
+    if positions is None and rope:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=rope)
+    out = kops.flash_attention(q, k, v, causal=causal,
+                               impl=cfg.attention_impl,
+                               chunk_unroll=cfg.scan_unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def cross_attn_forward(params, cfg: ModelConfig, x: jax.Array,
+                       memory_kv: tuple) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k, v = memory_kv
+    out = kops.flash_attention(q, k, v, causal=False, impl=cfg.attention_impl,
+                               chunk_unroll=cfg.scan_unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def encode_memory_kv(params, cfg: ModelConfig, memory: jax.Array):
+    """Project encoder output once into cross-attention K/V."""
+    B, S, _ = memory.shape
+    k = memory @ params["wk"].astype(memory.dtype)
+    v = memory @ params["wv"].astype(memory.dtype)
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(memory.dtype)
+        v = v + params["bv"].astype(memory.dtype)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def attn_decode_step(params, cfg: ModelConfig, cache: KVCache,
+                     x: jax.Array, *, rope: bool = True
+                     ) -> tuple[KVCache, jax.Array]:
+    """One-token decode: x [B, 1, d_model]; appends to cache, attends.
+
+    The cache update is a dynamic slice write at `length`; with the cache
+    sequence axis sharded over `model`, GSPMD keeps the write local to the
+    owning shard and the attention reduction becomes split-K.
+    """
+    B = x.shape[0]
+    pos = cache.length  # scalar position of the incoming token
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions, rope=rope)
+
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, 0, pos, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, 0, pos, 0))
+    out = kref.decode_attention(q, k, v, pos + 1)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+    y = out @ params["wo"].astype(x.dtype)
+    return KVCache(k=k, v=v, length=pos + 1), y

@@ -1,0 +1,247 @@
+"""Shared model building blocks (pure-functional, pytree params).
+
+No flax/haiku: parameters are plain dict pytrees, initializers are explicit,
+and every module is `init(key, ...) -> params` + `apply(params, x) -> y`.
+This keeps `jax.eval_shape` abstract initialization trivial (the multi-pod
+dry-run instantiates 400B-parameter models as ShapeDtypeStructs only) and
+makes sharding rules a simple path-pattern match (launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (set by launchers; no-op otherwise)
+# ---------------------------------------------------------------------------
+_ACTIVATION_MESH = None  # (mesh, {"dp": axes tuple, "tp": axes tuple})
+
+
+def set_activation_mesh(mesh, dp_axes: tuple, tp_axes: tuple = ("model",)):
+    """Enable with_sharding_constraint on key activations (launchers only).
+
+    `tp_axes=()` expresses a DP-only policy (small models where 16-way
+    tensor parallelism is pure collective overhead): "tp" pins become
+    no-ops and "dp" may absorb the model axis.
+    """
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = (mesh, {"dp": tuple(dp_axes), "tp": tuple(tp_axes)})
+
+
+def clear_activation_mesh():
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = None
+
+
+def constrain(x: "jax.Array", logical: tuple) -> "jax.Array":
+    """Constrain activation sharding: logical axes "dp"/"tp"/None per dim.
+
+    GSPMD propagates most layouts correctly from the parameter shardings;
+    these pins are for the few junctions (embedding output, logits, MoE
+    dispatch buffers, block boundaries) where propagation has a choice and
+    the wrong one inserts reshard collectives.
+    """
+    if _ACTIVATION_MESH is None:
+        return x
+    mesh, axmap = _ACTIVATION_MESH
+    axes = []
+    for item in logical:
+        resolved = axmap.get(item) if isinstance(item, str) else None
+        if item is None or resolved is None or len(resolved) == 0:
+            axes.append(None)
+        else:
+            axes.append(resolved if len(resolved) > 1 else resolved[0])
+    spec = jax.sharding.PartitionSpec(*axes)
+    for dim, ax in enumerate(axes):
+        size = 1
+        if ax is not None:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+        if x.shape[dim] % size:
+            return x  # shape not divisible: skip the pin entirely
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in scaling (the LLaMA/MaxText default)."""
+    std = in_dim ** -0.5
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (in_dim, out_dim), jnp.float32)).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    """std d^-1/2: tied unembedding then yields O(1) logits at init (the
+    gemma-style `embed_scale` multiplies activations back up by sqrt(d))."""
+    std = dim ** -0.5
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (vocab, dim), jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(norm: str, dim: int):
+    if norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    if norm == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32),
+                "bias": jnp.zeros((dim,), jnp.float32)}
+    raise ValueError(f"unknown norm {norm}")
+
+
+def apply_norm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, H, S, D]; positions: [S] or [B, S]."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # [D/2]
+    if positions.ndim == 1:
+        angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        angles = angles[None, None]  # [1, 1, S, D/2]
+    else:
+        angles = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+        angles = angles[:, None]  # [B, 1, S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(positions: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal PE at dynamic position(s); returns [..., dim]."""
+    pos = jnp.asarray(positions, jnp.float32)[..., None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    sin, cos = jnp.sin(pos * div), jnp.cos(pos * div)
+    return jnp.stack([sin, cos], axis=-1).reshape(*pos.shape[:-1], dim)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jax.Array:
+    """Additive absolute positions (seamless enc/dec stacks)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq_len, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def gated_act(act: str, gate: jax.Array, up: jax.Array) -> jax.Array:
+    if act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(f"{act} is not a gated activation")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_loss_weight: float = 1e-4):
+    """Stable softmax cross-entropy with z-loss (PaLM-style logit drift guard).
+
+    logits: [..., V] (any dtype; reduced in f32); labels: [...] int32.
+    Returns (mean_loss, metrics).  The z-loss term keeps the log-partition
+    near zero — cheap insurance for bf16 training at 150k+ vocab.
+
+    The label log-prob is extracted with a one-hot reduction rather than
+    take_along_axis: with the vocab axis sharded over `model`, the gather
+    would make GSPMD all-gather the full [*, V] logits per device (tens of
+    GB at 4k x 256 x 150k vocab); the masked-sum partitions cleanly into a
+    local reduce + psum.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = (labels[..., None]
+              == jnp.arange(logits.shape[-1])[None, ...]).astype(jnp.float32)
+    ll = jnp.sum(shifted * onehot, axis=-1) + m[..., 0]
+    nll = lse - ll
+    z = lse * lse
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    zloss = jnp.sum(z * mask) / denom
+    total = loss + z_loss_weight * zloss
+    return total, {"nll": loss, "z_loss": zloss, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# stacked-layer helpers (scan over layers: one compiled layer body)
+# ---------------------------------------------------------------------------
+def init_stacked(key, num_layers: int, init_one):
+    """vmap a single-layer initializer over layer keys -> stacked pytree."""
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_layers(stacked_params, x, apply_one, *, remat: bool = False,
+                policy=None):
+    """x -> scan(apply_one) over the stacked layer axis.
+
+    apply_one(layer_params, x) -> x.  With remat=True each layer is a
+    rematerialization boundary (activation checkpointing at layer
+    granularity — the standard memory/compute trade at 4k x 256 batch).
+    """
+    fn = apply_one
+    if remat:
+        fn = jax.checkpoint(apply_one, policy=policy)
+
+    def body(carry, layer_params):
+        return fn(layer_params, carry), None
+
+    out, _ = jax.lax.scan(body, x, stacked_params)
+    return out
+
+
+def scan_layers_with_cache(stacked_params, caches, x, apply_one):
+    """Decode-path scan: threads per-layer caches alongside params.
+
+    apply_one(layer_params, cache, x) -> (new_cache, x).
+    Returns (new_caches, x).
+    """
+
+    def body(carry, inputs):
+        layer_params, cache = inputs
+        new_cache, out = apply_one(layer_params, cache, carry)
+        return out, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked_params, caches))
+    return new_caches, x

@@ -1,0 +1,192 @@
+"""Encoder-decoder assembly (seamless-m4t family).
+
+Speech frontend is a stub per the harness spec: the encoder consumes
+precomputed frame embeddings ([B, S_enc, frontend_dim]); everything above
+that — 24-layer bidirectional encoder, 24-layer decoder with causal
+self-attention + cross-attention, sinusoidal positions, plain-GELU FFNs,
+LayerNorm — is real and scanned.
+
+Decode: per-layer self-attn KV caches plus cross-attention K/V computed
+once from the encoder memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.attention import (
+    KVCache,
+    attn_decode_step,
+    attn_forward,
+    cross_attn_forward,
+    encode_memory_kv,
+    init_attn,
+    init_cache,
+)
+from repro.models.ffn import ffn_forward, init_ffn
+
+
+def init_enc_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": common.init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attn(k1, cfg),
+        "norm_ffn": common.init_norm(cfg.norm, cfg.d_model),
+        "ffn": init_ffn(k2, cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm_self": common.init_norm(cfg.norm, cfg.d_model),
+        "self_attn": init_attn(k1, cfg),
+        "norm_cross": common.init_norm(cfg.norm, cfg.d_model),
+        "cross_attn": init_attn(k2, cfg),
+        "norm_ffn": common.init_norm(cfg.norm, cfg.d_model),
+        "ffn": init_ffn(k3, cfg),
+    }
+
+
+def init_model(key, cfg: ModelConfig):
+    ke, kf, kenc, kdec, kn1, kn2 = jax.random.split(key, 6)
+    return {
+        "embed": common.embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "frontend_proj": common.dense_init(
+            kf, cfg.frontend_dim or cfg.d_model, cfg.d_model),
+        "encoder": common.init_stacked(kenc, cfg.enc_layers,
+                                       lambda k: init_enc_block(k, cfg)),
+        "decoder": common.init_stacked(kdec, cfg.num_layers,
+                                       lambda k: init_dec_block(k, cfg)),
+        "norm_enc": common.init_norm(cfg.norm, cfg.d_model),
+        "norm_out": common.init_norm(cfg.norm, cfg.d_model),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+
+
+def encode(params, cfg: ModelConfig, frontend: jax.Array) -> jax.Array:
+    """frontend [B, S_enc, frontend_dim] -> memory [B, S_enc, d_model]."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frontend.astype(dtype) @ params["frontend_proj"].astype(dtype)
+    x = x + common.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dtype)
+
+    def body(h, block):
+        a = common.apply_norm(block["norm_attn"], h)
+        h = h + attn_forward(block["attn"], cfg, a, causal=False, rope=False)
+        f = common.apply_norm(block["norm_ffn"], h)
+        return h + ffn_forward(block["ffn"], cfg, f), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"],
+                       unroll=True if cfg.scan_unroll else 1)
+    return common.apply_norm(params["norm_enc"], x)
+
+
+def decode_train(params, cfg: ModelConfig, memory: jax.Array,
+                 tokens: jax.Array):
+    """Teacher-forced decoder pass -> logits [B, S_dec, V]."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    x = x + common.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dtype)
+
+    def body(h, block):
+        a = common.apply_norm(block["norm_self"], h)
+        h = h + attn_forward(block["self_attn"], cfg, a, causal=True,
+                             rope=False)
+        c = common.apply_norm(block["norm_cross"], h)
+        mem_kv = encode_memory_kv(block["cross_attn"], cfg, memory)
+        h = h + cross_attn_forward(block["cross_attn"], cfg, c, mem_kv)
+        f = common.apply_norm(block["norm_ffn"], h)
+        return h + ffn_forward(block["ffn"], cfg, f), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["decoder"],
+                       unroll=True if cfg.scan_unroll else 1)
+    x = common.apply_norm(params["norm_out"], x)
+    logits = x @ params["embed"].astype(dtype).T
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            frontend: jax.Array):
+    """End-to-end train/prefill pass -> (logits, aux=0)."""
+    memory = encode(params, cfg, frontend)
+    return decode_train(params, cfg, memory, tokens), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# incremental decode
+# ---------------------------------------------------------------------------
+class DecCache(NamedTuple):
+    self_kv: Any  # stacked KVCache over decoder layers
+    cross_k: jax.Array  # [L, B, Hkv, S_enc, D] precomputed
+    cross_v: jax.Array
+
+
+def init_decode_state(params, cfg: ModelConfig, memory: jax.Array,
+                      batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Precompute cross K/V from memory; allocate self-attn caches."""
+
+    def cross_of(block):
+        return encode_memory_kv(block["cross_attn"], cfg, memory)
+
+    cross = jax.vmap(cross_of)(params["decoder"])  # maps over layer axis
+    self_kv = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_cache(cfg, batch, max_len, dtype)
+          for _ in range(cfg.num_layers)])
+    return DecCache(self_kv=self_kv, cross_k=cross[0], cross_v=cross[1])
+
+
+def decode_step(params, cfg: ModelConfig, state: DecCache, token: jax.Array):
+    """token [B, 1] -> (state, logits [B, 1, V])."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[token]
+    # position-dependent sinusoidal embedding for the incoming token
+    pos = state.self_kv.length[0]
+    x = x + common.sinusoidal_at(pos, cfg.d_model).astype(dtype)
+
+    # fori_loop carry (in-place cache update; see transformer.decode_step)
+    def take(tree, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            tree)
+
+    def body(i, carry):
+        h, self_kv = carry
+        block = take(params["decoder"], i)
+        cache = take(self_kv, i)
+        a = common.apply_norm(block["norm_self"], h)
+        cache, y = attn_decode_step(block["self_attn"], cfg, cache, a,
+                                    rope=False)
+        h = h + y
+        c = common.apply_norm(block["norm_cross"], h)
+        ck = jax.lax.dynamic_index_in_dim(state.cross_k, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(state.cross_v, i, 0, keepdims=False)
+        h = h + cross_attn_forward(block["cross_attn"], cfg, c, (ck, cv))
+        f = common.apply_norm(block["norm_ffn"], h)
+        h = h + ffn_forward(block["ffn"], cfg, f)
+        self_kv = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), i, 0), self_kv, cache)
+        return (h, self_kv)
+
+    if cfg.scan_unroll:
+        carry = (x, state.self_kv)
+        for i in range(cfg.num_layers):
+            carry = body(i, carry)
+        x, new_self = carry
+    else:
+        x, new_self = jax.lax.fori_loop(0, cfg.num_layers, body,
+                                        (x, state.self_kv))
+    x = common.apply_norm(params["norm_out"], x)
+    logits = x @ params["embed"].astype(dtype).T
+    return state._replace(self_kv=new_self), logits

@@ -1,0 +1,37 @@
+"""Feed-forward layers: gated (SwiGLU/GeGLU) and plain (GELU) variants."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "w_gate": common.dense_init(kg, cfg.d_model, d_ff),
+            "w_up": common.dense_init(ku, cfg.d_model, d_ff),
+            "w_down": common.dense_init(kd, d_ff, cfg.d_model),
+        }
+    ki, ko = jax.random.split(key)
+    return {
+        "w_in": common.dense_init(ki, cfg.d_model, d_ff),
+        "b_in": jnp.zeros((d_ff,), jnp.float32),
+        "w_out": common.dense_init(ko, d_ff, cfg.d_model),
+        "b_out": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def ffn_forward(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "w_gate" in params:
+        gate = x @ params["w_gate"].astype(x.dtype)
+        up = x @ params["w_up"].astype(x.dtype)
+        return common.gated_act(cfg.act, gate, up) @ params["w_down"].astype(x.dtype)
+    h = x @ params["w_in"].astype(x.dtype) + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    return h @ params["w_out"].astype(x.dtype) + params["b_out"].astype(x.dtype)

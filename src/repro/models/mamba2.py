@@ -1,0 +1,171 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Block layout (faithful to the reference implementation, ngroups=1):
+
+    w_xz : d -> [x (di) | z (di)]      (gate + input streams)
+    w_bc : d -> [B (N) | C (N)]        (state in/out projections)
+    w_dt : d -> H                      (per-head step sizes)
+    causal depthwise conv (width 4) over x and over [B|C], SiLU
+    dt = softplus(dt_raw + dt_bias); A = -exp(A_log)
+    y = SSD(x, dt, A, B, C) + D * x    (kernels.ops.ssd)
+    y = RMSNorm(y * silu(z))           (gated norm)
+    out_proj : di -> d
+
+The projection is deliberately kept as three matrices (the reference fuses
+them into one in_proj): tensor-parallel sharding then has clean column
+boundaries — x/z columns shard over `model` at d_inner granularity while
+the small B/C/dt projections stay replicated — with no mid-shard splits
+for GSPMD to repair.
+
+Train path runs the chunked SSD (Pallas on TPU, oracle elsewhere); decode
+keeps a [B, H, N, P] state plus (width-1)-deep conv tails — O(1) per token
+regardless of context length, which is why mamba2/jamba own the long_500k
+cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import common
+
+
+class MambaCache(NamedTuple):
+    conv_x: jax.Array  # [B, W-1, di] trailing x inputs
+    conv_bc: jax.Array  # [B, W-1, 2N] trailing B|C inputs
+    ssm: jax.Array  # [B, H, N, P] state
+    length: jax.Array  # [] int32
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    return di, n, h, p
+
+
+def init_mamba(key, cfg: ModelConfig):
+    di, n, h, p = _dims(cfg)
+    kxz, kbc, kdt, kcx, kcb, ko, kd = jax.random.split(key, 7)
+    # dt bias init so softplus(bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(kd, (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    w = cfg.ssm_conv_width
+    return {
+        "w_xz": common.dense_init(kxz, cfg.d_model, 2 * di),
+        "w_bc": common.dense_init(kbc, cfg.d_model, 2 * n),
+        "w_dt": common.dense_init(kdt, cfg.d_model, h),
+        "conv_x_w": jax.random.normal(kcx, (w, di), jnp.float32) * w**-0.5,
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_bc_w": jax.random.normal(kcb, (w, 2 * n), jnp.float32) * w**-0.5,
+        "conv_bc_b": jnp.zeros((2 * n,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": common.init_norm("rmsnorm", di),
+        "out_proj": common.dense_init(ko, di, cfg.d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                 width: int) -> jax.Array:
+    """Depthwise causal conv over [B, L, C] via width-tap shifted sums."""
+    cw = conv_w.astype(x.dtype)
+    taps = []
+    for w in range(width):
+        shift = width - 1 - w
+        taps.append(jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+                    * cw[w])
+    return sum(taps) + conv_b.astype(x.dtype)
+
+
+def mamba_forward(params, cfg: ModelConfig, xin: jax.Array) -> jax.Array:
+    """Full-sequence path. xin: [B, L, d_model] -> [B, L, d_model]."""
+    B, L, _ = xin.shape
+    di, n, h, p = _dims(cfg)
+    xz = xin @ params["w_xz"].astype(xin.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    bc = xin @ params["w_bc"].astype(xin.dtype)
+    dt_raw = xin @ params["w_dt"].astype(xin.dtype)
+
+    x = jax.nn.silu(_causal_conv(x, params["conv_x_w"], params["conv_x_b"],
+                                 cfg.ssm_conv_width))
+    bc = jax.nn.silu(_causal_conv(bc, params["conv_bc_w"],
+                                  params["conv_bc_b"], cfg.ssm_conv_width))
+    b, c = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = x.reshape(B, L, h, p)
+    bh = jnp.broadcast_to(b[:, :, None, :], (B, L, h, n))  # ngroups=1
+    ch = jnp.broadcast_to(c[:, :, None, :], (B, L, h, n))
+    y = kops.ssd(xh, dt, a, bh, ch, d_skip=params["d_skip"])
+    y = y.reshape(B, L, di)
+    y = common.apply_norm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(xin.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.float32) -> MambaCache:
+    di, n, h, p = _dims(cfg)
+    w = cfg.ssm_conv_width
+    return MambaCache(
+        conv_x=jnp.zeros((batch, w - 1, di), dtype),
+        conv_bc=jnp.zeros((batch, w - 1, 2 * n), dtype),
+        ssm=jnp.zeros((batch, h, n, p), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba_decode_step(params, cfg: ModelConfig, cache: MambaCache,
+                      xin: jax.Array) -> tuple[MambaCache, jax.Array]:
+    """One-token step. xin: [B, 1, d_model]."""
+    B = xin.shape[0]
+    di, n, h, p = _dims(cfg)
+    x1 = xin[:, 0]
+    xz = x1 @ params["w_xz"].astype(xin.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    bc = x1 @ params["w_bc"].astype(xin.dtype)
+    dt_raw = x1 @ params["w_dt"].astype(xin.dtype)
+
+    def conv_step(tail, cur, conv_w, conv_b):
+        window = jnp.concatenate([tail.astype(cur.dtype), cur[:, None, :]],
+                                 axis=1)  # [B, W, C]
+        out = jnp.einsum("bwc,wc->bc", window, conv_w.astype(cur.dtype))
+        return window[:, 1:], jax.nn.silu(out + conv_b.astype(cur.dtype))
+
+    new_conv_x, x = conv_step(cache.conv_x, x, params["conv_x_w"],
+                              params["conv_x_b"])
+    new_conv_bc, bc = conv_step(cache.conv_bc, bc, params["conv_bc_w"],
+                                params["conv_bc_b"])
+    b, c = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B, H]
+    a = -jnp.exp(params["a_log"])  # [H]
+    decay = jnp.exp(a[None] * dt)  # [B, H]
+    xh = x.reshape(B, h, p).astype(jnp.float32)
+    bh = jnp.broadcast_to(b[:, None, :], (B, h, n)).astype(jnp.float32)
+    ch = jnp.broadcast_to(c[:, None, :], (B, h, n)).astype(jnp.float32)
+
+    ssm = cache.ssm * decay[..., None, None] + (
+        dt[..., None, None] * bh[..., :, None] * xh[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", ch, ssm)  # [B, H, P]
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B, di).astype(xin.dtype)
+    y = common.apply_norm(params["norm"], y * jax.nn.silu(z))
+    y = (y @ params["out_proj"].astype(xin.dtype))[:, None, :]
+
+    new_cache = MambaCache(conv_x=new_conv_x.astype(cache.conv_x.dtype),
+                           conv_bc=new_conv_bc.astype(cache.conv_bc.dtype),
+                           ssm=ssm, length=cache.length + 1)
+    return new_cache, y

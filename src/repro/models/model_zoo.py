@@ -1,0 +1,131 @@
+"""Model zoo: one entry point over every assigned architecture.
+
+`build(cfg)` returns a `Model` bundle of pure functions; `input_specs` and
+`decode_specs` produce the ShapeDtypeStruct stand-ins the multi-pod dry-run
+lowers against (weak-type-correct, shardable, zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, transformer
+
+VOCAB_PAD_MULTIPLE = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Embedding tables padded so the vocab axis shards evenly 256-ways."""
+    v = cfg.vocab_size
+    m = VOCAB_PAD_MULTIPLE
+    return ((v + m - 1) // m) * m
+
+
+def _padded_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, vocab_size=padded_vocab(cfg))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    abstract_params: Callable  # () -> ShapeDtypeStruct pytree
+    forward: Callable  # (params, **inputs) -> (logits, aux)
+    init_decode: Callable  # (params, batch, max_len) -> caches/state
+    decode_step: Callable  # (params, state, token) -> (state, logits)
+
+
+def build(cfg: ModelConfig) -> Model:
+    pcfg = _padded_cfg(cfg)
+
+    if cfg.is_encdec:
+        def forward(params, *, tokens, frontend, **_):
+            return encdec.forward(params, pcfg, tokens, frontend)
+
+        def init_decode(params, batch, max_len, memory=None):
+            if memory is None:
+                raise ValueError("enc-dec decode needs encoder memory")
+            return encdec.init_decode_state(params, pcfg, memory, batch,
+                                            max_len)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_model(key, pcfg),
+            abstract_params=lambda: encdec.abstract_params(pcfg),
+            forward=forward,
+            init_decode=init_decode,
+            decode_step=lambda p, s, t: encdec.decode_step(p, pcfg, s, t),
+        )
+
+    def forward(params, *, tokens, frontend=None, **_):
+        return transformer.forward(params, pcfg, tokens, frontend=frontend)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_model(key, pcfg),
+        abstract_params=lambda: transformer.abstract_params(pcfg),
+        forward=forward,
+        init_decode=lambda p, batch, max_len: transformer.init_block_caches(
+            pcfg, batch, max_len),
+        decode_step=lambda p, s, t: transformer.decode_step(p, pcfg, s, t),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Inputs for train/prefill lowering of (cfg x shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if cfg.is_encdec:
+        # speech frames run ~4x shorter than the text cell length
+        s_enc = max(128, S // 4)
+        specs = {
+            "frontend": jax.ShapeDtypeStruct(
+                (B, s_enc, cfg.frontend_dim or cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif cfg.frontend_tokens:
+        s_text = S - cfg.frontend_tokens
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, s_text), i32),
+            "frontend": jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model),
+                jnp.bfloat16),
+        }
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """State + token specs for decode-step lowering (cache at seq_len)."""
+    B, S = shape.global_batch, shape.seq_len
+    pcfg = _padded_cfg(cfg)
+    model = build(cfg)
+
+    if cfg.is_encdec:
+        s_enc = max(128, min(8192, S // 4))
+        memory = jax.ShapeDtypeStruct((B, s_enc, cfg.d_model), jnp.bfloat16)
+        params = model.abstract_params()
+        state = jax.eval_shape(
+            lambda p, m: encdec.init_decode_state(p, pcfg, m, B, S),
+            params, memory)
+    else:
+        state = jax.eval_shape(
+            lambda: transformer.init_block_caches(pcfg, B, S))
+    return {
+        "state": state,
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+    }

@@ -1,0 +1,132 @@
+"""Mixture-of-experts FFN: top-k routing, capacity-bounded scatter dispatch.
+
+Design (GShard/Switch lineage, arXiv:2006.16668 / 2101.03961, with the
+scatter formulation that avoids the O(tokens x experts x capacity) one-hot
+dispatch einsum):
+
+* routing is computed per *batch row* (group): the position-in-expert
+  cumsum stays local to the `data` shard that owns the row — no cross-device
+  scan, which is what makes this lower cleanly on a 256-way mesh;
+* tokens are scattered into an [B, E, C, d] buffer (C = capacity), expert
+  matmuls run as einsums with the expert axis sharded over `model`
+  (expert parallelism — the `data`->`model` reshard is the all-to-all);
+* overflow tokens are dropped (standard capacity-factor semantics), their
+  residual path carries them through;
+* aux load-balancing loss (Switch): E * sum_e f_e * P_e.
+
+DBRX (16e top-4), Llama-4 Maverick (128e top-1 + 1 shared), and Jamba
+(16e top-2, every other layer) all instantiate this module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.ffn import ffn_forward, init_ffn
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+
+    def expert_stack(k, shape_in, shape_out):
+        keys = jax.random.split(k, e)
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, shape_in, shape_out))(keys)
+
+    params = {
+        "router": common.dense_init(kr, d, e),
+        "w_gate": expert_stack(kg, d, ff),  # [E, d, ff]
+        "w_up": expert_stack(ku, d, ff),
+        "w_down": jax.vmap(
+            lambda kk: common.dense_init(kk, ff, d))(jax.random.split(kd, e)),
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = init_ffn(
+            ks, cfg, d_ff=ff * cfg.num_shared_experts)
+    return params
+
+
+def capacity_per_group(cfg: ModelConfig, group_len: int) -> int:
+    c = int(group_len * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(1, c)
+
+
+def moe_forward(params, cfg: ModelConfig, x: jax.Array):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity_per_group(cfg, S)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [B, S, E]
+    topk_p, topk_idx = jax.lax.top_k(probs, K)  # [B, S, K]
+    topk_w = (topk_p / jnp.maximum(
+        jnp.sum(topk_p, axis=-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # position of each (token, k) assignment within its expert's capacity,
+    # computed per batch row (local cumsum; see module docstring)
+    e_flat = topk_idx.reshape(B, S * K)  # row-major (token-major) order
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # [B, S*K, E]
+    pos = jnp.einsum("bte,bte->bt", jnp.cumsum(onehot, axis=1), onehot) - 1
+    keep = (pos < C).astype(x.dtype)  # [B, S*K]
+
+    # scatter tokens into the dispatch buffer [B, E, C, d].  The scatter
+    # must stay LOCAL to the token shard (batch over dp, experts unsharded
+    # here) — constraining the buffer expert-sharded at this point makes
+    # GSPMD replicate the whole dispatch (measured 100+ GiB/device on
+    # dbrx).  The expert-parallel reshard happens *after* the scatter, as
+    # one clean all-to-all.
+    #
+    # The k-fold token duplication is a broadcast+reshape, NOT a gather
+    # (x[:, arange(S*K)//K, :]): the gather's backward is an unsorted
+    # scatter-add that the partitioner replicates — measured 240 GB/device
+    # of f32 all-reduce on the jamba train cell.
+    xt = jnp.broadcast_to(x[:, :, None, :], (B, S, K, d)).reshape(B, S * K, d)
+    xt = xt * keep[..., None]  # [B, S*K, d]
+    xt = common.constrain(xt, ("dp", None, None))
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # dispatch/combine as vmapped-per-row scatter/gather: the batched forms
+    # carry operand_batching_dims, which GSPMD partitions along `dp`; the
+    # flat (b_idx, e, pos) forms replicate both the scatter's backward and
+    # the combine gather at global batch in f32 (measured 240 GB/device of
+    # all-reduce on jamba train_4k)
+    def dispatch_row(x_row, e_row, pos_row):
+        return jnp.zeros((E, C, d), x.dtype).at[e_row, pos_row].add(
+            x_row, mode="drop")
+
+    buf = jax.vmap(dispatch_row)(xt, e_flat, pos_c)
+    # expert-major layout: E over `model` (the data->expert all-to-all)
+    buf = common.constrain(buf, ("dp", "tp", None, None))
+
+    # expert computation (E sharded over `model`)
+    gate = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(x.dtype))
+    up = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(x.dtype))
+    h = common.gated_act(cfg.act if cfg.act != "gelu" else "swiglu", gate, up)
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(x.dtype))
+    # all-to-all back to token-major before the (local) combine gather
+    out_buf = common.constrain(out_buf, ("dp", None, None, None))
+
+    # combine: gather each assignment's output, weight, and sum over k
+    def combine_row(buf_row, e_row, pos_row):
+        return buf_row[e_row, pos_row]
+
+    y_flat = jax.vmap(combine_row)(out_buf, e_flat, pos_c) * keep[..., None]
+    y_flat = common.constrain(y_flat, ("dp", None, None))
+    y = (y_flat.reshape(B, S, K, d)
+         * topk_w[..., None]).sum(axis=2).astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        y = y + ffn_forward(params["shared"], cfg, x)
+
+    # Switch aux loss: fraction-dispatched x mean router prob, per expert
+    frac = jnp.mean(
+        jax.nn.one_hot(topk_idx.reshape(-1), E, dtype=jnp.float32), axis=0)
+    mean_p = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(frac * mean_p) * cfg.router_aux_weight
+    return y, aux

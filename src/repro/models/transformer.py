@@ -1,0 +1,349 @@
+"""Decoder-only model assembly: dense, MoE, SSM (Mamba-2), and hybrid (Jamba).
+
+One scanned, homogeneous block stack per family (compile time stays flat in
+depth — an 80-layer qwen2-72b compiles one block body):
+
+    dense / moe : [norm -> attn -> +res] [norm -> ffn|moe -> +res]   x L
+    ssm         : [norm -> mamba -> +res]                            x L
+    hybrid      : super-blocks of `attn_layer_period` sublayers, one
+                  attention sublayer per block (Jamba's 1:7), FFN/MoE
+                  alternating per `moe_layer_period`; scan over super-blocks.
+
+Modality frontends (internvl2 vision, seamless speech) are stubs per the
+harness spec: `forward` accepts precomputed frontend embeddings which are
+projected and prepended to the token sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.attention import (
+    KVCache,
+    attn_decode_step,
+    attn_forward,
+    init_attn,
+    init_cache,
+)
+from repro.models.ffn import ffn_forward, init_ffn
+from repro.models.mamba2 import (
+    MambaCache,
+    init_mamba,
+    init_mamba_cache,
+    mamba_decode_step,
+    mamba_forward,
+)
+from repro.models.moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply by family
+# ---------------------------------------------------------------------------
+def _layer_is_moe(cfg: ModelConfig, sub: int) -> bool:
+    return cfg.is_moe and (sub % cfg.moe_layer_period
+                           == cfg.moe_layer_period - 1)
+
+
+def init_block(key, cfg: ModelConfig):
+    """One scanned block's parameters."""
+    if cfg.family == "ssm":
+        k1, k2 = jax.random.split(key)
+        return {"norm_mix": common.init_norm(cfg.norm, cfg.d_model),
+                "mamba": init_mamba(k1, cfg)}
+
+    if cfg.is_hybrid:
+        period = cfg.attn_layer_period
+        keys = jax.random.split(key, 2 * period + 1)
+        block: dict[str, Any] = {"attn": init_attn(keys[0], cfg)}
+        mamba_keys = keys[1:period]  # period-1 mamba sublayers
+        block["mamba"] = common.init_stacked(
+            keys[period], period - 1, lambda k: init_mamba(k, cfg))
+        ffn_dense, ffn_moe = [], []
+        for sub in range(period):
+            if _layer_is_moe(cfg, sub):
+                ffn_moe.append(sub)
+            else:
+                ffn_dense.append(sub)
+        block["ffn"] = common.init_stacked(
+            keys[period + 1], len(ffn_dense), lambda k: init_ffn(k, cfg))
+        block["moe"] = common.init_stacked(
+            keys[period + 2], len(ffn_moe), lambda k: init_moe(k, cfg))
+        block["norm_mix"] = jax.vmap(
+            lambda _: common.init_norm(cfg.norm, cfg.d_model))(
+                jnp.arange(period))
+        block["norm_ffn"] = jax.vmap(
+            lambda _: common.init_norm(cfg.norm, cfg.d_model))(
+                jnp.arange(period))
+        return block
+
+    # dense / moe transformer layer
+    k1, k2 = jax.random.split(key)
+    block = {
+        "norm_attn": common.init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attn(k1, cfg),
+        "norm_ffn": common.init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.is_moe:
+        block["moe"] = init_moe(k2, cfg)
+    else:
+        block["ffn"] = init_ffn(k2, cfg)
+    return block
+
+
+def _sub(tree, i: int):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def apply_block(block, cfg: ModelConfig, x: jax.Array,
+                positions: Optional[jax.Array]):
+    """Full-sequence block application -> (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = common.apply_norm(block["norm_mix"], x)
+        return x + mamba_forward(block["mamba"], cfg, h), aux
+
+    if cfg.is_hybrid:
+        period = cfg.attn_layer_period
+        mamba_i = dense_i = moe_i = 0
+        for sub in range(period):
+            h = common.apply_norm(_sub(block["norm_mix"], sub), x)
+            if sub == cfg.attn_layer_offset:
+                x = x + attn_forward(block["attn"], cfg, h,
+                                     positions=positions,
+                                     rope=cfg.pos_embed == "rope")
+            else:
+                x = x + mamba_forward(_sub(block["mamba"], mamba_i), cfg, h)
+                mamba_i += 1
+            h = common.apply_norm(_sub(block["norm_ffn"], sub), x)
+            if _layer_is_moe(cfg, sub):
+                y, a = moe_forward(_sub(block["moe"], moe_i), cfg, h)
+                aux = aux + a
+                moe_i += 1
+            else:
+                y = ffn_forward(_sub(block["ffn"], dense_i), cfg, h)
+                dense_i += 1
+            x = x + y
+        return x, aux
+
+    h = common.apply_norm(block["norm_attn"], x)
+    x = x + attn_forward(block["attn"], cfg, h, positions=positions,
+                         rope=cfg.pos_embed == "rope")
+    h = common.apply_norm(block["norm_ffn"], x)
+    if cfg.is_moe:
+        y, aux = moe_forward(block["moe"], cfg, h)
+    else:
+        y = ffn_forward(block["ffn"], cfg, h)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# model init / forward
+# ---------------------------------------------------------------------------
+def num_blocks(cfg: ModelConfig) -> int:
+    if cfg.is_hybrid:
+        if cfg.num_layers % cfg.attn_layer_period:
+            raise ValueError("hybrid num_layers must divide attn_layer_period")
+        return cfg.num_layers // cfg.attn_layer_period
+    return cfg.num_layers
+
+
+def init_model(key, cfg: ModelConfig):
+    ke, kb, kf, kn = jax.random.split(key, 4)
+    params = {
+        "embed": common.embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": common.init_stacked(kb, num_blocks(cfg),
+                                      lambda k: init_block(k, cfg)),
+        "norm_out": common.init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.embed_init(kn, cfg.vocab_size, cfg.d_model)
+    if cfg.frontend_tokens:
+        params["frontend_proj"] = common.dense_init(
+            kf, cfg.frontend_dim or cfg.d_model, cfg.d_model)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct pytree — the dry-run's no-allocation init."""
+    out = jax.eval_shape(lambda k: init_model(k, cfg),
+                         jax.random.PRNGKey(0))
+    if dtype is not None:
+        out = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), out)
+    return out
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array,
+                 dtype) -> jax.Array:
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    table = params.get("unembed", params["embed"])
+    return x @ table.astype(x.dtype).T
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            frontend: Optional[jax.Array] = None):
+    """tokens [B, S] (+ optional frontend embeds [B, F, dim]) -> logits, aux.
+
+    With a frontend, output logits cover the full (F + S) sequence; callers
+    slice as needed.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_tokens(params, cfg, tokens, dtype)
+    if frontend is not None:
+        fx = frontend.astype(dtype) @ params["frontend_proj"].astype(dtype)
+        x = jnp.concatenate([fx, x], axis=1)
+    S = x.shape[1]
+    if cfg.pos_embed == "sinusoidal":
+        x = x + common.sinusoidal_positions(S, cfg.d_model).astype(dtype)
+        positions = None
+    else:
+        positions = jnp.arange(S)
+
+    stream_spec = ("dp", "tp", None) if cfg.sequence_parallel \
+        else ("dp", None, None)
+    x = common.constrain(x, stream_spec)
+
+    def body(carry, block):
+        h, aux = carry
+        h, a = apply_block(block, cfg, h, positions)
+        h = common.constrain(h, stream_spec)
+        return (h, aux + a), None
+
+    body_fn = body
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body_fn = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"],
+                               unroll=True if cfg.scan_unroll else 1)
+    x = common.apply_norm(params["norm_out"], x)
+    logits = unembed(params, cfg, x)
+    return common.constrain(logits, ("dp", None, "tp")), aux
+
+
+# ---------------------------------------------------------------------------
+# decode path (serve_step)
+# ---------------------------------------------------------------------------
+class BlockCache(NamedTuple):
+    """Per-block decode cache; unused fields are () placeholders."""
+
+    attn: Any
+    mamba: Any
+
+
+def init_block_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Stacked caches matching the scanned block stack."""
+    nb = num_blocks(cfg)
+
+    def one(_):
+        if cfg.family == "ssm":
+            return BlockCache(attn=(), mamba=init_mamba_cache(cfg, batch))
+        if cfg.is_hybrid:
+            stacked_mamba = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.attn_layer_period - 1,) + a.shape),
+                init_mamba_cache(cfg, batch))
+            return BlockCache(attn=init_cache(cfg, batch, max_len, dtype),
+                              mamba=stacked_mamba)
+        return BlockCache(attn=init_cache(cfg, batch, max_len, dtype),
+                          mamba=())
+
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one(i) for i in range(nb)])
+
+
+def apply_block_decode(block, cfg: ModelConfig, cache: BlockCache,
+                       x: jax.Array):
+    """One-token decode through one block -> (cache, x)."""
+    if cfg.family == "ssm":
+        h = common.apply_norm(block["norm_mix"], x)
+        mcache, y = mamba_decode_step(block["mamba"], cfg, cache.mamba, h)
+        return BlockCache(attn=(), mamba=mcache), x + y
+
+    if cfg.is_hybrid:
+        period = cfg.attn_layer_period
+        mamba_i = dense_i = moe_i = 0
+        attn_cache, mamba_caches = cache.attn, cache.mamba
+        for sub in range(period):
+            h = common.apply_norm(_sub(block["norm_mix"], sub), x)
+            if sub == cfg.attn_layer_offset:
+                attn_cache, y = attn_decode_step(block["attn"], cfg,
+                                                 attn_cache, h)
+            else:
+                mc = _sub(mamba_caches, mamba_i)
+                mc, y = mamba_decode_step(_sub(block["mamba"], mamba_i),
+                                          cfg, mc, h)
+                mamba_caches = jax.tree.map(
+                    lambda acc, new, i=mamba_i: acc.at[i].set(new),
+                    mamba_caches, mc)
+                mamba_i += 1
+            x = x + y
+            h = common.apply_norm(_sub(block["norm_ffn"], sub), x)
+            if _layer_is_moe(cfg, sub):
+                y, _ = moe_forward(_sub(block["moe"], moe_i), cfg, h)
+                moe_i += 1
+            else:
+                y = ffn_forward(_sub(block["ffn"], dense_i), cfg, h)
+                dense_i += 1
+            x = x + y
+        return BlockCache(attn=attn_cache, mamba=mamba_caches), x
+
+    attn_cache, y = attn_decode_step(block["attn"], cfg, cache.attn,
+                                     common.apply_norm(block["norm_attn"], x))
+    x = x + y
+    h = common.apply_norm(block["norm_ffn"], x)
+    if cfg.is_moe:
+        y, _ = moe_forward(block["moe"], cfg, h)
+    else:
+        y = ffn_forward(block["ffn"], cfg, h)
+    return cache._replace(attn=attn_cache), x + y
+
+
+def decode_step(params, cfg: ModelConfig, caches, token: jax.Array):
+    """token [B, 1] -> (new_caches, logits [B, 1, V]).
+
+    Caches are a fori_loop *carry* updated in place per layer
+    (dynamic_update_index_in_dim), not scan xs/ys: the scan formulation
+    triple-buffers the full cache (input xs + stacked ys + loop temp —
+    measured 3x cache HBM on the 32k decode cells); the carry form leaves
+    one working copy plus the donated input alias.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_tokens(params, cfg, token, dtype)
+    nb = num_blocks(cfg)
+
+    def take(tree, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            tree)
+
+    def body(i, state):
+        x, caches = state
+        block = take(params["blocks"], i)
+        cache_i, x = apply_block_decode(block, cfg, take(caches, i), x)
+        caches = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), i, 0),
+            caches, cache_i)
+        return (x, caches)
+
+    if cfg.scan_unroll:
+        for i in range(nb):
+            x, caches = body(i, (x, caches))
+    else:
+        x, caches = jax.lax.fori_loop(0, nb, body, (x, caches))
+    x = common.apply_norm(params["norm_out"], x)
+    return caches, unembed(params, cfg, x)

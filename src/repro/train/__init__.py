@@ -1,0 +1,12 @@
+"""Training/serving runtime: optimizer, steps, checkpointing, compression."""
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamState, OptimizerConfig
+from repro.train.serve_step import greedy_generate, make_decode_step, make_prefill
+from repro.train.train_step import make_eval_step, make_loss_fn, make_train_step
+
+__all__ = [
+    "AdamState", "CheckpointManager", "OptimizerConfig", "greedy_generate",
+    "make_decode_step", "make_eval_step", "make_loss_fn", "make_prefill",
+    "make_train_step",
+]

@@ -1,0 +1,98 @@
+"""Int8 gradient compression with error feedback (cross-pod DP reduction).
+
+Table I's economics: inter-pod (DCN/WAN-class) bandwidth is orders of
+magnitude more expensive than intra-pod ICI, so the gradient bytes that
+cross the `pod` axis are the ones worth compressing.  Scheme (1-bit-Adam /
+PowerSGD lineage, here 8-bit absmax):
+
+    g_eff = g + error                        (error feedback carry)
+    q     = int8_quantize(g_eff)             per-tensor absmax scale
+    G     = ring-reduce(q) via all_to_all    int8 on the wire both hops
+    error = g_eff - dequant(q)               (local residual)
+
+Implemented with shard_map over the reduction axis: reduce-scatter as
+all_to_all of int8 chunks + local f32 sum + requantize + int8 all_gather —
+2 bytes/element on the wire vs 4 (f32 ring all-reduce ~2x2B), with the
+quantization error carried forward rather than lost (convergence-neutral
+in expectation; tests/test_train.py checks the error-feedback invariant).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_per_tensor(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_per_tensor(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _compressed_allreduce_flat(x: jax.Array, axis_name: str,
+                               n_dev: int) -> jax.Array:
+    """All-reduce-mean of a flat f32 vector with int8 wire format.
+
+    Runs inside shard_map: `x` is this device's local gradient (replica).
+    """
+    pad = (-x.size) % n_dev
+    xp = jnp.pad(x, (0, pad)).reshape(n_dev, -1)
+    q, scale = quantize_per_tensor(xp)
+    # reduce-scatter: each device receives its chunk from every peer
+    q_recv = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)  # [n_dev, chunk]
+    scales = jax.lax.all_gather(scale, axis_name)  # [n_dev]
+    partial = jnp.sum(q_recv.astype(jnp.float32)
+                      * scales[:, None], axis=0) / n_dev  # mean
+    # broadcast the reduced chunks back: int8 on the wire again
+    q2, s2 = quantize_per_tensor(partial)
+    q_all = jax.lax.all_gather(q2, axis_name)  # [n_dev, chunk]
+    s_all = jax.lax.all_gather(s2, axis_name)  # [n_dev]
+    full = (q_all.astype(jnp.float32) * s_all[:, None]).reshape(-1)
+    return full[:x.size]
+
+
+def compressed_psum_mean(grads, axis_name: str, n_dev: int):
+    """Tree-wide compressed all-reduce-mean (call inside shard_map)."""
+    flat, treedef = jax.tree.flatten(grads)
+    sizes = [g.size for g in flat]
+    shapes = [g.shape for g in flat]
+    cat = jnp.concatenate([g.astype(jnp.float32).reshape(-1) for g in flat])
+    red = _compressed_allreduce_flat(cat, axis_name, n_dev)
+    out, off = [], 0
+    for size, shape in zip(sizes, shapes):
+        out.append(red[off:off + size].reshape(shape))
+        off += size
+    return treedef.unflatten(out)
+
+
+def with_error_feedback(grads, error_state):
+    """Apply the EF carry before compression: returns (g_eff, residual_fn).
+
+    Usage:
+        g_eff = tree_add(grads, error)
+        reduced = compressed_psum_mean(g_eff, ...)
+        new_error = tree_sub(g_eff, local_dequant(local_quant(g_eff)))
+    For the per-tensor scheme the residual is computed leaf-wise here.
+    """
+    g_eff = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                         grads, error_state)
+
+    def residual(g):
+        q, s = quantize_per_tensor(g)
+        return g - dequantize_per_tensor(q, s)
+
+    new_error = jax.tree.map(residual, g_eff)
+    return g_eff, new_error
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,68 @@
+"""Serving steps: prefill and batched incremental decode.
+
+`decode_step` is what the decode_32k / long_500k dry-run cells lower: one
+new token against a seq_len-deep cache, cache sequence axis sharded over
+`model` (split-K attention; see models/attention.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.models import encdec as encdec_mod
+from repro.models.model_zoo import _padded_cfg
+
+
+def make_prefill(model: Model):
+    """Full-sequence forward (inference): returns logits only."""
+
+    def prefill(params, **inputs):
+        logits, _ = model.forward(params, **inputs)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, state, token):
+        return model.decode_step(params, state, token)
+
+    return decode_step
+
+
+def greedy_generate(model: Model, params, prompt_tokens: jax.Array,
+                    num_steps: int, max_len: int,
+                    frontend: Optional[jax.Array] = None):
+    """End-to-end greedy decoding loop (examples/serving driver).
+
+    Prompt is consumed token-by-token through the decode path (simple and
+    universal across families); production prefill would batch it.
+    """
+    cfg = model.cfg
+    B, S = prompt_tokens.shape
+    if cfg.is_encdec:
+        pcfg = _padded_cfg(cfg)
+        memory = encdec_mod.encode(params, pcfg, frontend)
+        state = model.init_decode(params, B, max_len, memory=memory)
+    else:
+        state = model.init_decode(params, B, max_len)
+
+    step_fn = jax.jit(model.decode_step)
+
+    # feed the prompt
+    logits = None
+    for t in range(S):
+        state, logits = step_fn(params, state, prompt_tokens[:, t:t + 1])
+
+    out = []
+    token = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for _ in range(num_steps):
+        out.append(token)
+        state, logits = step_fn(params, state, token)
+        token = jnp.argmax(logits[:, -1:, :cfg.vocab_size],
+                           axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,107 @@
+"""Training step: loss, gradients, optimizer update, microbatching.
+
+All control flow is jax.lax (`scan` for gradient accumulation), so a single
+`jax.jit(train_step)` lowers the full step — which is exactly what the
+multi-pod dry-run compiles per (arch x shape x mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.models.common import cross_entropy
+from repro.train import optimizer as opt_mod
+
+
+def make_loss_fn(model: Model):
+    cfg = model.cfg
+
+    def loss_fn(params, batch: Dict[str, Any]):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, aux = model.forward(params, **inputs)
+        labels = batch["labels"]
+        if cfg.frontend_tokens and not cfg.is_encdec:
+            # drop the vision/audio prefix positions from the LM loss
+            logits = logits[:, cfg.frontend_tokens:, :]
+        # next-token objective: logits[t] predicts labels[t+1]
+        loss, metrics = cross_entropy(logits[:, :-1, :], labels[:, 1:])
+        total = loss + aux
+        metrics = dict(metrics, moe_aux=aux, loss=total)
+        return total, metrics
+
+    return loss_fn
+
+
+def _split_microbatches(batch, num_micro: int):
+    def reshape(x):
+        b = x.shape[0]
+        if b % num_micro:
+            raise ValueError(f"batch {b} not divisible by {num_micro} microbatches")
+        return x.reshape(num_micro, b // num_micro, *x.shape[1:])
+
+    return jax.tree.map(reshape, batch)
+
+
+def make_train_step(model: Model, opt_cfg: opt_mod.OptimizerConfig,
+                    num_microbatches: int = 1, grads_dtype: str = "float32"):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    num_microbatches > 1 accumulates gradients with a lax.scan — the
+    device-memory lever for the train_4k cells (activation footprint scales
+    1/num_microbatches; remat inside the model handles the rest).
+
+    grads_dtype "bfloat16" halves the gradient buffer (the second-largest
+    resident tree after params): the accumulation/clip/Adam math still runs
+    in f32 — only the materialized tree is bf16.  Loses ~8 mantissa bits on
+    the stored gradient; stochastically neutral at LLM batch sizes and the
+    difference between fitting and not fitting llama4-400b on one pod.
+    """
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    gdtype = jnp.dtype(grads_dtype)
+
+    def cast_g(tree):
+        return jax.tree.map(lambda g: g.astype(gdtype), tree)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = cast_g(grads)
+        else:
+            micro = _split_microbatches(batch, num_microbatches)
+
+            def body(acc, mb):
+                (_, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(gdtype),
+                                   acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdtype), params)
+            grads, ms = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) / num_microbatches
+                           ).astype(gdtype), grads)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        new_params, new_state, opt_metrics = opt_mod.update(
+            grads, opt_state, params, opt_cfg)
+        return new_params, new_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

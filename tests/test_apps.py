@@ -1,0 +1,120 @@
+"""The paper's applications (§V): calibration, composite, segmentation."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.apps import calibration, composite, segmentation
+from repro.configs.festivus_imagery import SMOKE as IMG_CFG
+from repro.core import ChunkStore, Festivus, FlakyObjectStore, InMemoryObjectStore
+from repro.data import imagery
+
+
+@pytest.fixture
+def scene_store(chunkstore):
+    spec = imagery.SceneSpec(tile_px=64, temporal_depth=6, seed=5)
+    imagery.write_scene_stack(chunkstore, "tiles/t0", spec, chunk_px=32)
+    return chunkstore, spec
+
+
+# ---------------------------------------------------------------------------
+# calibration (§V.A)
+# ---------------------------------------------------------------------------
+def test_toa_reflectance_formula():
+    meta = calibration.SceneMeta("s", gains=(2e-5, 2e-5), biases=(-0.1, -0.1),
+                                 sun_elevation_deg=30.0, earth_sun_au=1.0)
+    dn = np.full((2, 2, 2), 10000, np.uint16)
+    rho = calibration.toa_reflectance(dn, meta)
+    expected = (10000 * 2e-5 - 0.1) / np.sin(np.radians(30.0))
+    np.testing.assert_allclose(rho, expected, rtol=1e-5)
+
+
+def test_valid_bounding_rect():
+    dn = np.zeros((10, 12, 2), np.uint16)
+    dn[2:7, 3:9] = 100
+    assert calibration.valid_bounding_rect(dn) == (2, 3, 7, 9)
+
+
+def test_campaign_processes_all_scenes(chunkstore):
+    for i in range(3):
+        calibration.make_raw_scene(chunkstore, f"scenes/s{i}", 96, 96, seed=i)
+    out = calibration.run_campaign(chunkstore, chunkstore,
+                                   [f"scenes/s{i}" for i in range(3)],
+                                   num_workers=2, tile_px=48)
+    assert out["scenes"] == 3
+    assert all(r["tiles"] > 0 for r in out["results"].values())
+
+
+def test_campaign_survives_flaky_store():
+    """Pre-emptible-cloud realism: transient store failures must not kill
+    the campaign (retry at the VFS layer + task retry above it)."""
+    inner = InMemoryObjectStore()
+    cs_in = ChunkStore(Festivus(inner), "raw")
+    for i in range(2):
+        calibration.make_raw_scene(cs_in, f"scenes/s{i}", 64, 64, seed=i)
+    flaky = FlakyObjectStore(inner, failure_rate=0.5, seed=0)
+    cs_flaky = ChunkStore(Festivus(flaky, meta=cs_in.fs.meta), "raw")
+    out = calibration.run_campaign(cs_flaky, cs_flaky,
+                                   ["scenes/s0", "scenes/s1"],
+                                   num_workers=2)
+    assert out["scenes"] == 2
+    assert flaky.injected_failures > 0
+
+
+# ---------------------------------------------------------------------------
+# composite (§V.C)
+# ---------------------------------------------------------------------------
+def test_composite_prefers_cloud_free(scene_store):
+    cs, spec = scene_store
+    imgs, valid = imagery.read_scene_stack(cs, "tiles/t0")
+    comp = composite.composite_tile(imgs, IMG_CFG, impl="ref")
+    assert comp.shape == imgs.shape[1:]
+    assert np.isfinite(comp).all()
+    # composite should be darker than the cloudiest single frame (clouds
+    # are bright flat ~0.7); compare mean brightness
+    cloudiest = imgs.mean(axis=(1, 2, 3)).argmax()
+    assert comp.mean() < imgs[cloudiest].mean()
+
+
+def test_cloud_score_flags_bright_flat(scene_store):
+    cs, spec = scene_store
+    imgs, valid = imagery.read_scene_stack(cs, "tiles/t0")
+    score = composite.cloud_score(imgs, IMG_CFG)
+    # cloud pixels (invalid) should score higher than clear pixels
+    assert score[~valid].mean() > score[valid].mean()
+
+
+# ---------------------------------------------------------------------------
+# segmentation (§V.B)
+# ---------------------------------------------------------------------------
+def test_connected_components_labels_regions():
+    import jax.numpy as jnp
+
+    mask = np.zeros((8, 8), bool)
+    mask[1:3, 1:3] = True
+    mask[5:7, 5:7] = True
+    labels = np.asarray(segmentation.connected_components(jnp.asarray(mask)))
+    ids = set(labels[mask])
+    assert len(ids) == 2 and 0 not in ids
+    assert (labels[~mask] == 0).all()
+
+
+def test_segmentation_recovers_field_count(scene_store):
+    cs, spec = scene_store
+    imgs, valid = imagery.read_scene_stack(cs, "tiles/t0")
+    labels, geo = segmentation.segment_tile(imgs, valid, IMG_CFG, impl="ref")
+    n_found = len(geo["features"])
+    # within 50% of the true Voronoi field count (edges can merge slivers)
+    assert abs(n_found - spec.num_fields) <= spec.num_fields // 2, n_found
+
+
+def test_segmentation_geojson_contract(scene_store):
+    cs, spec = scene_store
+    out = segmentation.segment_to_store(cs, "tiles/t0", IMG_CFG)
+    raw = cs.fs.read(f"{cs.root}/fields/tiles/t0/fields.geojson")
+    geo = json.loads(raw.decode())
+    assert geo["type"] == "FeatureCollection"
+    for feat in geo["features"]:
+        assert feat["geometry"]["type"] == "Polygon"
+        assert feat["properties"]["pixels"] >= 8

@@ -1,0 +1,182 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+shape checks, no NaNs — as the harness requires for every assigned arch —
+plus decode-consistency and MoE behaviour checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import ShapeSpec
+from repro.models import build, decode_specs, input_specs
+from repro.models import encdec as encdec_mod
+from repro.models.model_zoo import _padded_cfg, padded_vocab
+from repro.train import OptimizerConfig, make_train_step
+from repro.train import optimizer as opt_mod
+
+KEY = jax.random.PRNGKey(0)
+TINY_TRAIN = ShapeSpec("tiny_train", 32, 2, "train")
+
+ALL_ARCHS = list_archs()
+
+
+def make_inputs(cfg, shape, key):
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(key, s.shape, 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(key, s.shape, s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, "smoke")
+    model = build(cfg)
+    params = model.init(KEY)
+    inputs = make_inputs(cfg, TINY_TRAIN, KEY)
+    logits, aux = model.forward(
+        params, **{k: v for k, v in inputs.items() if k != "labels"})
+    B = TINY_TRAIN.global_batch
+    expect_seq = TINY_TRAIN.seq_len if not cfg.frontend_tokens \
+        else TINY_TRAIN.seq_len  # frontend prefix included in output
+    assert logits.shape[0] == B
+    assert logits.shape[-1] == padded_vocab(cfg)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_updates_and_finite(arch):
+    cfg = get_config(arch, "smoke")
+    model = build(cfg)
+    params = model.init(KEY)
+    opt_cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=1,
+                              decay_steps=10)
+    opt_state = opt_mod.init(params, opt_cfg)
+    step = make_train_step(model, opt_cfg)
+    batch = make_inputs(cfg, TINY_TRAIN, KEY)
+    new_params, new_state, metrics = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(new_state.step) == 1
+    # at least one parameter moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+        if hasattr(a, "shape") and a.dtype.kind == "f")
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_matches_forward(arch):
+    """Token-by-token decode must agree with the full forward pass.
+
+    MoE archs run with capacity_factor=E so no token drops: otherwise the
+    full-sequence pass drops different tokens than per-token decode (both
+    correct, but not comparable)."""
+    import dataclasses
+
+    cfg = get_config(arch, "smoke")
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    model = build(cfg)
+    params = model.init(KEY)
+    B, S = 2, 8
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    pcfg = _padded_cfg(cfg)
+
+    if cfg.is_encdec:
+        frontend = jax.random.normal(KEY, (B, 4, cfg.frontend_dim),
+                                     jnp.float32)
+        logits_full, _ = model.forward(params, tokens=tokens,
+                                       frontend=frontend)
+        memory = encdec_mod.encode(params, pcfg, frontend)
+        state = model.init_decode(params, B, S + 1, memory=memory)
+    elif cfg.frontend_tokens:
+        pytest.skip("vlm decode covered via decoder-only path without prefix")
+    else:
+        logits_full, _ = model.forward(params, tokens=tokens)
+        state = model.init_decode(params, B, S + 1)
+
+    outs = []
+    for t in range(S):
+        state, logits = model.decode_step(params, state, tokens[:, t:t + 1])
+        outs.append(logits)
+    dec = jnp.concatenate(outs, axis=1).astype(jnp.float32)
+    full = logits_full.astype(jnp.float32)
+    # bf16 internals: compare argmax agreement + loose numeric tolerance
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=0.15, atol=0.15)
+    agree = (dec.argmax(-1) == full.argmax(-1)).mean()
+    assert agree > 0.9, f"{arch}: decode/forward argmax agreement {agree}"
+
+
+def test_moe_aux_loss_and_routing():
+    cfg = get_config("dbrx-132b", "smoke")
+    model = build(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    _, aux = model.forward(params, tokens=tokens)
+    assert float(aux) > 0.0  # load-balance loss engaged
+    # aux is bounded for near-uniform routing: E * sum(f*p) * w ~ w
+    assert float(aux) < 10 * cfg.router_aux_weight * cfg.num_experts
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.models.moe import capacity_per_group
+    cfg = get_config("dbrx-132b", "smoke")
+    c = capacity_per_group(cfg, group_len=64)
+    assert c >= 64 * cfg.experts_per_token // cfg.num_experts
+
+
+def test_vlm_frontend_changes_logits():
+    cfg = get_config("internvl2-1b", "smoke")
+    model = build(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size, jnp.int32)
+    f1 = jax.random.normal(KEY, (1, cfg.frontend_tokens, cfg.frontend_dim))
+    f2 = f1 + 1.0
+    l1, _ = model.forward(params, tokens=tokens, frontend=f1)
+    l2, _ = model.forward(params, tokens=tokens, frontend=f2)
+    assert l1.shape[1] == cfg.frontend_tokens + 8
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_mamba_state_is_context_size_independent():
+    """The long_500k applicability argument: SSM decode state is O(1)."""
+    cfg = get_config("mamba2-2.7b", "smoke")
+    model = build(cfg)
+    params = model.init(KEY)
+    s_small = jax.eval_shape(lambda: model.init_decode(params, 1, 64))
+    s_large = jax.eval_shape(lambda: model.init_decode(params, 1, 65536))
+    small = sum(np.prod(l.shape) for l in jax.tree.leaves(s_small))
+    large = sum(np.prod(l.shape) for l in jax.tree.leaves(s_large))
+    assert small == large
+
+
+def test_param_count_estimates_match_abstract():
+    """config.param_count() tracks the real tree within vocab padding."""
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch, "smoke")
+        model = build(cfg)
+        tree = model.abstract_params()
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+        est = cfg.param_count()
+        assert abs(actual - est) / actual < 0.25, (arch, actual, est)
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs.base import SHAPES
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for name in cfg.shape_names:
+            specs = input_specs(cfg, SHAPES[name])
+            assert "tokens" in specs or cfg.is_encdec
+            if SHAPES[name].kind == "decode":
+                d = decode_specs(get_config(arch, "smoke"), SHAPES[name])
+                assert "state" in d and "token" in d

@@ -1,0 +1,89 @@
+"""Paper-claim validation: the calibrated model must reproduce Tables I,
+III, IV within stated tolerance (this is the §Paper-repro evidence)."""
+
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+def test_table_iv_festivus_fit():
+    """t(B) = t0 + B/peak fits every festivus row within 25% (LSQ over the
+    11 published block sizes; mid-range rows carry the paper's own noise)."""
+    rows = [(b, f) for b, f, _ in pm.paper_table_iv_rows()]
+    t0, peak = pm.fit_service_time_params(rows)
+    assert 1.5e-3 < t0 < 4e-3
+    assert 1.5e9 < peak < 2.2e9
+    for blocksize, mb_s in rows:
+        model = pm.FESTIVUS_STORE_MODEL.single_request_bandwidth(blocksize)
+        assert model == pytest.approx(mb_s * 1e6, rel=0.25), blocksize
+
+
+def test_table_iv_gcsfuse_fit():
+    rows = [(b, g) for b, _, g in pm.paper_table_iv_rows()]
+    for blocksize, mb_s in rows:
+        model = pm.GCSFUSE_STORE_MODEL.single_request_bandwidth(blocksize)
+        assert model == pytest.approx(mb_s * 1e6, rel=0.5), blocksize
+
+
+def test_paper_headline_18x_at_4mb():
+    """'For random access of 4 MB chunks, festivus outperforms gcsfuse by a
+    factor of 18.'"""
+    b = 4 * pm.MiB
+    ratio = (pm.FESTIVUS_STORE_MODEL.single_request_bandwidth(b)
+             / pm.GCSFUSE_STORE_MODEL.single_request_bandwidth(b))
+    assert ratio == pytest.approx(18.0, rel=0.15)
+
+
+def test_table_iii_cluster_scaling():
+    """Aggregate bandwidth vs node count within 10% of every Table III row."""
+    for vcpus, nodes, gb_s in pm.paper_table_iii_rows():
+        if nodes == 1:
+            continue  # single-node rows exercised in test_single_node below
+        model = pm.cluster_bandwidth(nodes, vcpus, pm.FESTIVUS_STORE_MODEL,
+                                     block_bytes=4 * pm.MiB, inflight=32)
+        assert model == pytest.approx(gb_s * 1e9, rel=0.10), nodes
+
+
+def test_table_iii_single_node_rows():
+    """Single-node rows: NIC-capped per vCPU count.  Tolerance 50%: the
+    paper's 1-vCPU row (0.43 GB/s) exceeds the nominal 2 Gb/s small-VM
+    egress cap — GCE burst behaviour the linear NIC model does not carry;
+    the 4/16/32-vCPU rows land within 25%."""
+    for vcpus, nodes, gb_s in pm.paper_table_iii_rows():
+        if nodes != 1:
+            continue
+        model = pm.single_node_bandwidth(
+            vcpus, pm.FESTIVUS_STORE_MODEL, block_bytes=4 * pm.MiB,
+            inflight=32)
+        tol = 0.5 if vcpus == 1 else 0.25
+        assert model == pytest.approx(gb_s * 1e9, rel=tol), vcpus
+
+
+def test_headline_231_gb_s():
+    """The paper's headline: 231 GB/s aggregate over 512 16-vCPU nodes."""
+    model = pm.cluster_bandwidth(512, 16, pm.FESTIVUS_STORE_MODEL,
+                                 block_bytes=4 * pm.MiB, inflight=32)
+    assert model == pytest.approx(231.3e9, rel=0.05)
+
+
+def test_table_i_teraflop_hour():
+    """§IV.A: $0.84/TF-hour measured; Table I's LINPACK rate implies ~$0.58
+    (pre-emptible list price); same order, below the measured value."""
+    cost = pm.COST_MODEL.teraflop_hour_cost()
+    assert 0.4 < cost < 1.0
+
+
+def test_petabyte_storage_cost():
+    """Table I caption: 1 PB for one year ~ $315,000."""
+    year_s = 31.5e6
+    cost = pm.COST_MODEL.storage_cost(1e15, year_s)
+    assert cost == pytest.approx(315_000, rel=0.02)
+
+
+def test_roofline_terms_bottleneck():
+    terms = pm.roofline_terms(hlo_flops=1e18, hlo_bytes=1e12,
+                              collective_bytes=1e12, chips=256)
+    assert terms["bottleneck"] == "compute_s"
+    terms = pm.roofline_terms(hlo_flops=1e15, hlo_bytes=1e15,
+                              collective_bytes=0, chips=256)
+    assert terms["bottleneck"] == "memory_s"

@@ -1,0 +1,93 @@
+"""End-to-end system behaviour: the full training driver (data plane ->
+mesh -> step -> checkpoint -> resume), serving, and the dry-run's HLO
+collective accounting."""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+from repro.models import build
+from repro.train.serve_step import greedy_generate
+
+
+def _args(**over):
+    base = dict(arch="llama3-8b", variant="smoke", steps=8, batch=4, seq=64,
+                lr=3e-4, seed=0, moments="fp32", microbatches=1,
+                mesh_data=1, mesh_model=1, data_shards=4, store=None,
+                ckpt_every=4, log_every=4, resume=False, preempt_at=0)
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+def test_train_driver_end_to_end(tmp_path):
+    out = train_mod.run(_args(store=str(tmp_path / "store")))
+    assert out["final_step"] == 8
+    assert out["checkpoints"] == [4, 8]
+    assert all(np.isfinite(h["loss"]) for h in out["history"])
+
+
+def test_train_driver_preempt_and_resume(tmp_path):
+    store = str(tmp_path / "store")
+    out1 = train_mod.run(_args(store=store, steps=12, preempt_at=6))
+    assert out1["preempted_at"] == 6
+    # (the async step-4 checkpoint may still be committing at "death" —
+    # exactly like a real pre-emption; out1["resume_from"] is best-effort)
+    out2 = train_mod.run(_args(store=store, steps=12, resume=True))
+    assert out2["final_step"] == 12
+    # resumed history starts after the restored step
+    assert out2["history"][0]["step"] >= 5
+
+
+def test_train_driver_microbatched_matches_steps(tmp_path):
+    out = train_mod.run(_args(steps=4, batch=4, microbatches=2))
+    assert out["final_step"] == 4
+
+
+def test_serve_greedy_generation():
+    cfg = get_config("qwen1.5-4b", "smoke")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.ones((2, 4), jnp.int32)
+    out = greedy_generate(model, params, prompt, num_steps=6, max_len=16)
+    assert out.shape == (2, 6)
+    assert int(out.max()) < cfg.vocab_size
+
+
+def test_collective_parser_on_synthetic_hlo():
+    from repro.launch.dryrun import collective_bytes_per_device
+
+    hlo = """
+    %param.1 = f32[16,128]{1,0} parameter(0)
+    %dot.5 = f32[16,128]{1,0} dot(%param.1, %param.1)
+    %all-reduce.1 = f32[16,128]{1,0} all-reduce(%dot.5), replica_groups=[2,4]<=[8]
+    %all-gather.2 = bf16[64,32]{1,0} all-gather(%shard.7), dimensions={0}
+    %rs.3 = f32[4,32]{1,0} reduce-scatter(%dot.5), dimensions={0}
+    """
+    out = collective_bytes_per_device(hlo)
+    assert out["all-reduce"] == 2.0 * 16 * 128 * 4  # 2x operand (ring)
+    assert out["all-gather"] == 64 * 32 * 2  # result bytes
+    assert out["reduce-scatter"] == 16 * 128 * 4  # operand bytes
+    assert out["total"] == (out["all-reduce"] + out["all-gather"]
+                            + out["reduce-scatter"])
+
+
+def test_traffic_model_orders_of_magnitude():
+    """Analytic HBM model: params dominate decode; logits matter at 150k
+    vocab; activations dominate small-d training."""
+    from repro.configs.base import SHAPES
+    from repro.models import costs
+
+    cfg = get_config("llama3-8b")
+    t_train = costs.traffic_bytes(cfg, SHAPES["train_4k"], 8_000_000_000,
+                                  128256)
+    t_dec = costs.traffic_bytes(cfg, SHAPES["decode_32k"], 8_000_000_000,
+                                128256)
+    assert t_dec["params"] == pytest.approx(4 * 8e9)
+    assert t_dec["cache"] > 0
+    assert t_train["activations"] > t_train["params"]

@@ -1,0 +1,153 @@
+"""Task queue fault tolerance: leases, retries, speculation, elasticity."""
+
+import pytest
+
+from repro.core.metadata import MetadataStore
+from repro.core.taskqueue import DEAD, DONE, PENDING, RUNNING, TaskQueue, run_workers
+from repro.launch.elastic import ElasticTrainer, RangeSpec, submit_step_ranges
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_happy_path():
+    q = TaskQueue()
+    q.submit_batch({f"t{i}": i for i in range(10)})
+    run_workers(q, lambda x: x + 1, num_workers=3)
+    assert q.done()
+    assert q.results()["t3"] == 4
+
+
+def test_priority_order():
+    clock = Clock()
+    q = TaskQueue(clock=clock)
+    q.submit("low", 1, priority=0)
+    q.submit("high", 2, priority=10)
+    assert q.claim("w").task_id == "high"
+    assert q.claim("w").task_id == "low"
+
+
+def test_lease_expiry_requeues():
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", "payload")
+    t1 = q.claim("w1")
+    assert t1 is not None and q.counts()[RUNNING] == 1
+    clock.t = 11.0  # w1 died: lease expired
+    t2 = q.claim("w2")
+    assert t2 is not None and t2.task_id == "t" and t2.attempt == 2
+    assert q.stats["expired"] == 1
+
+
+def test_heartbeat_extends_lease():
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", 0)
+    q.claim("w1")
+    clock.t = 8.0
+    assert q.heartbeat("t", "w1")
+    clock.t = 15.0  # within the extended lease
+    assert q.claim("w2") is None  # not expired
+    assert q.counts()[RUNNING] == 1
+
+
+def test_max_retries_dead_letter():
+    clock = Clock()
+    q = TaskQueue(clock=clock)
+    q.submit("t", 0, max_retries=2)
+    for i in range(3):
+        task = q.claim(f"w{i}")
+        q.fail("t", f"w{i}", "boom")
+    assert q.counts()[DEAD] == 1
+    assert q.dead_tasks()[0].error == "boom"
+
+
+def test_idempotent_completion():
+    q = TaskQueue()
+    q.submit("t", 0)
+    q.claim("w1")
+    assert q.complete("t", "w1", "r1")
+    assert not q.complete("t", "w2", "r2")  # duplicate ignored
+    assert q.results()["t"] == "r1"
+    assert q.stats["duplicate_completions"] == 1
+
+
+def test_straggler_speculation():
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=1000,
+                  speculation_factor=3.0, min_completions_for_speculation=3)
+    for i in range(4):
+        q.submit(f"fast{i}", i)
+    q.submit("slow", 99)
+    # complete 4 fast tasks at t=1 each to establish the median
+    for i in range(4):
+        t = q.claim("w1")
+        clock.t += 1.0
+        q.complete(t.task_id, "w1")
+    slow = q.claim("w1")
+    assert slow.task_id == "slow"
+    clock.t += 50.0  # way beyond 3x median
+    spec = q.claim("w2")  # no pending work -> speculate on the straggler
+    assert spec is not None and spec.task_id == "slow"
+    assert q.stats["speculated"] == 1
+    # first completion wins
+    assert q.complete("slow", "w2", "spec-won")
+    assert not q.complete("slow", "w1", "late")
+    assert q.results()["slow"] == "spec-won"
+
+
+def test_worker_exception_retries_then_succeeds():
+    q = TaskQueue()
+    q.submit("t", 0, max_retries=3)
+    attempts = {"n": 0}
+
+    def handler(_):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise ValueError("flaky")
+        return "ok"
+
+    run_workers(q, handler, num_workers=2)
+    assert q.results()["t"] == "ok"
+    assert q.stats["retried"] == 2
+
+
+# ---------------------------------------------------------------------------
+# elastic trainer on top of the queue
+# ---------------------------------------------------------------------------
+def test_elastic_trainer_preemption_resume():
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=5)
+    submit_step_ranges(q, total_steps=30, range_size=10)
+
+    committed = {"step": 0}
+    steps_run = []
+
+    def mk(worker):
+        return ElasticTrainer(
+            q, worker,
+            step_fn=lambda s: steps_run.append(s),
+            save_fn=lambda s: committed.__setitem__("step", s),
+            restore_fn=lambda: committed["step"],
+            lease_s=5)
+
+    # worker 1 dies mid-second-range (no fail, no complete)
+    w1 = mk("w1")
+    w1.run_once()  # range 0..10 committed
+    assert committed["step"] == 10
+    w1.run_once(die_at_step=13)  # abandons 10..20 at step 13
+    assert committed["step"] == 10  # nothing committed
+
+    clock.t += 10.0  # lease expires
+    w2 = mk("w2")
+    while w2.run_once() is not None:
+        pass
+    assert committed["step"] == 30
+    # no step below the last commit was lost; re-run from 10 is expected
+    assert max(steps_run) == 29
+    assert q.done()

@@ -1,0 +1,126 @@
+"""Tiling / domain decomposition: determinism, coverage, paper figures."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tiling import (
+    N_ZONES,
+    MercatorTile,
+    TileAssignment,
+    UTMGridSpec,
+    UTMTile,
+    mercator_tile_of,
+    mercator_tiles,
+    utm_tile_of,
+    zone_of_lon,
+    zone_tiles,
+)
+
+
+# ---------------------------------------------------------------------------
+# Web Mercator
+# ---------------------------------------------------------------------------
+def test_mercator_level_counts():
+    """Paper: level L divides the world into 4^L pieces."""
+    for level in range(4):
+        assert len(list(mercator_tiles(level))) == 4 ** level
+
+
+@settings(max_examples=50, deadline=None)
+@given(lon=st.floats(-179.9, 179.9), lat=st.floats(-80, 80),
+       level=st.integers(0, 10))
+def test_mercator_point_in_tile_bounds(lon, lat, level):
+    tile = mercator_tile_of(lon, lat, level)
+    w, s, e, n = tile.bounds_lonlat()
+    assert w - 1e-6 <= lon <= e + 1e-6
+    assert s - 1e-6 <= lat <= n + 1e-6
+
+
+def test_mercator_parent_child():
+    t = MercatorTile(3, 5, 2)
+    kids = t.children()
+    assert len(kids) == 4
+    assert all(k.parent() == t for k in kids)
+
+
+# ---------------------------------------------------------------------------
+# UTM
+# ---------------------------------------------------------------------------
+def test_paper_tile_counts():
+    """The paper's §III.C figures: 17 tiles across a zone at 10 m/4096 px;
+    ~244 tiles to the pole at 10 m; ~10 at 250 m."""
+    spec10 = UTMGridSpec(tile_px=4096, resolution_m=10.0)
+    assert spec10.tiles_across_zone() == 17
+    assert abs(spec10.tiles_to_pole() - 244) <= 2
+    spec250 = UTMGridSpec(tile_px=4096, resolution_m=250.0)
+    assert spec250.tiles_to_pole() == 10
+
+
+def test_zone_of_lon():
+    assert zone_of_lon(-180.0) == 1
+    assert zone_of_lon(0.0) == 31
+    assert zone_of_lon(179.9) == 60
+
+
+@settings(max_examples=50, deadline=None)
+@given(lon=st.floats(-179.9, 179.9), lat=st.floats(-75, 75))
+def test_utm_tile_bounds_contain_point(lon, lat):
+    spec = UTMGridSpec(tile_px=4096, resolution_m=100.0)
+    tile = utm_tile_of(lon, lat, spec)
+    assert 1 <= tile.zone <= N_ZONES
+    w, s, e, n = tile.bounds_m()
+    assert e - w == pytest.approx(spec.tile_span_m)
+    assert n - s == pytest.approx(spec.tile_span_m)
+
+
+def test_utm_tiles_disjoint_and_keys_unique():
+    spec = UTMGridSpec(tile_px=4096, resolution_m=500.0)
+    tiles = list(zone_tiles(31, spec, lat_range=(-20, 20)))
+    keys = [t.key() for t in tiles]
+    assert len(keys) == len(set(keys))
+    # bounds tile the zone without overlap
+    boxes = sorted(t.bounds_m() for t in tiles)
+    for (w1, s1, e1, n1), (w2, s2, e2, n2) in zip(boxes, boxes[1:]):
+        assert (e1 <= w2 + 1e-9) or (n1 <= s2 + 1e-9) or (w1, s1) != (w2, s2)
+
+
+def test_southern_hemisphere_key_convention():
+    spec = UTMGridSpec(tile_px=4096, resolution_m=100.0)
+    t = utm_tile_of(151.2, -33.8, spec)  # Sydney
+    assert t.ty < 0 and "S" in t.key()
+
+
+def test_border_overlap():
+    spec = UTMGridSpec(tile_px=1024, border_px=16, resolution_m=10.0)
+    t = UTMTile(31, 0, 0, spec)
+    w, s, e, n = t.bounds_with_border_m()
+    w0, s0, e0, n0 = t.bounds_m()
+    assert w == w0 - 160 and e == e0 + 160
+    assert t.pixels == (1024 + 32, 1024 + 32)
+
+
+# ---------------------------------------------------------------------------
+# work assignment
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 200), shards=st.integers(1, 17),
+       mode=st.sampled_from(["contiguous", "hashed"]))
+def test_assignment_partitions(n, shards, mode):
+    """INVARIANT: every key in exactly one shard; shard_of agrees."""
+    keys = [f"k{i}" for i in range(n)]
+    ta = TileAssignment(keys, shards, mode=mode)
+    all_shards = ta.all_shards()
+    flat = [k for s in all_shards for k in s]
+    assert sorted(flat) == sorted(keys)
+    for i, shard in enumerate(all_shards):
+        for k in shard:
+            assert ta.shard_of(k) == i
+
+
+def test_contiguous_assignment_balanced():
+    ta = TileAssignment([f"k{i}" for i in range(10)], 3)
+    sizes = [len(s) for s in ta.all_shards()]
+    assert max(sizes) - min(sizes) <= 1
