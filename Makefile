@@ -1,0 +1,21 @@
+# One-word entry points for the tier-1 suite and benchmark smoke.
+# Optional deps (hypothesis) are genuinely optional: `test` passes without
+# them (property tests skip); `deps-optional` installs them best-effort.
+
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench-smoke bench deps-optional
+
+test:  ## tier-1: full suite, fail fast
+	$(PYTHON) -m pytest -x -q
+
+bench-smoke:  ## cluster-engine scaling curve + end-to-end composite example
+	$(PYTHON) benchmarks/cluster_scaling.py --nodes 1,8,64,512
+	$(PYTHON) examples/global_composite.py
+
+bench:  ## every paper-table reproduction + kernel timings
+	$(PYTHON) -m benchmarks.run
+
+deps-optional:  ## best-effort install of optional dev deps (offline-safe)
+	-$(PYTHON) -m pip install hypothesis

@@ -1,0 +1,140 @@
+"""Node-scaling of the cluster engine (Table III's curve, end-to-end).
+
+    PYTHONPATH=src python benchmarks/cluster_scaling.py --nodes 1,8,64,512
+
+Unlike benchmarks/bandwidth_scaling.py (which models the cluster
+analytically around a single real mount), this drives the *actual*
+scatter/gather engine: N simulated nodes, each with its own festivus mount
+over one shared in-memory bucket, claiming scan tasks from the shared
+worker-pull queue.  A task reads `task_mb` MiB of 4 MiB-blocked data; time
+is virtual — the discrete-event scheduler advances each node's WorkerClock
+by the calibrated service-time model, water-filled over the mount's
+in-flight streams and capped by the per-node NIC/CPU law.  Real bytes flow
+(correctness is never simulated); only time is virtual.
+
+Reports the engine-measured aggregate bandwidth (the acceptance curve:
+monotone, high parallel efficiency) alongside the zone-fabric-capped
+projection that reproduces the paper's measured contention (231.3 GB/s at
+512 nodes).  Writes a BENCH_cluster_scaling.json record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import Festivus, InMemoryObjectStore, MetadataStore
+from repro.core import perfmodel as pm
+from repro.core.festivus import FestivusConfig
+from repro.launch.cluster import ClusterConfig, ClusterEngine
+
+BLOCK = 4 * pm.MiB
+#: Table III 16-vCPU rows (nodes -> aggregate GB/s), for the fabric column
+PAPER_ROWS_16VCPU = {1: 1.0, 4: 4.1, 16: 17.4, 64: 36.3, 128: 70.5, 512: 231.3}
+
+
+def _run_nodes(nodes: int, tasks_per_node: int, task_bytes: int,
+               object_bytes: int):
+    """One fleet size: build the bucket, scatter scan tasks, gather."""
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("bucket/scan", b"\x5a" * object_bytes)
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()  # populate the shared stat KV once, up front
+    driver.close()
+
+    slots = max(1, object_bytes // task_bytes)
+    tasks = {f"scan{i}": (i % slots) * task_bytes
+             for i in range(nodes * tasks_per_node)}
+
+    blocks_per_task = max(1, task_bytes // BLOCK)
+    config = ClusterConfig(
+        nodes=nodes, vcpus=16, virtual_time=True,
+        festivus=FestivusConfig(block_bytes=BLOCK, readahead_blocks=0,
+                                cache_bytes=0,  # cold random reads, Table IV style
+                                max_inflight=blocks_per_task),
+        lease_s=3600.0)
+    engine = ClusterEngine(inner, meta=meta, config=config)
+
+    def handler(worker, offset):
+        return len(worker.fs.read("bucket/scan", offset, task_bytes))
+
+    report = engine.run(tasks, handler)
+    if not report.all_done:
+        raise RuntimeError(f"scan campaign failed: {report.queue_stats}")
+    return report
+
+
+def run(verbose: bool = True, nodes_list=(1, 8, 64, 512),
+        tasks_per_node: int = 2, task_mb: int = 8,
+        out_path: str = "BENCH_cluster_scaling.json") -> dict:
+    task_bytes = task_mb * pm.MiB
+    object_bytes = 8 * task_bytes  # bound the bucket; tasks wrap around
+    rows = []
+    base_per_node = None
+    for nodes in nodes_list:
+        report = _run_nodes(nodes, tasks_per_node, task_bytes, object_bytes)
+        agg = report.read_bandwidth_bytes_per_s
+        per_node = agg / nodes
+        if base_per_node is None:
+            base_per_node = per_node
+        fabric = min(agg, pm.FABRIC_MODEL.aggregate_bytes_per_s(nodes))
+        rows.append({
+            "nodes": nodes,
+            "tasks": report.tasks,
+            "makespan_s": round(report.makespan_s, 6),
+            "engine_GB_s": round(agg / 1e9, 3),
+            "per_node_GB_s": round(per_node / 1e9, 3),
+            "parallel_efficiency": round(per_node / base_per_node, 3),
+            "fabric_GB_s": round(fabric / 1e9, 3),
+            "paper_GB_s": PAPER_ROWS_16VCPU.get(nodes),
+        })
+    curve = [r["engine_GB_s"] for r in rows]
+    result = {
+        "bench": "cluster_scaling",
+        "block_bytes": BLOCK,
+        "task_bytes": task_bytes,
+        "tasks_per_node": tasks_per_node,
+        "rows": rows,
+        "monotonic": all(b > a for a, b in zip(curve, curve[1:])),
+        "efficiency_by_nodes": {str(r["nodes"]): r["parallel_efficiency"]
+                                for r in rows},
+        "headline_fabric_GB_s": rows[-1]["fabric_GB_s"],
+        "paper_headline_GB_s": PAPER_ROWS_16VCPU[512],
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+    if verbose:
+        print(f"{'nodes':>6} {'tasks':>6} {'engine GB/s':>12} "
+              f"{'per-node':>9} {'eff':>6} {'fabric GB/s':>12} {'paper':>7}")
+        for r in rows:
+            paper = f"{r['paper_GB_s']:.1f}" if r["paper_GB_s"] else "-"
+            print(f"{r['nodes']:>6} {r['tasks']:>6} {r['engine_GB_s']:>12.2f} "
+                  f"{r['per_node_GB_s']:>9.3f} {r['parallel_efficiency']:>6.2f} "
+                  f"{r['fabric_GB_s']:>12.2f} {paper:>7}")
+        print(f"monotonic={result['monotonic']}; fabric-capped headline "
+              f"{result['headline_fabric_GB_s']} GB/s at {rows[-1]['nodes']} "
+              f"nodes (paper: 231.3 at 512)"
+              + (f"; wrote {out_path}" if out_path else ""))
+    return result
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--nodes", default="1,8,64,512",
+                   help="comma-separated node counts")
+    p.add_argument("--tasks-per-node", type=int, default=2)
+    p.add_argument("--task-mb", type=int, default=8,
+                   help="MiB read per scan task (4 MiB-blocked)")
+    p.add_argument("--out", default="BENCH_cluster_scaling.json",
+                   help="JSON record path ('' to skip writing)")
+    args = p.parse_args(argv)
+    nodes_list = tuple(int(n) for n in args.nodes.split(","))
+    run(nodes_list=nodes_list, tasks_per_node=args.tasks_per_node,
+        task_mb=args.task_mb, out_path=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

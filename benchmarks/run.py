@@ -57,6 +57,7 @@ def main() -> None:
     from benchmarks import (
         bandwidth_scaling,
         blocksize,
+        cluster_scaling,
         composite_bench,
         linpack,
         pipeline_bench,
@@ -66,6 +67,7 @@ def main() -> None:
     sections = [
         ("table_IV_blocksize", blocksize.run),
         ("table_III_bandwidth_scaling", bandwidth_scaling.run),
+        ("table_III_cluster_engine", cluster_scaling.run),
         ("sec_IV_A_linpack", linpack.run),
         ("sec_V_C_composite", composite_bench.run),
         ("sec_V_A_pipeline", pipeline_bench.run),

@@ -1,27 +1,27 @@
 """§V.C end-to-end: a (miniature) global cloud-free composite campaign.
 
 Decomposes a latitude band into UTM tiles, synthesizes a temporal stack per
-tile, runs the weighted composite per tile through the worker-pull task
-queue (with injected worker failures to demonstrate re-delivery), builds
-the multi-resolution pyramid per output (the JPX serving layer), and
-mosaics a Web-Mercator overview.
+tile, then runs the weighted composite through the scatter/gather cluster
+engine: three simulated nodes, each with its own festivus mount over the
+shared (and deliberately flaky — pre-emptible-cloud realism) object store,
+pulling tile tasks from the worker-pull queue.  The cluster output is
+cross-checked byte-for-byte against the single-process path, and a
+Web-Mercator-style overview is served from the multi-resolution pyramid.
 
     PYTHONPATH=src python examples/global_composite.py
 """
 
-import numpy as np
-
 from repro.apps.composite import composite_tile, run_composite_campaign
 from repro.configs.festivus_imagery import SMOKE as IMG_CFG
-from repro.core import ChunkStore, Festivus, InMemoryObjectStore, TaskQueue
-from repro.core.taskqueue import run_workers
+from repro.core import ChunkStore, Festivus, FlakyObjectStore, InMemoryObjectStore
 from repro.core.tiling import UTMGridSpec, zone_tiles
 from repro.data import imagery
 
 
 def main():
-    store = InMemoryObjectStore()
-    cs = ChunkStore(Festivus(store), "bucket")
+    inner = InMemoryObjectStore()
+    flaky = FlakyObjectStore(inner, failure_rate=0.02, seed=7)
+    cs = ChunkStore(Festivus(flaky), "bucket")
 
     # 1. domain decomposition: tiles covering a narrow equatorial band
     spec = UTMGridSpec(tile_px=IMG_CFG.composite_tile_px, border_px=0,
@@ -41,34 +41,30 @@ def main():
             chunk_px=IMG_CFG.chunk_px)
         names.append(name)
     print(f"[2] wrote {len(names)} stacks "
-          f"({store.stats.bytes_written / 1e6:.1f} MB)")
+          f"({inner.stats.bytes_written / 1e6:.1f} MB)")
 
-    # 3. the campaign: worker-pull queue with a flaky worker
-    flaky_state = {"failures_left": 2}
+    # 3. the campaign: 3 simulated nodes, each its own mount, shared queue
+    out = run_composite_campaign(cs, names, IMG_CFG, num_workers=3)
+    report = out["report"]
+    per_node = {r.worker: r.tasks_completed for r in report.per_worker}
+    print(f"[3] campaign done on {report.nodes} nodes; queue: {out['stats']}; "
+          f"work split {per_node}; fleet read {report.bytes_read / 1e6:.1f} MB; "
+          f"transient store failures absorbed by VFS retries: "
+          f"{report.festivus_stats.retried_ops} "
+          f"(injected: {flaky.injected_failures})")
 
-    def handler(tile_name):
-        if flaky_state["failures_left"] > 0:
-            flaky_state["failures_left"] -= 1
-            raise RuntimeError("simulated pre-emption")
-        imgs, _ = imagery.read_scene_stack(cs, tile_name)
-        comp = composite_tile(imgs, IMG_CFG)
-        arr = cs.create(f"composite/{tile_name}", comp.shape, comp.dtype,
-                        (IMG_CFG.chunk_px, IMG_CFG.chunk_px, comp.shape[2]),
-                        codec="zlib", pyramid_levels=2)
-        arr.write_region((0, 0, 0), comp)
-        arr.build_pyramid()
-        return float(comp.mean())
+    # 4. byte-identical cross-check against the single-process path
+    for n in names:
+        imgs, _ = imagery.read_scene_stack(cs, n)
+        ref = composite_tile(imgs, IMG_CFG)
+        got = cs.open(f"composite/{n}").read_all()
+        assert got.tobytes() == ref.tobytes(), f"cluster output diverges on {n}"
+    print(f"[4] cluster output byte-identical to single-process path "
+          f"on all {len(names)} tiles")
 
-    queue = TaskQueue()
-    queue.submit_batch({n: n for n in names})
-    run_workers(queue, handler, num_workers=3)
-    assert queue.done(), queue.counts()
-    print(f"[3] campaign done; queue stats: {queue.stats} "
-          f"(note the retried tasks: the paper's pre-emptible story)")
-
-    # 4. serve an overview from the pyramid (Mapserver-over-festivus role)
+    # 5. serve an overview from the pyramid (Mapserver-over-festivus role)
     overview = [cs.open(f"composite/{n}").read_level(2) for n in names[:2]]
-    print(f"[4] pyramid overviews: {[o.shape for o in overview]}")
+    print(f"[5] pyramid overviews: {[o.shape for o in overview]}")
     print("GLOBAL_COMPOSITE_OK")
 
 

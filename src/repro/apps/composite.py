@@ -7,22 +7,25 @@ independently."
 
 Per-tile compute is the Pallas `composite` kernel (jnp oracle off-TPU);
 weights combine the cloud mask with NDVI verdancy, exactly the paper's
-recipe.  The campaign driver is the same worker-pull queue as §V.A.
+recipe.  The campaign driver is the scatter/gather cluster engine
+(`repro.launch.cluster`): each simulated node gets its own festivus mount
+over the campaign's shared store + metadata KV and pulls tile tasks from
+the worker-pull queue of §V.A.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.festivus_imagery import ImageryConfig
 from repro.core.chunkstore import ChunkStore
-from repro.core.taskqueue import TaskQueue, run_workers
 from repro.data import imagery
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.launch.cluster import ClusterConfig, ClusterEngine, Worker
 
 
 def cloud_score(images: np.ndarray, cfg: ImageryConfig) -> np.ndarray:
@@ -49,23 +52,44 @@ def composite_tile(images: np.ndarray, cfg: ImageryConfig,
 
 def run_composite_campaign(cs: ChunkStore, tile_names: Sequence[str],
                            cfg: ImageryConfig, out_prefix: str = "composite",
-                           num_workers: int = 4) -> Dict:
-    """Tile-per-task campaign: read stack -> composite -> store result."""
+                           num_workers: Optional[int] = None,
+                           engine_config: Optional[ClusterConfig] = None) -> Dict:
+    """Tile-per-task campaign through the scatter/gather cluster engine.
 
-    def handler(tile_name: str):
-        imgs, _ = imagery.read_scene_stack(cs, tile_name)
+    Each simulated node (`num_workers` of them, default 4; or
+    `engine_config.nodes` when a full config is supplied — passing both
+    inconsistently raises) mounts the campaign bucket via its own Festivus
+    instance over `cs`'s shared object store and metadata KV, so the
+    caller's mount sees every output the fleet writes.  Returns the legacy
+    summary dict plus the full :class:`ClusterReport` under ``"report"``
+    (per-node stats, aggregate bandwidth, queue counters).
+    """
+    if engine_config is None:
+        config = ClusterConfig(nodes=num_workers if num_workers else 4)
+    elif num_workers is not None and num_workers != engine_config.nodes:
+        raise ValueError(
+            f"num_workers={num_workers} conflicts with "
+            f"engine_config.nodes={engine_config.nodes}; pass only one")
+    else:
+        config = engine_config
+
+    def handler(worker: Worker, tile_name: str):
+        wcs = worker.chunkstore(cs.root)
+        imgs, _ = imagery.read_scene_stack(wcs, tile_name)
         comp = composite_tile(imgs, cfg)
-        arr = cs.create(f"{out_prefix}/{tile_name}", comp.shape, comp.dtype,
-                        (min(cfg.chunk_px, comp.shape[0]),
-                         min(cfg.chunk_px, comp.shape[1]), comp.shape[2]),
-                        codec="zlib", pyramid_levels=2)
+        arr = wcs.create(f"{out_prefix}/{tile_name}", comp.shape, comp.dtype,
+                         (min(cfg.chunk_px, comp.shape[0]),
+                          min(cfg.chunk_px, comp.shape[1]), comp.shape[2]),
+                         codec="zlib", pyramid_levels=2)
         arr.write_region((0, 0, 0), comp)
         arr.build_pyramid()  # the JPX multi-resolution serving layer
         return {"tile": tile_name, "mean": float(comp.mean())}
 
-    queue = TaskQueue()
-    queue.submit_batch({t: t for t in tile_names})
-    run_workers(queue, handler, num_workers=num_workers)
-    if not queue.done() or queue.dead_tasks():
-        raise RuntimeError(f"composite campaign incomplete: {queue.counts()}")
-    return {"tiles": len(tile_names), "stats": dict(queue.stats)}
+    engine = ClusterEngine(cs.fs.store, meta=cs.fs.meta, config=config)
+    report = engine.run({t: t for t in tile_names}, handler)
+    if not report.all_done:
+        raise RuntimeError(
+            f"composite campaign incomplete: {report.queue_stats} "
+            f"dead={report.dead_tasks}")
+    return {"tiles": len(tile_names), "stats": report.queue_stats,
+            "report": report}

@@ -33,7 +33,12 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import perfmodel
 from repro.core.metadata import MetadataStore, StatCache
-from repro.core.object_store import ObjectNotFound, ObjectStore, retrying
+from repro.core.object_store import (
+    ObjectNotFound,
+    ObjectStore,
+    merge_counters,
+    retrying,
+)
 
 
 @dataclasses.dataclass
@@ -59,10 +64,17 @@ class FestivusStats:
     bytes_fetched: int = 0
     readahead_issued: int = 0
     coalesced_fetches: int = 0
+    #: transient store errors absorbed by the retry loop (pre-emptible realism)
+    retried_ops: int = 0
 
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @staticmethod
+    def merge(items) -> "FestivusStats":
+        """Reduce per-mount stats into a fleet aggregate (cluster gather)."""
+        return merge_counters(FestivusStats, items)
 
 
 class _BlockCache:
@@ -111,15 +123,23 @@ class Festivus:
     """The virtual file system: open/read/stat/listdir over an ObjectStore."""
 
     def __init__(self, store: ObjectStore, meta: Optional[MetadataStore] = None,
-                 config: Optional[FestivusConfig] = None):
+                 config: Optional[FestivusConfig] = None,
+                 pool: Optional[ThreadPoolExecutor] = None):
         self.store = store
         self.meta = meta if meta is not None else MetadataStore()
         self.statcache = StatCache(self.meta)
         self.config = config or FestivusConfig()
         self.stats = FestivusStats()
+        #: counters are bumped from caller threads and pool threads alike;
+        #: += is not atomic, so all stats writes go through _bump
+        self._stats_lock = threading.Lock()
         self._cache = _BlockCache(self.config.cache_bytes)
-        self._pool = ThreadPoolExecutor(max_workers=self.config.max_inflight,
-                                        thread_name_prefix="festivus")
+        #: `pool` lets many mounts share one block engine (the cluster DES
+        #: runs hundreds of mounts but one task at a time — per-mount pools
+        #: would pin nodes x max_inflight idle OS threads)
+        self._owns_pool = pool is None
+        self._pool = pool if pool is not None else ThreadPoolExecutor(
+            max_workers=self.config.max_inflight, thread_name_prefix="festivus")
         self._inflight: Dict[Tuple[str, int], Future] = {}
         # RLock: if a fetch completes before add_done_callback registers, the
         # done-callback runs synchronously on this thread while it still
@@ -144,16 +164,26 @@ class Festivus:
     def sync_metadata(self) -> int:
         return self.statcache.sync_from_store(self.store)
 
+    def _bump(self, **fields) -> None:
+        with self._stats_lock:
+            for name, n in fields.items():
+                setattr(self.stats, name, getattr(self.stats, name) + n)
+
+    def _count_retry(self, _attempt: int) -> None:
+        self._bump(retried_ops=1)
+
     # -- write path ----------------------------------------------------------
     def write(self, path: str, data: bytes) -> None:
         """Whole-object PUT (objects are immutable; update == rewrite)."""
         meta = retrying(self.store.put, path, data,
-                        attempts=self.config.max_retries)
+                        attempts=self.config.max_retries,
+                        on_retry=self._count_retry)
         self._cache.invalidate_path(path)
         self.statcache.put(path, meta.size, meta.etag)
 
     def delete(self, path: str) -> None:
-        retrying(self.store.delete, path, attempts=self.config.max_retries)
+        retrying(self.store.delete, path, attempts=self.config.max_retries,
+                 on_retry=self._count_retry)
         self._cache.invalidate_path(path)
         self.statcache.remove(path)
 
@@ -162,9 +192,9 @@ class Festivus:
         offset = block * self.config.block_bytes
         length = min(self.config.block_bytes, size - offset)
         data = retrying(self.store.get_range, path, offset, length,
-                        attempts=self.config.max_retries)
-        self.stats.blocks_fetched += 1
-        self.stats.bytes_fetched += len(data)
+                        attempts=self.config.max_retries,
+                        on_retry=self._count_retry)
+        self._bump(blocks_fetched=1, bytes_fetched=len(data))
         self._cache.put((path, block), data)
         return data
 
@@ -174,7 +204,7 @@ class Festivus:
         with self._inflight_lock:
             fut = self._inflight.get(key)
             if fut is not None:
-                self.stats.coalesced_fetches += 1
+                self._bump(coalesced_fetches=1)
                 return fut
             fut = self._pool.submit(self._fetch_block, path, block, size)
             self._inflight[key] = fut
@@ -189,9 +219,9 @@ class Festivus:
     def _get_block(self, path: str, block: int, size: int) -> bytes:
         cached = self._cache.get((path, block))
         if cached is not None:
-            self.stats.cache_hits += 1
+            self._bump(cache_hits=1)
             return cached
-        self.stats.cache_misses += 1
+        self._bump(cache_misses=1)
         return self._block_future(path, block, size).result()
 
     def _maybe_readahead(self, path: str, last_block: int, size: int) -> None:
@@ -203,7 +233,7 @@ class Festivus:
         for b in range(last_block + 1,
                        min(last_block + 1 + self.config.readahead_blocks, nblocks)):
             if self._cache.get((path, b)) is None:
-                self.stats.readahead_issued += 1
+                self._bump(readahead_issued=1)
                 self._block_future(path, b, size)
 
     # -- read path -------------------------------------------------------------
@@ -231,10 +261,10 @@ class Festivus:
         for b in range(first, last + 1):
             cached = self._cache.get((path, b))
             if cached is not None:
-                self.stats.cache_hits += 1
+                self._bump(cache_hits=1)
                 blocks[b] = cached
             else:
-                self.stats.cache_misses += 1
+                self._bump(cache_misses=1)
                 futures[b] = self._block_future(path, b, size)
         for b, fut in futures.items():
             blocks[b] = fut.result()
@@ -254,7 +284,8 @@ class Festivus:
         return FestivusFile(self, path)
 
     def close(self):
-        self._pool.shutdown(wait=True)
+        if self._owns_pool:
+            self._pool.shutdown(wait=True)
 
 
 class FestivusFile:

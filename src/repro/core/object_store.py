@@ -102,6 +102,20 @@ class StoreStats:
             bytes_written=self.bytes_written - earlier.bytes_written,
         )
 
+    @staticmethod
+    def merge(items: Iterator["StoreStats"]) -> "StoreStats":
+        """Reduce per-mount stats into a fleet aggregate (cluster gather)."""
+        return merge_counters(StoreStats, items)
+
+
+def merge_counters(cls, items):
+    """Sum every field of a counters dataclass across instances."""
+    out = cls()
+    for s in items:
+        for f in dataclasses.fields(out):
+            setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+    return out
+
 
 class InMemoryObjectStore(ObjectStore):
     """Dict-backed store; the default for tests and the virtual-time bench."""
@@ -283,11 +297,13 @@ class FlakyObjectStore(ObjectStore):
 
 
 def retrying(fn, *args, attempts: int = 5, base_delay_s: float = 0.001,
-             sleep=time.sleep, **kwargs):
+             sleep=time.sleep, on_retry=None, **kwargs):
     """Exponential-backoff retry for TransientStoreError.
 
     The paper runs on pre-emptible nodes where transient 5xx responses are
     routine; every store access in the framework funnels through this.
+    `on_retry(attempt_index)` is called before each backoff so callers can
+    surface retry counts in their stats.
     """
     for i in range(attempts):
         try:
@@ -295,6 +311,8 @@ def retrying(fn, *args, attempts: int = 5, base_delay_s: float = 0.001,
         except TransientStoreError:
             if i == attempts - 1:
                 raise
+            if on_retry is not None:
+                on_retry(i)
             sleep(base_delay_s * (2**i))
     raise AssertionError("unreachable")
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 
 KiB = 1024
 MiB = 1024 * 1024
@@ -181,12 +182,53 @@ def paper_table_iii_rows():
     ]
 
 
+class WorkerClock:
+    """Worker-local monotonic virtual clock (one per simulated cluster node).
+
+    The cluster engine advances a node's clock by the modeled duration of
+    each task (service time water-filled over in-flight streams, capped by
+    the node NIC/CPU law); the makespan of a simulated fleet is then the
+    max over its workers' clocks.  Thread-safe so the real-time engine mode
+    can share the same worker objects.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock must be monotonic, got dt={dt}")
+        with self._lock:
+            self._t += dt
+            return self._t
+
+    def advance_to(self, t: float) -> float:
+        with self._lock:
+            self._t = max(self._t, t)
+            return self._t
+
+    def __call__(self) -> float:
+        return self.now()
+
+
 #: single-node festivus efficiency law, fitted to Table III's 1/4/16/32-vCPU
 #: rows: b(v) = 0.43 GB/s x v^0.349 — the FUSE+TLS+checksum CPU cost that
 #: keeps a node below its nominal NIC rate (the paper's 32-vCPU row reaches
 #: "over 70% of its network capacity"; smaller nodes proportionally less).
 FESTIVUS_NODE_LAW_COEFF = 0.43 * GB
 FESTIVUS_NODE_LAW_EXP = 0.349
+
+
+def node_cap_bytes_per_s(vcpus: int) -> float:
+    """Per-node sustained-bandwidth ceiling (bytes/s): min of the NIC
+    allocation and the fitted FUSE+TLS+checksum CPU-efficiency law."""
+    return min(NetworkModel().node_nic_bytes_per_s(vcpus),
+               FESTIVUS_NODE_LAW_COEFF * vcpus**FESTIVUS_NODE_LAW_EXP)
 
 
 def single_node_bandwidth(vcpus: int, model: ObjectStoreModel, *, block_bytes: int,

@@ -54,6 +54,9 @@ class Task:
     error: Optional[str] = None
     #: how many workers hold (possibly speculative) claims right now
     active_claims: int = 0
+    #: the workers holding those claims — fail/heartbeat from anyone else
+    #: (e.g. a zombie whose lease already expired) is ignored
+    claimants: set = dataclasses.field(default_factory=set)
 
 
 class TaskQueue:
@@ -114,14 +117,16 @@ class TaskQueue:
                 task.state = RUNNING
                 task.worker = worker
                 task.attempt += 1
-                task.active_claims += 1
+                task.claimants = {worker}
+                task.active_claims = 1
                 task.started_at = now
                 task.lease_deadline = now + lease
                 return task
             # nothing pending: speculate on a straggler
             straggler = self._pick_straggler(now, exclude_worker=worker)
             if straggler is not None:
-                straggler.active_claims += 1
+                straggler.claimants.add(worker)
+                straggler.active_claims = len(straggler.claimants)
                 straggler.lease_deadline = max(straggler.lease_deadline,
                                                now + lease)
                 self.stats["speculated"] += 1
@@ -133,18 +138,22 @@ class TaskQueue:
         lease = lease_s if lease_s is not None else self.default_lease_s
         with self._lock:
             task = self._tasks.get(task_id)
-            if task is None or task.state != RUNNING:
+            if task is None or task.state != RUNNING \
+                    or worker not in task.claimants:
                 return False
             task.lease_deadline = self.clock() + lease
             return True
 
     def complete(self, task_id: str, worker: str, result: Any = None) -> bool:
-        """Idempotent completion; the first finisher wins."""
+        """Idempotent completion; the first finisher wins.
+
+        A DEAD task stays dead: a zombie's late result must not resurrect a
+        task already counted in the dead letter (the counters would lie)."""
         with self._lock:
             task = self._tasks.get(task_id)
             if task is None:
                 return False
-            if task.state == DONE:
+            if task.state in (DONE, DEAD):
                 self.stats["duplicate_completions"] += 1
                 return False
             task.state = DONE
@@ -152,7 +161,8 @@ class TaskQueue:
             task.result = result
             task.completed_at = self.clock()
             task.active_claims = 0
-            if task.started_at:
+            task.claimants = set()
+            if task.attempt > 0:  # ever claimed (started_at==0.0 is valid)
                 self._durations.append(task.completed_at - task.started_at)
             self.stats["completed"] += 1
             return True
@@ -162,7 +172,10 @@ class TaskQueue:
             task = self._tasks.get(task_id)
             if task is None or task.state in (DONE, DEAD):
                 return
-            task.active_claims = max(0, task.active_claims - 1)
+            if worker not in task.claimants:
+                return  # zombie: this worker's claim already expired
+            task.claimants.discard(worker)
+            task.active_claims = len(task.claimants)
             if task.active_claims > 0:
                 return  # a speculative twin is still running
             task.error = error
@@ -179,6 +192,7 @@ class TaskQueue:
         for task in self._tasks.values():
             if task.state == RUNNING and now >= task.lease_deadline:
                 task.active_claims = 0
+                task.claimants.clear()
                 self.stats["expired"] += 1
                 if task.attempt > task.max_retries:
                     task.state = DEAD

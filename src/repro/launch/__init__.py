@@ -4,6 +4,13 @@ NOTE: repro.launch.dryrun must be executed as a fresh process (it sets
 XLA_FLAGS before importing jax); do not import it from here.
 """
 
+from repro.launch.cluster import (
+    ClusterConfig,
+    ClusterEngine,
+    ClusterReport,
+    Worker,
+    scatter_gather,
+)
 from repro.launch.mesh import (
     dp_axes,
     dp_size,
@@ -11,4 +18,7 @@ from repro.launch.mesh import (
     make_production_mesh,
 )
 
-__all__ = ["dp_axes", "dp_size", "make_local_mesh", "make_production_mesh"]
+__all__ = [
+    "ClusterConfig", "ClusterEngine", "ClusterReport", "Worker", "dp_axes",
+    "dp_size", "make_local_mesh", "make_production_mesh", "scatter_gather",
+]

@@ -1,0 +1,455 @@
+"""Simulated scatter/gather cluster engine (the paper's fleet, §IV/§V).
+
+The paper's headline result is *aggregate* bandwidth: 512 GCE nodes each
+mounting one bucket through festivus and pulling tile work from a shared
+Celery queue together read 231 GB/s (Table III).  This module composes the
+repo's existing layers — :class:`TaskQueue` (leases, heartbeats, straggler
+speculation), :class:`Festivus` (the per-node mount), :class:`ChunkStore`
+(tile arrays) — into that deployment shape:
+
+* **Scatter** — a dict of tile tasks is submitted to the shared worker-pull
+  queue (the paper's elasticity: workers join, claim, and leave freely).
+* **Workers** — each simulated node owns a *private* festivus mount (its own
+  block cache, async engine, and stats) over the *shared* object store and
+  the *shared* metadata KV, exactly the paper's "metadata server is shared
+  by all instances of the file system".
+* **Gather** — queue results plus per-worker ``StoreStats`` /
+  ``FestivusStats`` / virtual clocks are reduced into a
+  :class:`ClusterReport` carrying the aggregate-bandwidth figure.
+
+Two execution modes share one worker contract:
+
+* ``virtual_time=False`` (default) — N real threads against the store at
+  native speed; wall-clock makespan.  This is what the application
+  campaigns (calibration, composite, segmentation) run on.
+* ``virtual_time=True`` — a deterministic discrete-event simulation.  Each
+  worker owns a :class:`perfmodel.WorkerClock`; a task's duration is the
+  calibrated object-store service time of its I/O, water-filled over the
+  mount's in-flight streams and capped by the per-node NIC/CPU law
+  (:func:`perfmodel.node_cap_bytes_per_s`), plus any virtual compute the
+  handler bills via :meth:`Worker.charge_compute`.  Dispatch order is
+  min-clock, so one process reproduces the node-scaling curve at 512
+  simulated nodes.  Handler side effects apply eagerly (real data always
+  flows; only time is virtual), so tasks must be idempotent and write
+  disjoint outputs — the paper's tile model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import perfmodel
+from repro.core.chunkstore import ChunkStore
+from repro.core.festivus import Festivus, FestivusConfig, FestivusStats
+from repro.core.metadata import MetadataStore
+from repro.core.object_store import ObjectStore, StoreStats
+from repro.core.taskqueue import TaskQueue
+
+
+class MountStore(ObjectStore):
+    """A worker's private view of the shared store.
+
+    Every operation is counted into a per-worker :class:`StoreStats`; in
+    virtual-time mode the calibrated service time of each request accrues
+    here and the engine drains it into the worker's clock at task
+    boundaries (after water-filling over concurrent streams).
+    """
+
+    def __init__(self, inner: ObjectStore,
+                 model: Optional[perfmodel.ObjectStoreModel] = None):
+        self.inner = inner
+        self.model = model
+        self.stats = StoreStats()
+        self._lock = threading.Lock()
+        self._pending_service_s = 0.0
+        self._pending_bytes = 0
+
+    def _account(self, nbytes: int) -> None:
+        if self.model is not None:
+            self._pending_service_s += self.model.service_time_s(nbytes)
+            self._pending_bytes += nbytes
+
+    def put(self, key, data):
+        meta = self.inner.put(key, data)
+        with self._lock:
+            self.stats.puts += 1
+            self.stats.bytes_written += meta.size
+            self._account(meta.size)
+        return meta
+
+    def get_range(self, key, offset, length):
+        data = self.inner.get_range(key, offset, length)
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+            self._account(len(data))
+        return data
+
+    def head(self, key):
+        meta = self.inner.head(key)
+        with self._lock:
+            self.stats.heads += 1
+        return meta
+
+    def list(self, prefix=""):
+        out = self.inner.list(prefix)
+        with self._lock:
+            self.stats.lists += 1
+        return out
+
+    def delete(self, key):
+        self.inner.delete(key)
+        with self._lock:
+            self.stats.deletes += 1
+
+    def drain_pending(self):
+        """Take (service_seconds, bytes) accrued since the last drain."""
+        with self._lock:
+            out = (self._pending_service_s, self._pending_bytes)
+            self._pending_service_s, self._pending_bytes = 0.0, 0
+            return out
+
+
+class Worker:
+    """One simulated node: festivus mount + clock + counters.
+
+    This object is the context handed to task handlers; a handler does its
+    I/O through ``worker.fs`` / ``worker.chunkstore(root)`` so the engine
+    can attribute bandwidth and time to the node that did the work.
+    """
+
+    def __init__(self, index: int, store: MountStore, fs: Festivus,
+                 clock: perfmodel.WorkerClock):
+        self.index = index
+        self.name = f"node{index}"
+        self.store = store
+        self.fs = fs
+        #: the node's busy time: advanced to each task's (virtual or wall)
+        #: completion, never by idle polling — reported as virtual_time_s
+        self.clock = clock
+        self.tasks_completed = 0
+        self.tasks_failed = 0
+        self.duplicate_completions = 0
+        self._idle_backoff = 0.0
+        self._pending_compute_s = 0.0
+        self._chunkstores: Dict[str, ChunkStore] = {}
+
+    def chunkstore(self, root: str = "arrays") -> ChunkStore:
+        cs = self._chunkstores.get(root)
+        if cs is None:
+            cs = self._chunkstores[root] = ChunkStore(self.fs, root)
+        return cs
+
+    def charge_compute(self, seconds: float) -> None:
+        """Bill virtual per-task compute time (no-op in real-time mode)."""
+        self._pending_compute_s += float(seconds)
+
+    def _drain_compute(self) -> float:
+        s, self._pending_compute_s = self._pending_compute_s, 0.0
+        return s
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    #: simulated node count (thread count in real-time mode)
+    nodes: int = 4
+    #: vCPUs per node; sets the virtual-time NIC/CPU bandwidth cap
+    vcpus: int = 16
+    #: False: real threads + wall clock.  True: deterministic DES.
+    virtual_time: bool = False
+    store_model: perfmodel.ObjectStoreModel = perfmodel.FESTIVUS_STORE_MODEL
+    #: per-mount festivus settings (None -> library defaults).  In virtual
+    #: time, readahead is forced off: the DES models its effect analytically
+    #: and async prefetch threads would break determinism.
+    festivus: Optional[FestivusConfig] = None
+    lease_s: float = 300.0
+    #: virtual mode: renew a running task's lease this often (None = never;
+    #: lets lease-expiry tests exercise re-dispatch)
+    heartbeat_s: Optional[float] = None
+    #: virtual seconds an idle worker waits before re-polling the queue
+    idle_poll_s: float = 0.05
+    #: idle polls back off exponentially up to this (bounds event count)
+    max_idle_backoff_s: float = 3.2
+    #: fixed virtual compute billed per task on top of handler charges
+    compute_s_per_task: float = 0.0
+    max_retries: int = 3
+    speculation_factor: float = 3.0
+    min_completions_for_speculation: int = 5
+    #: real-time mode: idle sleep and bail-out budget
+    poll_s: float = 0.001
+    max_idle_polls: int = 2000
+
+
+@dataclasses.dataclass
+class WorkerReport:
+    worker: str
+    tasks_completed: int
+    tasks_failed: int
+    duplicate_completions: int
+    virtual_time_s: float
+    store_stats: StoreStats
+    festivus_stats: FestivusStats
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """The gather side: fleet-wide reduction of a campaign run."""
+
+    nodes: int
+    tasks: int
+    #: virtual makespan (DES) or wall seconds (threads)
+    makespan_s: float
+    bytes_read: int
+    bytes_written: int
+    store_stats: StoreStats
+    festivus_stats: FestivusStats
+    queue_stats: Dict[str, int]
+    dead_tasks: List[str]
+    results: Dict[str, Any]
+    per_worker: List[WorkerReport]
+
+    @property
+    def all_done(self) -> bool:
+        return not self.dead_tasks and self.queue_stats["completed"] == self.tasks
+
+    @property
+    def read_bandwidth_bytes_per_s(self) -> float:
+        return self.bytes_read / self.makespan_s if self.makespan_s > 0 else 0.0
+
+    @property
+    def aggregate_bytes_per_s(self) -> float:
+        total = self.bytes_read + self.bytes_written
+        return total / self.makespan_s if self.makespan_s > 0 else 0.0
+
+
+#: task handler contract: (worker context, payload) -> result
+Handler = Callable[[Worker, Any], Any]
+
+_DISPATCH, _FINISH, _HEARTBEAT = 0, 1, 2
+
+
+class ClusterEngine:
+    """Scatter a task dict over N simulated nodes; gather results + stats.
+
+    One-shot: :meth:`run` closes the worker mounts when the campaign ends
+    (bounding thread count at 512 simulated nodes); build a new engine per
+    campaign.
+    """
+
+    def __init__(self, store: ObjectStore, meta: Optional[MetadataStore] = None,
+                 config: Optional[ClusterConfig] = None):
+        self.inner = store
+        self.config = config or ClusterConfig()
+        #: the shared metadata KV — pass the caller's so its mounts see
+        #: everything the fleet writes (and vice versa)
+        self.meta = meta if meta is not None else MetadataStore()
+        fest_cfg = self.config.festivus or FestivusConfig()
+        if self.config.virtual_time and fest_cfg.readahead_blocks:
+            # readahead pool threads would accrue service time asynchronously
+            # across task boundaries, making the DES nondeterministic; its
+            # latency-hiding effect is already modeled by water-filling the
+            # drained service time over the mount's in-flight streams
+            fest_cfg = dataclasses.replace(fest_cfg, readahead_blocks=0)
+        model = self.config.store_model if self.config.virtual_time else None
+        # the DES runs one handler at a time, so all mounts can share one
+        # block-engine pool; per-mount pools would pin nodes x max_inflight
+        # idle OS threads at 512 simulated nodes
+        self._shared_pool = (
+            ThreadPoolExecutor(max_workers=fest_cfg.max_inflight,
+                               thread_name_prefix="cluster-io")
+            if self.config.virtual_time else None)
+        self.workers: List[Worker] = []
+        for i in range(self.config.nodes):
+            mount = MountStore(store, model=model)
+            fs = Festivus(mount, meta=self.meta, config=fest_cfg,
+                          pool=self._shared_pool)
+            self.workers.append(Worker(i, mount, fs, perfmodel.WorkerClock()))
+        self._now = 0.0
+        self._inflight = max(1, min(fest_cfg.max_inflight,
+                                    self.config.store_model.max_inflight_per_node))
+        self._node_cap = perfmodel.node_cap_bytes_per_s(self.config.vcpus)
+
+    # -- public API -----------------------------------------------------------
+    def run(self, tasks: Dict[str, Any], handler: Handler) -> ClusterReport:
+        queue = self._make_queue()
+        for task_id, payload in tasks.items():
+            queue.submit(task_id, payload, max_retries=self.config.max_retries)
+        try:
+            if self.config.virtual_time:
+                makespan = self._run_virtual(queue, handler)
+            else:
+                makespan = self._run_threads(queue, handler)
+        finally:
+            self.close()
+        return self._report(queue, len(tasks), makespan)
+
+    def close(self) -> None:
+        for w in self.workers:
+            w.fs.close()
+        if self._shared_pool is not None:
+            self._shared_pool.shutdown(wait=True)
+
+    # -- shared plumbing ------------------------------------------------------
+    def _make_queue(self) -> TaskQueue:
+        clock = (lambda: self._now) if self.config.virtual_time else time.monotonic
+        return TaskQueue(
+            meta=self.meta, default_lease_s=self.config.lease_s,
+            speculation_factor=self.config.speculation_factor,
+            min_completions_for_speculation=self.config.min_completions_for_speculation,
+            clock=clock)
+
+    def _task_virtual_s(self, worker: Worker) -> float:
+        """Drain a task's accrued I/O + compute into one virtual duration."""
+        service_s, nbytes = worker.store.drain_pending()
+        io_s = 0.0
+        if service_s:
+            io_s = service_s / self._inflight
+            if nbytes:
+                io_s = max(io_s, nbytes / self._node_cap)
+        return io_s + worker._drain_compute() + self.config.compute_s_per_task
+
+    # -- real-time mode: N threads, wall clock --------------------------------
+    def _run_threads(self, queue: TaskQueue, handler: Handler) -> float:
+        t0 = time.monotonic()
+
+        def loop(worker: Worker):
+            idle = 0
+            while idle < self.config.max_idle_polls:
+                task = queue.claim(worker.name, lease_s=self.config.lease_s)
+                if task is None:
+                    if queue.done():
+                        return
+                    idle += 1
+                    time.sleep(self.config.poll_s)
+                    continue
+                idle = 0
+                t_task = time.monotonic()
+                error = result = None
+                try:
+                    result = handler(worker, task.payload)
+                except Exception as e:  # noqa: BLE001 — a worker never dies
+                    error = f"{type(e).__name__}: {e}"
+                worker.clock.advance(time.monotonic() - t_task)
+                if error is not None:
+                    queue.fail(task.task_id, worker.name, error)
+                    worker.tasks_failed += 1
+                    continue
+                if queue.complete(task.task_id, worker.name, result):
+                    worker.tasks_completed += 1
+                else:
+                    worker.duplicate_completions += 1
+
+        threads = [threading.Thread(target=loop, args=(w,), daemon=True)
+                   for w in self.workers]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.monotonic() - t0
+
+    # -- virtual-time mode: deterministic discrete-event simulation -----------
+    def _run_virtual(self, queue: TaskQueue, handler: Handler) -> float:
+        heap: List = []
+        seq = 0
+
+        def push(t: float, kind: int, widx: int, data=None):
+            nonlocal seq
+            seq += 1
+            heapq.heappush(heap, (t, seq, kind, widx, data))
+
+        for w in self.workers:
+            push(0.0, _DISPATCH, w.index)
+        busy = 0
+        makespan = 0.0
+        events = 0
+        while heap:
+            events += 1
+            if events > 2_000_000:
+                raise RuntimeError(
+                    "cluster DES runaway — check task/handler wiring")
+            t, _, kind, widx, data = heapq.heappop(heap)
+            self._now = max(self._now, t)
+            worker = self.workers[widx]
+
+            if kind == _HEARTBEAT:
+                queue.heartbeat(data, worker.name)
+                continue
+
+            if kind == _FINISH:
+                task, result, error = data
+                busy -= 1
+                if error is not None:
+                    queue.fail(task.task_id, worker.name, error)
+                    worker.tasks_failed += 1
+                elif queue.complete(task.task_id, worker.name, result):
+                    worker.tasks_completed += 1
+                else:
+                    worker.duplicate_completions += 1
+                worker.clock.advance_to(self._now)  # busy until this finish
+                makespan = max(makespan, self._now)
+                worker._idle_backoff = 0.0
+                push(self._now, _DISPATCH, worker.index)
+                continue
+
+            # _DISPATCH: try to claim; retire when the campaign is over
+            task = queue.claim(worker.name, lease_s=self.config.lease_s)
+            if task is None:
+                if queue.done() and busy == 0:
+                    continue  # retire this worker (no reschedule)
+                worker._idle_backoff = min(
+                    max(worker._idle_backoff * 2, self.config.idle_poll_s),
+                    self.config.max_idle_backoff_s)
+                push(self._now + worker._idle_backoff, _DISPATCH, worker.index)
+                continue
+            worker._idle_backoff = 0.0
+            result = error = None
+            try:
+                result = handler(worker, task.payload)
+            except Exception as e:  # noqa: BLE001 — a worker never dies
+                error = f"{type(e).__name__}: {e}"
+            dt = self._task_virtual_s(worker)
+            busy += 1
+            if self.config.heartbeat_s:
+                k = 1
+                while k * self.config.heartbeat_s < dt:
+                    push(self._now + k * self.config.heartbeat_s, _HEARTBEAT,
+                         worker.index, task.task_id)
+                    k += 1
+            push(self._now + dt, _FINISH, worker.index, (task, result, error))
+        return makespan
+
+    # -- gather ----------------------------------------------------------------
+    def _report(self, queue: TaskQueue, ntasks: int,
+                makespan: float) -> ClusterReport:
+        per_worker = [
+            WorkerReport(worker=w.name,
+                         tasks_completed=w.tasks_completed,
+                         tasks_failed=w.tasks_failed,
+                         duplicate_completions=w.duplicate_completions,
+                         virtual_time_s=w.clock.now(),
+                         store_stats=w.store.stats.snapshot(),
+                         festivus_stats=dataclasses.replace(w.fs.stats))
+            for w in self.workers
+        ]
+        store_stats = StoreStats.merge(r.store_stats for r in per_worker)
+        festivus_stats = FestivusStats.merge(r.festivus_stats for r in per_worker)
+        return ClusterReport(
+            nodes=self.config.nodes, tasks=ntasks, makespan_s=makespan,
+            bytes_read=store_stats.bytes_read,
+            bytes_written=store_stats.bytes_written,
+            store_stats=store_stats, festivus_stats=festivus_stats,
+            queue_stats=dict(queue.stats),
+            dead_tasks=[t.task_id for t in queue.dead_tasks()],
+            results=queue.results(), per_worker=per_worker)
+
+
+def scatter_gather(store: ObjectStore, tasks: Dict[str, Any], handler: Handler,
+                   *, meta: Optional[MetadataStore] = None,
+                   config: Optional[ClusterConfig] = None) -> ClusterReport:
+    """One-shot convenience: build an engine, run the campaign, report."""
+    return ClusterEngine(store, meta=meta, config=config).run(tasks, handler)

@@ -1,0 +1,161 @@
+"""Scatter/gather cluster engine: exactly-once completion, byte-identical
+output vs the single-process path, virtual-time scaling, and the
+fault-tolerance paths (lease expiry re-dispatch, straggler speculation,
+heartbeats) end-to-end through TaskQueue + Festivus + ChunkStore."""
+
+import collections
+import threading
+
+from repro.apps.composite import composite_tile, run_composite_campaign
+from repro.configs.festivus_imagery import SMOKE as IMG_CFG
+from repro.core import ChunkStore, Festivus, FestivusConfig, InMemoryObjectStore
+from repro.core.metadata import MetadataStore
+from repro.data import imagery
+from repro.launch.cluster import ClusterConfig, ClusterEngine
+
+KiB = 1024
+
+
+# ---------------------------------------------------------------------------
+# correctness: exactly-once, gathered results, merged stats
+# ---------------------------------------------------------------------------
+def test_all_tasks_complete_exactly_once():
+    engine = ClusterEngine(
+        InMemoryObjectStore(),
+        config=ClusterConfig(nodes=4, min_completions_for_speculation=10**6))
+    calls = collections.Counter()
+    lock = threading.Lock()
+
+    def handler(worker, payload):
+        with lock:
+            calls[payload] += 1
+        return payload * 2
+
+    report = engine.run({f"t{i}": i for i in range(20)}, handler)
+    assert report.all_done and not report.dead_tasks
+    assert report.queue_stats["completed"] == 20
+    assert report.queue_stats["duplicate_completions"] == 0
+    assert report.results == {f"t{i}": i * 2 for i in range(20)}
+    assert sum(r.tasks_completed for r in report.per_worker) == 20
+    assert all(count == 1 for count in calls.values())
+
+
+def test_cluster_composite_identical_to_single_process():
+    """The acceptance bar: the engine's composite bytes == the direct path."""
+    store = InMemoryObjectStore()
+    cs = ChunkStore(Festivus(store), "bucket")
+    names = []
+    for i in range(3):
+        name = f"stacks/t{i}"
+        imagery.write_scene_stack(
+            cs, name, imagery.SceneSpec(tile_px=32, temporal_depth=4, seed=i),
+            chunk_px=16)
+        names.append(name)
+
+    out = run_composite_campaign(cs, names, IMG_CFG, num_workers=3)
+    assert out["tiles"] == 3 and out["report"].all_done
+    for n in names:
+        imgs, _ = imagery.read_scene_stack(cs, n)
+        ref = composite_tile(imgs, IMG_CFG)
+        got = cs.open(f"composite/{n}").read_all()
+        assert got.dtype == ref.dtype and got.shape == ref.shape
+        assert got.tobytes() == ref.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# virtual time: scaling + per-worker accounting
+# ---------------------------------------------------------------------------
+def _scan_report(nodes, tasks_per_node=2):
+    """nodes x scan-tasks reading 512 KiB each from a shared 1 MiB object."""
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x11" * (1024 * KiB))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=nodes, virtual_time=True, lease_s=3600.0,
+        festivus=FestivusConfig(block_bytes=256 * KiB, readahead_blocks=0,
+                                cache_bytes=0, max_inflight=2)))
+
+    def handler(worker, offset):
+        return len(worker.fs.read("obj", offset, 512 * KiB))
+
+    tasks = {f"s{i}": (i % 2) * 512 * KiB
+             for i in range(nodes * tasks_per_node)}
+    report = engine.run(tasks, handler)
+    assert report.all_done
+    return report, inner
+
+
+def test_virtual_scaling_64_nodes_at_least_8x():
+    bw1 = _scan_report(1)[0].read_bandwidth_bytes_per_s
+    bw64 = _scan_report(64)[0].read_bandwidth_bytes_per_s
+    assert bw1 > 0
+    assert bw64 >= 8 * bw1  # in fact ~64x: per-node work is identical
+
+
+def test_report_gathers_per_worker_stats():
+    report, inner = _scan_report(2)
+    # merged fleet stats == the shared store's ground truth
+    assert report.store_stats.bytes_read == inner.stats.bytes_read
+    assert report.bytes_read == 4 * 512 * KiB
+    # and == the sum over per-worker mounts
+    assert report.store_stats.gets == sum(
+        r.store_stats.gets for r in report.per_worker)
+    assert all(r.virtual_time_s > 0 for r in report.per_worker)
+    assert report.makespan_s > 0
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance through the engine (virtual time, deterministic)
+# ---------------------------------------------------------------------------
+def _charge_handler(worker, payload):
+    worker.charge_compute(payload)
+    return worker.name
+
+
+def _ft_tasks():
+    tasks = {"slow": 50.0}
+    tasks.update({f"fast{i}": 1.0 for i in range(6)})
+    return tasks
+
+
+def test_straggler_speculation_first_completion_wins():
+    engine = ClusterEngine(InMemoryObjectStore(), config=ClusterConfig(
+        nodes=3, virtual_time=True, lease_s=1e6,
+        speculation_factor=2.0, min_completions_for_speculation=3))
+    report = engine.run(_ft_tasks(), _charge_handler)
+    assert report.all_done
+    assert report.queue_stats["speculated"] == 1
+    assert report.queue_stats["duplicate_completions"] == 1
+    assert report.queue_stats["expired"] == 0
+    # the original claimant (node0 grabbed "slow" first) finishes at t=50,
+    # the speculative twin at ~t=53: first completion wins
+    assert report.results["slow"] == "node0"
+
+
+def test_lease_expiry_redispatch_without_heartbeat():
+    engine = ClusterEngine(InMemoryObjectStore(), config=ClusterConfig(
+        nodes=2, virtual_time=True, lease_s=5.0,
+        min_completions_for_speculation=10**6))
+    tasks = {"slow": 20.0}
+    tasks.update({f"fast{i}": 1.0 for i in range(4)})
+    report = engine.run(tasks, _charge_handler)
+    assert report.all_done
+    assert report.queue_stats["expired"] == 1  # slow's lease lapsed at t=5
+    assert report.queue_stats["duplicate_completions"] == 1  # both finish
+    assert report.results["slow"] == "node0"  # original still finished first
+
+
+def test_heartbeat_keeps_long_task_leased():
+    engine = ClusterEngine(InMemoryObjectStore(), config=ClusterConfig(
+        nodes=2, virtual_time=True, lease_s=5.0, heartbeat_s=2.0,
+        min_completions_for_speculation=10**6))
+    tasks = {"slow": 20.0}
+    tasks.update({f"fast{i}": 1.0 for i in range(4)})
+    report = engine.run(tasks, _charge_handler)
+    assert report.all_done
+    assert report.queue_stats["expired"] == 0  # renewals held the lease
+    assert report.queue_stats["duplicate_completions"] == 0
+    assert report.queue_stats["completed"] == len(tasks)

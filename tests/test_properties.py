@@ -1,0 +1,131 @@
+"""Property-based system invariants (optional `hypothesis` dev dependency).
+
+These generalize the deterministic cases in test_core / test_tiling /
+test_train to arbitrary generated inputs.  `hypothesis` is intentionally
+optional (see README "Optional dev dependencies"): this whole module skips
+at collection when it is absent, so the tier-1 suite stays green on a bare
+container.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency: pip install hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import ChunkStore, Festivus, FestivusConfig, InMemoryObjectStore  # noqa: E402
+from repro.core import codec as codec_mod  # noqa: E402
+from repro.core.tiling import (  # noqa: E402
+    N_ZONES,
+    TileAssignment,
+    UTMGridSpec,
+    mercator_tile_of,
+    utm_tile_of,
+)
+from repro.train import optimizer as opt_mod  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# festivus / chunkstore / codecs (test_core's invariants)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(size=st.integers(1, 5000), offset=st.integers(0, 5000),
+       length=st.integers(0, 6000), block=st.sampled_from([64, 256, 1024]))
+def test_festivus_read_equals_written(size, offset, length, block):
+    """INVARIANT: festivus.read(path, off, len) == data[off:off+len]."""
+    store = InMemoryObjectStore()
+    fs = Festivus(store, config=FestivusConfig(block_bytes=block,
+                                               readahead_blocks=2))
+    data = bytes(i % 251 for i in range(size))
+    fs.write("obj", data)
+    offset = min(offset, size)
+    assert fs.read("obj", offset, length) == data[offset:offset + length]
+
+
+@pytest.mark.parametrize("name", ["raw", "zlib", "delta-zlib"])
+@settings(max_examples=20, deadline=None)
+@given(data=st.binary(min_size=0, max_size=2000))
+def test_codec_roundtrip(name, data):
+    codec = codec_mod.by_name(name)
+    assert codec_mod.decode(codec.encode(data)) == data
+
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(1, 60), w=st.integers(1, 60),
+       ch=st.integers(1, 20), cw=st.integers(1, 20), seed=st.integers(0, 99))
+def test_chunkstore_region_roundtrip(h, w, ch, cw, seed):
+    """INVARIANT: read_region(write_region(x)) == x for any chunking."""
+    store = InMemoryObjectStore()
+    cs = ChunkStore(Festivus(store), "a")
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((h, w)).astype(np.float32)
+    arr = cs.create(f"t{seed}", (h, w), np.float32, (ch, cw), codec="zlib")
+    arr.write_region((0, 0), x)
+    y0, x0 = rng.integers(0, h), rng.integers(0, w)
+    y1 = rng.integers(y0, h) + 1
+    x1 = rng.integers(x0, w) + 1
+    np.testing.assert_array_equal(
+        arr.read_region((y0, x0), (y1, x1)), x[y0:y1, x0:x1])
+
+
+# ---------------------------------------------------------------------------
+# tiling (test_tiling's invariants)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(lon=st.floats(-179.9, 179.9), lat=st.floats(-80, 80),
+       level=st.integers(0, 10))
+def test_mercator_point_in_tile_bounds(lon, lat, level):
+    tile = mercator_tile_of(lon, lat, level)
+    w, s, e, n = tile.bounds_lonlat()
+    assert w - 1e-6 <= lon <= e + 1e-6
+    assert s - 1e-6 <= lat <= n + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(lon=st.floats(-179.9, 179.9), lat=st.floats(-75, 75))
+def test_utm_tile_bounds_contain_point(lon, lat):
+    spec = UTMGridSpec(tile_px=4096, resolution_m=100.0)
+    tile = utm_tile_of(lon, lat, spec)
+    assert 1 <= tile.zone <= N_ZONES
+    w, s, e, n = tile.bounds_m()
+    assert e - w == pytest.approx(spec.tile_span_m)
+    assert n - s == pytest.approx(spec.tile_span_m)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 200), shards=st.integers(1, 17),
+       mode=st.sampled_from(["contiguous", "hashed"]))
+def test_assignment_partitions(n, shards, mode):
+    """INVARIANT: every key in exactly one shard; shard_of agrees."""
+    keys = [f"k{i}" for i in range(n)]
+    ta = TileAssignment(keys, shards, mode=mode)
+    all_shards = ta.all_shards()
+    flat = [k for s in all_shards for k in s]
+    assert sorted(flat) == sorted(keys)
+    for i, shard in enumerate(all_shards):
+        for k in shard:
+            assert ta.shard_of(k) == i
+
+
+# ---------------------------------------------------------------------------
+# optimizer (test_train's invariant)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 8), cols=st.sampled_from([128, 256, 512]),
+       scale=st.floats(1e-4, 1e3))
+def test_quantize_roundtrip_error_bounded(rows, cols, scale):
+    """INVARIANT: row-wise int8 |x - dq(q(x))| <= row absmax / 127."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.standard_normal((rows, cols)) * scale, jnp.float32)
+    t = opt_mod.quantize(x)
+    assert t.q.shape == x.shape and t.q.dtype == jnp.int8
+    assert t.scale.shape == (rows,)
+    back = opt_mod.dequantize(t)
+    bound = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0 + 1e-12
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= bound + 1e-9).all()

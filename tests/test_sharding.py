@@ -61,18 +61,17 @@ MINI_DRYRUN = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.configs import get_config
     from repro.configs.base import ShapeSpec
     from repro.launch import sharding as shd
+    from repro.launch.mesh import _make_mesh
     from repro.models import build, input_specs
     from repro.train import OptimizerConfig, make_train_step
     from repro.train import optimizer as opt_mod
 
     cfg = get_config("{arch}", "smoke")
     shape = ShapeSpec("t", 64, 8, "train")
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = _make_mesh((2, 4), ("data", "model"))
     model = build(cfg)
     with mesh:
         params_abs = model.abstract_params()
@@ -105,7 +104,10 @@ def test_mini_dryrun_smoke_arch(arch):
         [sys.executable, "-c", MINI_DRYRUN.format(arch=arch)],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # host-platform dry-run: never probe a TPU backend (wastes
+             # minutes on metadata retries in TPU-less containers)
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo")
     assert proc.returncode == 0, proc.stderr[-2000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])

@@ -101,6 +101,89 @@ def test_straggler_speculation():
     assert q.results()["slow"] == "spec-won"
 
 
+def test_lease_expiry_reclaim_first_completion_wins():
+    """A dead worker's task is re-claimed; its late completion is ignored."""
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", "payload")
+    assert q.claim("w1").task_id == "t"
+    clock.t = 11.0  # w1 presumed dead
+    t2 = q.claim("w2")
+    assert t2.task_id == "t" and q.stats["expired"] == 1
+    assert q.complete("t", "w2", "w2-result")
+    assert not q.complete("t", "w1", "w1-late")  # zombie finishes late
+    assert q.results()["t"] == "w2-result"
+    assert q.stats["duplicate_completions"] == 1
+
+
+def test_lease_expiry_exhausts_retries_to_dead():
+    """Repeated expiry (not explicit fail) also lands in the dead letter."""
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", 0, max_retries=1)
+    assert q.claim("w1").attempt == 1
+    clock.t = 11.0
+    assert q.claim("w2").attempt == 2  # expiry -> requeue -> re-claim
+    clock.t = 22.0
+    assert q.claim("w3") is None  # second expiry exhausts retries
+    assert q.counts()[DEAD] == 1 and q.stats["dead"] == 1
+    assert "lease expired" in q.dead_tasks()[0].error
+    assert q.done()  # dead tasks don't wedge the campaign
+
+
+def test_late_completion_cannot_resurrect_dead_task():
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", 0, max_retries=0)
+    q.claim("w1")
+    clock.t = 11.0
+    assert q.claim("w2") is None  # expiry exhausts retries -> DEAD
+    assert q.counts()[DEAD] == 1
+    assert not q.complete("t", "w1", "late")  # zombie result rejected
+    assert q.counts()[DEAD] == 1 and len(q.dead_tasks()) == 1
+    assert q.stats["duplicate_completions"] == 1
+    assert "t" not in q.results()
+
+
+def test_zombie_fail_and_heartbeat_after_expiry_ignored():
+    """A dead worker's late fail/heartbeat must not disturb the re-claim."""
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", 0)
+    q.claim("w1")
+    clock.t = 11.0  # w1 presumed dead
+    t2 = q.claim("w2")
+    assert t2.task_id == "t"
+    assert not q.heartbeat("t", "w1")  # zombie can't extend w2's lease
+    q.fail("t", "w1", "late failure from dead worker")  # ignored
+    assert q.counts()[RUNNING] == 1 and q.stats["retried"] == 0
+    assert q.complete("t", "w2", "ok")
+    assert q.results()["t"] == "ok"
+
+
+def test_speculation_duplicate_dispatch_original_wins():
+    """Speculative twin dispatched, but the original finishes first."""
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=1000,
+                  speculation_factor=3.0, min_completions_for_speculation=3)
+    for i in range(3):
+        q.submit(f"fast{i}", i)
+    q.submit("slow", 99)
+    for _ in range(3):
+        t = q.claim("w1")
+        clock.t += 1.0
+        q.complete(t.task_id, "w1")
+    assert q.claim("w1").task_id == "slow"
+    clock.t += 50.0
+    spec = q.claim("w2")  # duplicate-dispatch of the straggler
+    assert spec is not None and spec.task_id == "slow"
+    assert q.complete("slow", "w1", "original-won")
+    assert not q.complete("slow", "w2", "spec-late")
+    assert q.results()["slow"] == "original-won"
+    assert q.stats["speculated"] == 1
+    assert q.stats["duplicate_completions"] == 1
+
+
 def test_worker_exception_retries_then_succeeds():
     q = TaskQueue()
     q.submit("t", 0, max_retries=3)

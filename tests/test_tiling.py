@@ -1,10 +1,11 @@
-"""Tiling / domain decomposition: determinism, coverage, paper figures."""
+"""Tiling / domain decomposition: determinism, coverage, paper figures.
+
+Deterministic tests only — hypothesis property versions live in
+tests/test_properties.py (skipped when the optional dep is absent)."""
 
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.tiling import (
     N_ZONES,
@@ -29,9 +30,10 @@ def test_mercator_level_counts():
         assert len(list(mercator_tiles(level))) == 4 ** level
 
 
-@settings(max_examples=50, deadline=None)
-@given(lon=st.floats(-179.9, 179.9), lat=st.floats(-80, 80),
-       level=st.integers(0, 10))
+@pytest.mark.parametrize("lon,lat,level", [
+    (0.0, 0.0, 0), (-179.9, -79.9, 3), (179.9, 79.9, 10),
+    (13.4, 52.5, 7), (-122.4, 37.8, 5), (151.2, -33.8, 8),
+])
 def test_mercator_point_in_tile_bounds(lon, lat, level):
     tile = mercator_tile_of(lon, lat, level)
     w, s, e, n = tile.bounds_lonlat()
@@ -65,8 +67,10 @@ def test_zone_of_lon():
     assert zone_of_lon(179.9) == 60
 
 
-@settings(max_examples=50, deadline=None)
-@given(lon=st.floats(-179.9, 179.9), lat=st.floats(-75, 75))
+@pytest.mark.parametrize("lon,lat", [
+    (0.0, 0.0), (-179.9, -74.9), (179.9, 74.9), (3.0001, 51.0),
+    (-0.0001, -51.0), (151.2, -33.8),
+])
 def test_utm_tile_bounds_contain_point(lon, lat):
     spec = UTMGridSpec(tile_px=4096, resolution_m=100.0)
     tile = utm_tile_of(lon, lat, spec)
@@ -105,9 +109,8 @@ def test_border_overlap():
 # ---------------------------------------------------------------------------
 # work assignment
 # ---------------------------------------------------------------------------
-@settings(max_examples=30, deadline=None)
-@given(n=st.integers(1, 200), shards=st.integers(1, 17),
-       mode=st.sampled_from(["contiguous", "hashed"]))
+@pytest.mark.parametrize("n,shards", [(1, 1), (10, 3), (200, 17), (5, 8)])
+@pytest.mark.parametrize("mode", ["contiguous", "hashed"])
 def test_assignment_partitions(n, shards, mode):
     """INVARIANT: every key in exactly one shard; shard_of agrees."""
     keys = [f"k{i}" for i in range(n)]

@@ -7,8 +7,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import get_config
 from repro.core import ChunkStore, Festivus, InMemoryObjectStore
@@ -24,9 +22,9 @@ KEY = jax.random.PRNGKey(3)
 # ---------------------------------------------------------------------------
 # quantized moments
 # ---------------------------------------------------------------------------
-@settings(max_examples=20, deadline=None)
-@given(rows=st.integers(1, 8), cols=st.sampled_from([128, 256, 512]),
-       scale=st.floats(1e-4, 1e3))
+@pytest.mark.parametrize("rows,cols,scale", [
+    (1, 128, 1e-4), (8, 512, 1e3), (4, 256, 1.0), (2, 128, 37.5),
+])
 def test_quantize_roundtrip_error_bounded(rows, cols, scale):
     """INVARIANT: row-wise int8 |x - dq(q(x))| <= row absmax / 127."""
     rng = np.random.default_rng(rows * 1000 + cols)
