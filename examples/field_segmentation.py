@@ -43,6 +43,17 @@ def main():
     found = len(geo["features"])
     print(f"[3] fields found: {found} (ground truth {spec.num_fields})")
 
+    # the same chain as a fleet campaign: 2 simulated nodes, each its own
+    # festivus mount over the shared store, pulling tile tasks — and the
+    # cluster's labels byte-match this process's own segmentation
+    out = segmentation.run_segmentation_campaign(
+        cs, ["tiles/kherson-mini"], IMG_CFG, num_workers=2)
+    report = out["report"]
+    stored = cs.open("fields/tiles/kherson-mini/labels").read_all()
+    assert stored.tobytes() == labels.tobytes()
+    print(f"[3b] campaign on {report.nodes} nodes wrote byte-identical "
+          f"labels; queue: {out['stats']}")
+
     # per-field purity: majority-truth-label fraction inside each found field
     purities = []
     for feat in geo["features"]:

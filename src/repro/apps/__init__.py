@@ -1,5 +1,6 @@
 """The paper's applications: calibration (§V.A), composite (§V.C),
-field segmentation (§V.B) — all tile-parallel over the task queue."""
+field segmentation (§V.B) — all tile-parallel campaigns through the
+scatter/gather cluster engine."""
 
 from repro.apps.calibration import (
     SceneMeta,
@@ -9,10 +10,14 @@ from repro.apps.calibration import (
     toa_reflectance,
 )
 from repro.apps.composite import composite_tile, run_composite_campaign
-from repro.apps.segmentation import segment_tile, segment_to_store
+from repro.apps.segmentation import (
+    run_segmentation_campaign,
+    segment_tile,
+    segment_to_store,
+)
 
 __all__ = [
     "SceneMeta", "composite_tile", "make_raw_scene", "process_scene",
-    "run_campaign", "run_composite_campaign", "segment_tile",
-    "segment_to_store", "toa_reflectance",
+    "run_campaign", "run_composite_campaign", "run_segmentation_campaign",
+    "segment_tile", "segment_to_store", "toa_reflectance",
 ]

@@ -11,9 +11,11 @@ storing the result back into Cloud Storage."
 
 Scenes arrive as raw DN (digital number) uint16 rasters with per-band
 gain/bias metadata; output is reflectance tiles in the chunk store.  The
-whole campaign is driven by the task queue (one task per scene), matching
-the paper's Celery deployment — workers are stateless, pre-emptible, and
-idempotent (tile writes are whole-chunk PUTs).
+whole campaign is driven by the scatter/gather cluster engine (one task per
+scene over the worker-pull queue), matching the paper's Celery deployment —
+workers are stateless, pre-emptible, and idempotent (tile writes are
+whole-chunk PUTs), so elastic fleets and virtual-time scaling studies run
+this campaign unchanged.
 """
 
 from __future__ import annotations
@@ -21,12 +23,17 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.chunkstore import ChunkStore
-from repro.core.taskqueue import TaskQueue, run_workers
+from repro.launch.cluster import (
+    ClusterConfig,
+    ClusterEngine,
+    Worker,
+    campaign_config,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,14 +151,35 @@ def make_raw_scene(cs: ChunkStore, scene_key: str, height: int, width: int,
 
 
 def run_campaign(cs_in: ChunkStore, cs_out: ChunkStore, scene_keys,
-                 num_workers: int = 4, tile_px: int = 64) -> Dict:
-    """The §V.A pattern: task per scene, worker pull, full fault tolerance."""
-    queue = TaskQueue()
-    queue.submit_batch({k: k for k in scene_keys})
-    run_workers(queue,
-                lambda key: process_scene(cs_in, cs_out, key, tile_px),
-                num_workers=num_workers)
-    if not queue.done() or queue.dead_tasks():
-        raise RuntimeError(f"campaign incomplete: {queue.counts()}")
-    return {"scenes": len(scene_keys), "stats": dict(queue.stats),
-            "results": queue.results()}
+                 num_workers: Optional[int] = None, tile_px: int = 64,
+                 engine_config: Optional[ClusterConfig] = None) -> Dict:
+    """The §V.A pattern through the scatter/gather cluster engine.
+
+    One task per scene over `num_workers` simulated nodes (default 4; or
+    a full :class:`ClusterConfig` via `engine_config` — e.g. virtual-time
+    with an elastic schedule).  Each node mounts the campaign bucket via
+    its own Festivus instance over the *shared* object store and metadata
+    KV, so the caller's mounts see every tile the fleet writes.  `cs_in`
+    and `cs_out` must share one underlying store (they may use different
+    roots); the per-worker mounts re-root onto both.  Returns the legacy
+    summary dict plus the full :class:`ClusterReport` under ``"report"``.
+    """
+    if cs_in.fs.store is not cs_out.fs.store or cs_in.fs.meta is not cs_out.fs.meta:
+        raise ValueError(
+            "run_campaign needs cs_in and cs_out over one shared object "
+            "store + metadata KV (the fleet mounts a single bucket)")
+    config = campaign_config(num_workers, engine_config)
+
+    def handler(worker: Worker, scene_key: str):
+        return process_scene(worker.chunkstore(cs_in.root),
+                             worker.chunkstore(cs_out.root),
+                             scene_key, tile_px)
+
+    engine = ClusterEngine(cs_in.fs.store, meta=cs_in.fs.meta, config=config)
+    report = engine.run({k: k for k in scene_keys}, handler)
+    if not report.all_done:
+        raise RuntimeError(
+            f"campaign incomplete: {report.queue_stats} "
+            f"dead={report.dead_tasks}")
+    return {"scenes": len(scene_keys), "stats": report.queue_stats,
+            "results": report.results, "report": report}

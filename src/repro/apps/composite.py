@@ -25,7 +25,12 @@ from repro.core.chunkstore import ChunkStore
 from repro.data import imagery
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.launch.cluster import ClusterConfig, ClusterEngine, Worker
+from repro.launch.cluster import (
+    ClusterConfig,
+    ClusterEngine,
+    Worker,
+    campaign_config,
+)
 
 
 def cloud_score(images: np.ndarray, cfg: ImageryConfig) -> np.ndarray:
@@ -64,14 +69,7 @@ def run_composite_campaign(cs: ChunkStore, tile_names: Sequence[str],
     summary dict plus the full :class:`ClusterReport` under ``"report"``
     (per-node stats, aggregate bandwidth, queue counters).
     """
-    if engine_config is None:
-        config = ClusterConfig(nodes=num_workers if num_workers else 4)
-    elif num_workers is not None and num_workers != engine_config.nodes:
-        raise ValueError(
-            f"num_workers={num_workers} conflicts with "
-            f"engine_config.nodes={engine_config.nodes}; pass only one")
-    else:
-        config = engine_config
+    config = campaign_config(num_workers, engine_config)
 
     def handler(worker: Worker, tile_name: str):
         wcs = worker.chunkstore(cs.root)

@@ -148,3 +148,34 @@ def segment_to_store(cs, tile_name: str, cfg: ImageryConfig,
     cs.fs.write(f"{cs.root}/{out_prefix}/{tile_name}/fields.geojson",
                 json.dumps(geo).encode())
     return {"tile": tile_name, "fields": len(geo["features"])}
+
+
+def run_segmentation_campaign(cs, tile_names, cfg: ImageryConfig,
+                              out_prefix: str = "fields",
+                              num_workers=None, engine_config=None) -> Dict:
+    """Tile-per-task §V.B campaign through the scatter/gather cluster engine.
+
+    Mirrors the composite campaign's contract: each simulated node mounts
+    the campaign bucket via its own Festivus instance over `cs`'s shared
+    object store + metadata KV, pulls tile tasks from the worker-pull
+    queue, and writes the label array + GeoJSON for its tile (idempotent,
+    disjoint outputs — safe under lease-expiry re-delivery and straggler
+    speculation).  Returns the summary dict plus the full
+    :class:`ClusterReport` under ``"report"``.
+    """
+    from repro.launch.cluster import ClusterEngine, campaign_config
+
+    config = campaign_config(num_workers, engine_config)
+
+    def handler(worker, tile_name: str):
+        return segment_to_store(worker.chunkstore(cs.root), tile_name, cfg,
+                                out_prefix)
+
+    engine = ClusterEngine(cs.fs.store, meta=cs.fs.meta, config=config)
+    report = engine.run({t: t for t in tile_names}, handler)
+    if not report.all_done:
+        raise RuntimeError(
+            f"segmentation campaign incomplete: {report.queue_stats} "
+            f"dead={report.dead_tasks}")
+    return {"tiles": len(tile_names), "stats": report.queue_stats,
+            "report": report}

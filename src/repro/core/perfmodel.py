@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+from typing import Any, Dict, List, Optional, Tuple
 
 KiB = 1024
 MiB = 1024 * 1024
@@ -50,6 +51,14 @@ class NetworkModel:
 
     def node_nic_bytes_per_s(self, vcpus: int) -> float:
         return min(self.nic_bps_per_vcpu * vcpus, self.nic_bps_cap) / 8.0
+
+
+#: one metadata-KV round-trip (stat / dirent / manifest op against the shared
+#: Redis-role store): the Fig. 3 small-message wire latency.  The cluster DES
+#: charges this per KV op to the worker clock that issued it — the paper's
+#: "metadata server is shared by all instances" cost, which festivus pays in
+#: microseconds where gcsfuse pays an object-store HEAD (~80 ms, Table IV).
+METADATA_OP_LATENCY_S = 40e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,14 +98,29 @@ GCSFUSE_STORE_MODEL = ObjectStoreModel(
 )
 
 
+#: Table III 16-vCPU measured aggregate curve, (nodes, bytes/s) — the
+#: calibration anchors for the zone-capacity interpolation below.
+_TABLE_III_CURVE = ((1, 1.0 * GB), (4, 4.1 * GB), (16, 17.4 * GB),
+                    (64, 36.3 * GB), (128, 70.5 * GB), (512, 231.3 * GB))
+
+
 @dataclasses.dataclass(frozen=True)
 class FabricModel:
     """Zone-fabric contention model (Table III fit).
 
-    Aggregate bandwidth is linear (per-node NIC-limited) up to
-    `contention_onset_nodes`; beyond that a fitted power law
-    ``agg(N) = a * N**b`` matches the measured 64/128/512-node rows to
-    within ~3% (a=0.930 GB/s, b=0.886; see DESIGN.md §5).
+    Two views of the same measurement:
+
+    * :meth:`aggregate_bytes_per_s` — the closed-form fit used by the
+      analytic projections (linear to `contention_onset_nodes`, then the
+      power law ``agg(N) = a * N**b`` that matches the 64/128/512-node
+      rows to ~3%).
+    * :meth:`zone_capacity_bytes_per_s` — the capacity the *simulated*
+      fabric grants ``readers`` concurrently-reading mounts: log-log
+      interpolation through the measured rows themselves (including the
+      1-node row, which sits below the analytic line), power-law
+      extrapolated beyond 512.  The DES water-fills this capacity across
+      the in-flight readers, so per-node bandwidth degrades inside the
+      simulation rather than being min()-ed on afterwards.
     """
 
     per_node_bytes_per_s: float = 1.0875 * GB  # 17.4 GB/s over 16 nodes
@@ -110,8 +134,98 @@ class FabricModel:
             return linear
         return min(linear, self.fabric_coeff * nodes**self.fabric_exponent)
 
+    def zone_capacity_bytes_per_s(self, readers: int) -> float:
+        if readers <= 0:
+            return 0.0
+        curve = _TABLE_III_CURVE
+        if readers <= curve[0][0]:
+            return readers * curve[0][1]
+        last_n, last_bw = curve[-1]
+        if readers >= last_n:
+            return last_bw * (readers / last_n) ** self.fabric_exponent
+        for (n0, bw0), (n1, bw1) in zip(curve, curve[1:]):
+            if n0 <= readers <= n1:
+                frac = (math.log(readers) - math.log(n0)) \
+                    / (math.log(n1) - math.log(n0))
+                return math.exp(math.log(bw0)
+                                + frac * (math.log(bw1) - math.log(bw0)))
+        raise AssertionError("unreachable")
+
 
 FABRIC_MODEL = FabricModel()
+
+
+def water_fill(demands, capacity: float):
+    """Max-min fair allocation of `capacity` across flows with `demands`.
+
+    Returns a list of rates, one per demand: every flow gets its full
+    demand if the sum fits, otherwise the capacity is shared fairly —
+    small flows are satisfied first, the rest split what remains evenly
+    (the classic water-filling progression).
+    """
+    demands = list(demands)
+    if not demands:
+        return []
+    if any(d < 0 for d in demands):
+        raise ValueError(f"negative demand in {demands}")
+    if sum(demands) <= capacity:
+        return demands
+    alloc = [0.0] * len(demands)
+    remaining = capacity
+    left = len(demands)
+    for i in sorted(range(len(demands)), key=demands.__getitem__):
+        grant = min(demands[i], remaining / left)
+        alloc[i] = grant
+        remaining -= grant
+        left -= 1
+    return alloc
+
+
+class SharedFabric:
+    """The zone fabric as a shared, *simulated* resource.
+
+    Each concurrently-reading mount registers a flow (its uncontended
+    bandwidth demand, i.e. min of its stream parallelism and node cap);
+    :meth:`allocations` water-fills the per-zone capacity — which itself
+    depends on how many readers that zone currently has — across them.
+    The cluster DES re-queries this whenever the reader set changes, which
+    is exactly what makes the 512-node curve sub-linear *inside* the
+    simulation (Table III) instead of via a post-hoc cap.
+    """
+
+    def __init__(self, model: Optional[FabricModel] = None, zones: int = 1):
+        if zones < 1:
+            raise ValueError(f"zones must be >= 1, got {zones}")
+        self.model = model if model is not None else FABRIC_MODEL
+        self.zones = zones
+        #: flow key -> (zone, demand bytes/s)
+        self._flows: Dict[Any, Tuple[int, float]] = {}
+
+    def add_flow(self, key, zone: int, demand_bytes_per_s: float) -> None:
+        if key in self._flows:
+            raise ValueError(f"duplicate fabric flow {key!r}")
+        self._flows[key] = (zone % self.zones, float(demand_bytes_per_s))
+
+    def remove_flow(self, key) -> None:
+        del self._flows[key]
+
+    def readers(self, zone: Optional[int] = None) -> int:
+        if zone is None:
+            return len(self._flows)
+        return sum(1 for z, _ in self._flows.values() if z == zone)
+
+    def allocations(self) -> Dict[Any, float]:
+        """Water-filled rate (bytes/s) for every registered flow."""
+        by_zone: Dict[int, List] = {}
+        for key, (zone, demand) in self._flows.items():
+            by_zone.setdefault(zone, []).append((key, demand))
+        rates: Dict[Any, float] = {}
+        for zone, flows in by_zone.items():
+            cap = self.model.zone_capacity_bytes_per_s(len(flows))
+            granted = water_fill([d for _, d in flows], cap)
+            for (key, _), rate in zip(flows, granted):
+                rates[key] = rate
+        return rates
 
 
 @dataclasses.dataclass(frozen=True)

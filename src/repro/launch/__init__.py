@@ -8,6 +8,8 @@ from repro.launch.cluster import (
     ClusterConfig,
     ClusterEngine,
     ClusterReport,
+    ElasticEvent,
+    ElasticSchedule,
     Worker,
     scatter_gather,
 )
@@ -19,6 +21,7 @@ from repro.launch.mesh import (
 )
 
 __all__ = [
-    "ClusterConfig", "ClusterEngine", "ClusterReport", "Worker", "dp_axes",
-    "dp_size", "make_local_mesh", "make_production_mesh", "scatter_gather",
+    "ClusterConfig", "ClusterEngine", "ClusterReport", "ElasticEvent",
+    "ElasticSchedule", "Worker", "dp_axes", "dp_size", "make_local_mesh",
+    "make_production_mesh", "scatter_gather",
 ]

@@ -23,15 +23,29 @@ Two execution modes share one worker contract:
   native speed; wall-clock makespan.  This is what the application
   campaigns (calibration, composite, segmentation) run on.
 * ``virtual_time=True`` — a deterministic discrete-event simulation.  Each
-  worker owns a :class:`perfmodel.WorkerClock`; a task's duration is the
-  calibrated object-store service time of its I/O, water-filled over the
-  mount's in-flight streams and capped by the per-node NIC/CPU law
-  (:func:`perfmodel.node_cap_bytes_per_s`), plus any virtual compute the
-  handler bills via :meth:`Worker.charge_compute`.  Dispatch order is
-  min-clock, so one process reproduces the node-scaling curve at 512
-  simulated nodes.  Handler side effects apply eagerly (real data always
-  flows; only time is virtual), so tasks must be idempotent and write
-  disjoint outputs — the paper's tile model.
+  worker owns a :class:`perfmodel.WorkerClock`; a task's I/O becomes a
+  *flow* — its bytes drain at a rate that is water-filled twice: over the
+  mount's in-flight streams and per-node NIC/CPU law
+  (:func:`perfmodel.node_cap_bytes_per_s`) to get the node's uncontended
+  demand, then across *all concurrently-reading mounts* against the zone
+  fabric's capacity (:class:`perfmodel.SharedFabric`, the Table III
+  contention curve).  Whenever the reader set changes — a task starts or
+  finishes its I/O, a node joins or is pre-empted — every in-flight flow's
+  rate is recomputed, so per-node bandwidth degrades *inside* the
+  simulation exactly as the paper measured, with no post-hoc cap.
+  Metadata-KV ops (stat/sync_metadata against the shared Redis-role store)
+  and virtual compute (:meth:`Worker.charge_compute`) are charged to the
+  worker clock after the I/O phase.  Handler side effects apply eagerly
+  (real data always flows; only time is virtual), so tasks must be
+  idempotent and write disjoint outputs — the paper's tile model.
+
+Elastic fleets (virtual-time only): an :class:`ElasticSchedule` adds or
+pre-empts workers mid-campaign.  A pre-empted worker vanishes without
+failing its task — the realistic cloud exit — and the task is handed off
+through the existing :class:`TaskQueue` machinery (lease expiry, or
+straggler speculation by a surviving worker); completion stays
+exactly-once and outputs stay byte-identical because tile tasks are
+idempotent.
 """
 
 from __future__ import annotations
@@ -41,7 +55,7 @@ import heapq
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import perfmodel
 from repro.core.chunkstore import ChunkStore
@@ -115,6 +129,111 @@ class MountStore(ObjectStore):
             return out
 
 
+class MountMeta:
+    """A worker's view of the shared metadata KV (the paper's Redis).
+
+    Forwards every op to the shared :class:`MetadataStore` (all mounts see
+    one namespace) while counting ops per worker; in virtual-time mode each
+    op also accrues one KV round-trip
+    (:data:`perfmodel.METADATA_OP_LATENCY_S` by default) that the engine
+    drains into the worker's clock at task boundaries — the stat/manifest
+    cost festivus pays in microseconds where gcsfuse pays ~80 ms HEADs.
+    """
+
+    _COUNTED = ("get", "set", "setnx", "incr", "delete", "exists", "keys",
+                "hset", "hmset", "hget", "hgetall", "hdel", "hlen", "cas")
+
+    def __init__(self, inner: MetadataStore, latency_s: float = 0.0):
+        self.inner = inner
+        self.latency_s = latency_s
+        self.ops = 0
+        self._pending_s = 0.0
+        self._lock = threading.Lock()
+        for name in self._COUNTED:
+            setattr(self, name, self._wrap(getattr(inner, name)))
+
+    def _wrap(self, method):
+        def op(*args, **kwargs):
+            with self._lock:
+                self.ops += 1
+                self._pending_s += self.latency_s
+            return method(*args, **kwargs)
+        return op
+
+    def __getattr__(self, name):  # anything un-counted passes through
+        return getattr(self.inner, name)
+
+    def drain_pending(self) -> float:
+        """Take the KV latency accrued since the last drain (seconds)."""
+        with self._lock:
+            out, self._pending_s = self._pending_s, 0.0
+            return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticEvent:
+    """One fleet-size change: at virtual time `t`, `delta` workers join
+    (positive) or are pre-empted (negative)."""
+
+    t: float
+    delta: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticSchedule:
+    """A join/leave timetable for an elastic (pre-emptible) fleet.
+
+    Leaves pre-empt the highest-index active workers *abruptly*: a departing
+    worker abandons its in-flight task without failing it, so recovery rides
+    the TaskQueue lease-expiry / straggler-speculation path — the paper's
+    pre-emptible-VM reality.  Joins add brand-new workers (fresh mounts,
+    fresh clocks) that start claiming immediately.
+    """
+
+    events: Tuple[ElasticEvent, ...]
+
+    def __post_init__(self):
+        for ev in self.events:
+            if ev.t < 0:
+                raise ValueError(f"elastic event before t=0: {ev}")
+            if ev.delta == 0:
+                raise ValueError(f"no-op elastic event: {ev}")
+
+    @staticmethod
+    def churn(nodes: int, fraction: float, leave_t: float,
+              rejoin_t: float) -> "ElasticSchedule":
+        """`fraction` of an `nodes`-node fleet leaves at `leave_t` and is
+        replaced at `rejoin_t` (the benchmark's 25%-churn scenario)."""
+        n = int(nodes * fraction)
+        if n < 1:
+            raise ValueError(
+                f"churn fraction {fraction} pre-empts no worker out of "
+                f"{nodes}; use fraction >= 1/nodes or no schedule at all")
+        if rejoin_t <= leave_t:
+            raise ValueError(f"rejoin {rejoin_t} must follow leave {leave_t}")
+        return ElasticSchedule((ElasticEvent(leave_t, -n),
+                                ElasticEvent(rejoin_t, +n)))
+
+
+class _Flow:
+    """One task's in-flight I/O phase: bytes draining at a fabric-granted
+    rate, followed by a fixed tail (metadata round-trips + compute)."""
+
+    __slots__ = ("task", "result", "error", "bytes_left", "demand",
+                 "tail_s", "rate", "epoch")
+
+    def __init__(self, task, result, error, bytes_left: float,
+                 demand: float, tail_s: float):
+        self.task = task
+        self.result = result
+        self.error = error
+        self.bytes_left = bytes_left
+        self.demand = demand
+        self.tail_s = tail_s
+        self.rate = 0.0
+        self.epoch = 0
+
+
 class Worker:
     """One simulated node: festivus mount + clock + counters.
 
@@ -124,7 +243,8 @@ class Worker:
     """
 
     def __init__(self, index: int, store: MountStore, fs: Festivus,
-                 clock: perfmodel.WorkerClock):
+                 clock: perfmodel.WorkerClock, zone: int = 0,
+                 meta: Optional[MountMeta] = None):
         self.index = index
         self.name = f"node{index}"
         self.store = store
@@ -132,11 +252,21 @@ class Worker:
         #: the node's busy time: advanced to each task's (virtual or wall)
         #: completion, never by idle polling — reported as virtual_time_s
         self.clock = clock
+        #: fabric-zone membership; contention is water-filled per zone
+        self.zone = zone
+        #: per-worker view of the shared metadata KV (op counts + latency)
+        self.meta = meta
+        #: False once pre-empted by an ElasticSchedule leave event
+        self.active = True
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.duplicate_completions = 0
         self._idle_backoff = 0.0
         self._pending_compute_s = 0.0
+        #: the task id currently being executed (heartbeat chain target)
+        self._current: Optional[str] = None
+        #: True while a claimed task's FINISH is outstanding
+        self._inflight = False
         self._chunkstores: Dict[str, ChunkStore] = {}
 
     def chunkstore(self, root: str = "arrays") -> ChunkStore:
@@ -183,6 +313,17 @@ class ClusterConfig:
     #: real-time mode: idle sleep and bail-out budget
     poll_s: float = 0.001
     max_idle_polls: int = 2000
+    #: virtual mode: zone-fabric contention model water-filled across all
+    #: concurrently-reading mounts (None -> uncontended ideal fabric)
+    fabric: Optional[perfmodel.FabricModel] = perfmodel.FABRIC_MODEL
+    #: number of fabric zones; workers are assigned round-robin and each
+    #: zone's capacity is shared only by its own readers
+    zones: int = 1
+    #: virtual seconds charged per metadata-KV op (stat/dirent/manifest
+    #: against the shared store) to the issuing worker's clock
+    meta_op_latency_s: float = perfmodel.METADATA_OP_LATENCY_S
+    #: virtual mode: join/leave timetable for an elastic fleet
+    elastic: Optional[ElasticSchedule] = None
 
 
 @dataclasses.dataclass
@@ -194,6 +335,12 @@ class WorkerReport:
     virtual_time_s: float
     store_stats: StoreStats
     festivus_stats: FestivusStats
+    #: ops this worker issued against the shared metadata KV
+    meta_ops: int = 0
+    #: fabric-zone membership
+    zone: int = 0
+    #: False if the worker was pre-empted mid-campaign (elastic leave)
+    active: bool = True
 
 
 @dataclasses.dataclass
@@ -212,6 +359,11 @@ class ClusterReport:
     dead_tasks: List[str]
     results: Dict[str, Any]
     per_worker: List[WorkerReport]
+    #: total metadata-KV ops issued by the fleet
+    meta_ops: int = 0
+    #: elastic-fleet accounting: workers added / pre-empted mid-campaign
+    joined: int = 0
+    left: int = 0
 
     @property
     def all_done(self) -> bool:
@@ -230,7 +382,7 @@ class ClusterReport:
 #: task handler contract: (worker context, payload) -> result
 Handler = Callable[[Worker, Any], Any]
 
-_DISPATCH, _FINISH, _HEARTBEAT = 0, 1, 2
+_DISPATCH, _FINISH, _HEARTBEAT, _IO_DONE, _JOIN, _LEAVE = range(6)
 
 
 class ClusterEngine:
@@ -245,6 +397,10 @@ class ClusterEngine:
                  config: Optional[ClusterConfig] = None):
         self.inner = store
         self.config = config or ClusterConfig()
+        if self.config.elastic is not None and not self.config.virtual_time:
+            raise ValueError("elastic fleets require virtual_time=True "
+                             "(real-thread mode has no event loop to drive "
+                             "join/leave)")
         #: the shared metadata KV — pass the caller's so its mounts see
         #: everything the fleet writes (and vice versa)
         self.meta = meta if meta is not None else MetadataStore()
@@ -255,7 +411,11 @@ class ClusterEngine:
             # latency-hiding effect is already modeled by water-filling the
             # drained service time over the mount's in-flight streams
             fest_cfg = dataclasses.replace(fest_cfg, readahead_blocks=0)
-        model = self.config.store_model if self.config.virtual_time else None
+        self._fest_cfg = fest_cfg
+        self._store_model = (self.config.store_model
+                             if self.config.virtual_time else None)
+        self._meta_latency = (self.config.meta_op_latency_s
+                              if self.config.virtual_time else 0.0)
         # the DES runs one handler at a time, so all mounts can share one
         # block-engine pool; per-mount pools would pin nodes x max_inflight
         # idle OS threads at 512 simulated nodes
@@ -265,14 +425,23 @@ class ClusterEngine:
             if self.config.virtual_time else None)
         self.workers: List[Worker] = []
         for i in range(self.config.nodes):
-            mount = MountStore(store, model=model)
-            fs = Festivus(mount, meta=self.meta, config=fest_cfg,
-                          pool=self._shared_pool)
-            self.workers.append(Worker(i, mount, fs, perfmodel.WorkerClock()))
+            self.workers.append(self._make_worker(i))
         self._now = 0.0
         self._inflight = max(1, min(fest_cfg.max_inflight,
                                     self.config.store_model.max_inflight_per_node))
         self._node_cap = perfmodel.node_cap_bytes_per_s(self.config.vcpus)
+        self._joined = 0
+        self._left = 0
+
+    def _make_worker(self, index: int) -> Worker:
+        """One node: private mount + metered KV view + clock (also the
+        elastic-join path, so joiners get exactly the same plumbing)."""
+        mount = MountStore(self.inner, model=self._store_model)
+        mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
+        fs = Festivus(mount, meta=mmeta, config=self._fest_cfg,
+                      pool=self._shared_pool)
+        return Worker(index, mount, fs, perfmodel.WorkerClock(),
+                      zone=index % self.config.zones, meta=mmeta)
 
     # -- public API -----------------------------------------------------------
     def run(self, tasks: Dict[str, Any], handler: Handler) -> ClusterReport:
@@ -303,15 +472,24 @@ class ClusterEngine:
             min_completions_for_speculation=self.config.min_completions_for_speculation,
             clock=clock)
 
-    def _task_virtual_s(self, worker: Worker) -> float:
-        """Drain a task's accrued I/O + compute into one virtual duration."""
+    def _drain_task(self, worker: Worker) -> Tuple[float, int, float]:
+        """Drain a task's accrued I/O, bytes, and fixed tail (KV + compute).
+
+        Returns ``(io_s, nbytes, tail_s)``: `io_s` is the *uncontended*
+        I/O duration — service time water-filled over the mount's in-flight
+        streams, floored by the per-node NIC/CPU law — from which the flow's
+        bandwidth demand is derived; `tail_s` is metadata-KV round-trips
+        plus virtual compute, charged after the I/O phase.
+        """
         service_s, nbytes = worker.store.drain_pending()
         io_s = 0.0
         if service_s:
             io_s = service_s / self._inflight
             if nbytes:
                 io_s = max(io_s, nbytes / self._node_cap)
-        return io_s + worker._drain_compute() + self.config.compute_s_per_task
+        tail_s = (worker.meta.drain_pending() + worker._drain_compute()
+                  + self.config.compute_s_per_task)
+        return io_s, nbytes, tail_s
 
     # -- real-time mode: N threads, wall clock --------------------------------
     def _run_threads(self, queue: TaskQueue, handler: Handler) -> float:
@@ -354,35 +532,124 @@ class ClusterEngine:
 
     # -- virtual-time mode: deterministic discrete-event simulation -----------
     def _run_virtual(self, queue: TaskQueue, handler: Handler) -> float:
+        """Global event loop: dispatch, fabric-contended I/O flows, elastic
+        join/leave.
+
+        The fabric is reallocated lazily: membership changes (flow start,
+        flow end, pre-emption) mark it dirty, and one water-filling pass
+        runs when simulated time is about to advance — so a 512-node wave
+        starting at the same instant costs one reallocation, not 512.
+        Every reallocation bumps each flow's epoch and pushes a fresh
+        predicted ``_IO_DONE``; stale predictions are dropped by epoch.
+        """
         heap: List = []
         seq = 0
+        #: worker index -> in-flight _Flow (the fabric's current readers)
+        flows: Dict[int, _Flow] = {}
+        fabric = (perfmodel.SharedFabric(self.config.fabric,
+                                         zones=self.config.zones)
+                  if self.config.fabric is not None else None)
+        dirty = False
+        last_alloc = 0.0
 
         def push(t: float, kind: int, widx: int, data=None):
             nonlocal seq
             seq += 1
             heapq.heappush(heap, (t, seq, kind, widx, data))
 
+        def reallocate():
+            """Advance every flow to now at its old rate, then water-fill
+            the new rates and re-predict each flow's I/O completion."""
+            nonlocal dirty, last_alloc
+            dt = self._now - last_alloc
+            if dt > 0:
+                for fl in flows.values():
+                    fl.bytes_left = max(0.0, fl.bytes_left - fl.rate * dt)
+            last_alloc = self._now
+            rates = fabric.allocations()
+            for widx, fl in flows.items():
+                fl.rate = rates[widx]
+                fl.epoch += 1
+                if fl.rate > 0:
+                    push(self._now + fl.bytes_left / fl.rate, _IO_DONE,
+                         widx, fl.epoch)
+            dirty = False
+
+        for ev in (self.config.elastic.events if self.config.elastic else ()):
+            push(ev.t, _JOIN if ev.delta > 0 else _LEAVE, -1, abs(ev.delta))
         for w in self.workers:
             push(0.0, _DISPATCH, w.index)
         busy = 0
         makespan = 0.0
         events = 0
-        while heap:
+        while heap or dirty:
+            if dirty and (not heap or heap[0][0] > self._now):
+                reallocate()
+                continue
             events += 1
             if events > 2_000_000:
                 raise RuntimeError(
-                    "cluster DES runaway — check task/handler wiring")
+                    "cluster DES runaway — check task/handler wiring (an "
+                    "abandoned task with a huge lease and speculation "
+                    "disabled polls forever)")
             t, _, kind, widx, data = heapq.heappop(heap)
             self._now = max(self._now, t)
+
+            if kind == _JOIN:
+                for _ in range(data):
+                    w = self._make_worker(len(self.workers))
+                    self.workers.append(w)
+                    self._joined += 1
+                    push(self._now, _DISPATCH, w.index)
+                continue
+
+            if kind == _LEAVE:
+                victims = [w for w in self.workers if w.active][-data:]
+                for w in victims:
+                    w.active = False
+                    self._left += 1
+                    fl = flows.pop(w.index, None)
+                    if fl is not None:
+                        fabric.remove_flow(w.index)
+                        dirty = True
+                    if w._inflight:
+                        # vanish without fail(): the claimed task stays
+                        # RUNNING until its lease expires or a surviving
+                        # worker speculates it — the pre-emption contract
+                        busy -= 1
+                        w._inflight = False
+                        w._current = None
+                continue
+
             worker = self.workers[widx]
 
             if kind == _HEARTBEAT:
-                queue.heartbeat(data, worker.name)
+                # the chain re-arms itself while the worker is still on the
+                # same task; it goes quiet on completion or pre-emption
+                if worker.active and worker._current == data:
+                    queue.heartbeat(data, worker.name)
+                    push(self._now + self.config.heartbeat_s, _HEARTBEAT,
+                         widx, data)
+                continue
+
+            if kind == _IO_DONE:
+                fl = flows.get(widx)
+                if fl is None or fl.epoch != data:
+                    continue  # superseded by a newer allocation
+                flows.pop(widx)
+                fabric.remove_flow(widx)
+                dirty = True  # departing reader frees bandwidth for the rest
+                push(self._now + fl.tail_s, _FINISH, widx,
+                     (fl.task, fl.result, fl.error))
                 continue
 
             if kind == _FINISH:
+                if not worker.active or not worker._inflight:
+                    continue  # pre-empted after this was scheduled
                 task, result, error = data
                 busy -= 1
+                worker._inflight = False
+                worker._current = None
                 if error is not None:
                     queue.fail(task.task_id, worker.name, error)
                     worker.tasks_failed += 1
@@ -397,6 +664,8 @@ class ClusterEngine:
                 continue
 
             # _DISPATCH: try to claim; retire when the campaign is over
+            if not worker.active:
+                continue
             task = queue.claim(worker.name, lease_s=self.config.lease_s)
             if task is None:
                 if queue.done() and busy == 0:
@@ -407,20 +676,27 @@ class ClusterEngine:
                 push(self._now + worker._idle_backoff, _DISPATCH, worker.index)
                 continue
             worker._idle_backoff = 0.0
+            worker._current = task.task_id
+            worker._inflight = True
+            busy += 1
             result = error = None
             try:
                 result = handler(worker, task.payload)
             except Exception as e:  # noqa: BLE001 — a worker never dies
                 error = f"{type(e).__name__}: {e}"
-            dt = self._task_virtual_s(worker)
-            busy += 1
+            io_s, nbytes, tail_s = self._drain_task(worker)
             if self.config.heartbeat_s:
-                k = 1
-                while k * self.config.heartbeat_s < dt:
-                    push(self._now + k * self.config.heartbeat_s, _HEARTBEAT,
-                         worker.index, task.task_id)
-                    k += 1
-            push(self._now + dt, _FINISH, worker.index, (task, result, error))
+                push(self._now + self.config.heartbeat_s, _HEARTBEAT,
+                     widx, task.task_id)
+            if fabric is not None and nbytes > 0 and io_s > 0:
+                fl = _Flow(task, result, error, bytes_left=float(nbytes),
+                           demand=nbytes / io_s, tail_s=tail_s)
+                flows[widx] = fl
+                fabric.add_flow(widx, worker.zone, fl.demand)
+                dirty = True
+            else:
+                push(self._now + io_s + tail_s, _FINISH, widx,
+                     (task, result, error))
         return makespan
 
     # -- gather ----------------------------------------------------------------
@@ -433,7 +709,9 @@ class ClusterEngine:
                          duplicate_completions=w.duplicate_completions,
                          virtual_time_s=w.clock.now(),
                          store_stats=w.store.stats.snapshot(),
-                         festivus_stats=dataclasses.replace(w.fs.stats))
+                         festivus_stats=dataclasses.replace(w.fs.stats),
+                         meta_ops=w.meta.ops if w.meta is not None else 0,
+                         zone=w.zone, active=w.active)
             for w in self.workers
         ]
         store_stats = StoreStats.merge(r.store_stats for r in per_worker)
@@ -445,7 +723,9 @@ class ClusterEngine:
             store_stats=store_stats, festivus_stats=festivus_stats,
             queue_stats=dict(queue.stats),
             dead_tasks=[t.task_id for t in queue.dead_tasks()],
-            results=queue.results(), per_worker=per_worker)
+            results=queue.results(), per_worker=per_worker,
+            meta_ops=sum(r.meta_ops for r in per_worker),
+            joined=self._joined, left=self._left)
 
 
 def scatter_gather(store: ObjectStore, tasks: Dict[str, Any], handler: Handler,
@@ -453,3 +733,18 @@ def scatter_gather(store: ObjectStore, tasks: Dict[str, Any], handler: Handler,
                    config: Optional[ClusterConfig] = None) -> ClusterReport:
     """One-shot convenience: build an engine, run the campaign, report."""
     return ClusterEngine(store, meta=meta, config=config).run(tasks, handler)
+
+
+def campaign_config(num_workers: Optional[int] = None,
+                    engine_config: Optional[ClusterConfig] = None,
+                    default_nodes: int = 4) -> ClusterConfig:
+    """Resolve the shared campaign-API contract: callers pass either a node
+    count or a full :class:`ClusterConfig` (passing both inconsistently
+    raises) — used by every §V campaign entry point."""
+    if engine_config is None:
+        return ClusterConfig(nodes=num_workers if num_workers else default_nodes)
+    if num_workers is not None and num_workers != engine_config.nodes:
+        raise ValueError(
+            f"num_workers={num_workers} conflicts with "
+            f"engine_config.nodes={engine_config.nodes}; pass only one")
+    return engine_config

@@ -62,6 +62,49 @@ def test_campaign_survives_flaky_store():
     assert flaky.injected_failures > 0
 
 
+def test_campaign_byte_identical_to_single_process(chunkstore):
+    """The engine-run calibration campaign must write exactly the tiles the
+    direct single-process path writes, byte for byte."""
+    keys = [f"scenes/s{i}" for i in range(3)]
+    for i, k in enumerate(keys):
+        calibration.make_raw_scene(chunkstore, k, 96, 96, seed=10 + i)
+    out = calibration.run_campaign(chunkstore, chunkstore, keys,
+                                   num_workers=3, tile_px=48)
+    assert out["report"].all_done
+    ref_cs = ChunkStore(chunkstore.fs, "ref_out")
+    for k in keys:
+        calibration.process_scene(chunkstore, ref_cs, k, tile_px=48)
+    got_tiles = [n for n in chunkstore.list_arrays() if "/t" in n]
+    ref_tiles = ref_cs.list_arrays()
+    assert sorted(got_tiles) == sorted(ref_tiles) and ref_tiles
+    for name in ref_tiles:
+        got = chunkstore.open(name).read_all()
+        ref = ref_cs.open(name).read_all()
+        assert got.tobytes() == ref.tobytes(), name
+
+
+def test_campaign_through_virtual_time_engine(chunkstore):
+    """§V.A runs unchanged on the DES: same outputs, virtual makespan."""
+    from repro.launch.cluster import ClusterConfig
+
+    keys = [f"scenes/v{i}" for i in range(2)]
+    for i, k in enumerate(keys):
+        calibration.make_raw_scene(chunkstore, k, 64, 64, seed=20 + i)
+    out = calibration.run_campaign(
+        chunkstore, chunkstore, keys, tile_px=32,
+        engine_config=ClusterConfig(nodes=2, virtual_time=True))
+    assert out["scenes"] == 2 and out["report"].all_done
+    assert out["report"].makespan_s > 0
+    assert out["report"].meta_ops > 0
+
+
+def test_campaign_rejects_split_stores():
+    a = ChunkStore(Festivus(InMemoryObjectStore()), "raw")
+    b = ChunkStore(Festivus(InMemoryObjectStore()), "raw")
+    with pytest.raises(ValueError):
+        calibration.run_campaign(a, b, ["scenes/s0"])
+
+
 # ---------------------------------------------------------------------------
 # composite (§V.C)
 # ---------------------------------------------------------------------------
@@ -118,3 +161,31 @@ def test_segmentation_geojson_contract(scene_store):
     for feat in geo["features"]:
         assert feat["geometry"]["type"] == "Polygon"
         assert feat["properties"]["pixels"] >= 8
+
+
+def test_segmentation_campaign_byte_identical_to_single_process(chunkstore):
+    """run_segmentation_campaign == segment_to_store per tile, byte for
+    byte (labels array and GeoJSON), with the fleet's writes visible to
+    the caller's mount."""
+    names = []
+    for i in range(3):
+        name = f"tiles/seg{i}"
+        imagery.write_scene_stack(
+            chunkstore, name,
+            imagery.SceneSpec(tile_px=48, temporal_depth=4, seed=30 + i),
+            chunk_px=16)
+        names.append(name)
+    out = segmentation.run_segmentation_campaign(chunkstore, names, IMG_CFG,
+                                                 num_workers=3)
+    assert out["tiles"] == 3 and out["report"].all_done
+    for n in names:
+        segmentation.segment_to_store(chunkstore, n, IMG_CFG,
+                                      out_prefix="fields_ref")
+        got = chunkstore.open(f"fields/{n}/labels").read_all()
+        ref = chunkstore.open(f"fields_ref/{n}/labels").read_all()
+        assert got.tobytes() == ref.tobytes(), n
+        got_geo = chunkstore.fs.read(f"{chunkstore.root}/fields/{n}/fields.geojson")
+        ref_geo = chunkstore.fs.read(
+            f"{chunkstore.root}/fields_ref/{n}/fields.geojson")
+        assert got_geo == ref_geo, n
+    assert all(r["fields"] >= 0 for r in out["report"].results.values())

@@ -6,14 +6,23 @@ heartbeats) end-to-end through TaskQueue + Festivus + ChunkStore."""
 import collections
 import threading
 
+import pytest
+
 from repro.apps.composite import composite_tile, run_composite_campaign
 from repro.configs.festivus_imagery import SMOKE as IMG_CFG
 from repro.core import ChunkStore, Festivus, FestivusConfig, InMemoryObjectStore
+from repro.core import perfmodel
 from repro.core.metadata import MetadataStore
+from repro.launch.cluster import (
+    ClusterConfig,
+    ClusterEngine,
+    ElasticEvent,
+    ElasticSchedule,
+)
 from repro.data import imagery
-from repro.launch.cluster import ClusterConfig, ClusterEngine
 
 KiB = 1024
+MiB = 1024 * 1024
 
 
 # ---------------------------------------------------------------------------
@@ -159,3 +168,181 @@ def test_heartbeat_keeps_long_task_leased():
     assert report.queue_stats["expired"] == 0  # renewals held the lease
     assert report.queue_stats["duplicate_completions"] == 0
     assert report.queue_stats["completed"] == len(tasks)
+
+
+# ---------------------------------------------------------------------------
+# simulated fabric contention (the Table III curve, inside the DES)
+# ---------------------------------------------------------------------------
+def _heavy_scan(nodes, *, fabric=perfmodel.FABRIC_MODEL, zones=1,
+                elastic=None, lease_s=3600.0, spec=10**6, write_out=False,
+                tasks_per_node=1):
+    """Scan tasks sized so each node demands ~1.13 GB/s (its NIC/CPU cap):
+    beyond 16 readers the zone fabric must throttle them."""
+    task_bytes = 8 * MiB
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x5a" * (8 * task_bytes))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=nodes, vcpus=16, virtual_time=True, lease_s=lease_s,
+        fabric=fabric, zones=zones, elastic=elastic,
+        min_completions_for_speculation=spec,
+        festivus=FestivusConfig(block_bytes=4 * MiB, readahead_blocks=0,
+                                cache_bytes=0, max_inflight=2)))
+
+    def handler(worker, payload):
+        i, offset = payload
+        data = worker.fs.read("obj", offset, task_bytes)
+        if write_out:
+            worker.fs.write(f"out/t{i}", str(len(data)).encode())
+        return len(data)
+
+    tasks = {f"s{i}": (i, (i % 8) * task_bytes)
+             for i in range(nodes * tasks_per_node)}
+    report = engine.run(tasks, handler)
+    return report, inner
+
+
+def test_fabric_contention_is_simulated_not_post_processed():
+    """64 heavy readers must come out fabric-limited (~36.3 GB/s aggregate)
+    from the simulated makespan alone; the same campaign on an ideal
+    fabric scales linearly to ~2x that."""
+    contended, _ = _heavy_scan(64)
+    assert contended.all_done
+    agg = contended.read_bandwidth_bytes_per_s
+    assert agg == pytest.approx(36.3e9, rel=0.05)
+    ideal, _ = _heavy_scan(64, fabric=None)
+    assert ideal.read_bandwidth_bytes_per_s > 1.8 * agg
+
+
+def test_per_node_bandwidth_degrades_beyond_onset():
+    per_node = {}
+    for nodes in (4, 64):
+        report, _ = _heavy_scan(nodes)
+        per_node[nodes] = report.read_bandwidth_bytes_per_s / nodes
+    assert per_node[64] < 0.65 * per_node[4]  # sub-linear past 16 readers
+
+
+def test_fabric_zones_partition_contention():
+    """Two zones of 32 readers each see less contention than one of 64:
+    zone capacity is shared only among that zone's concurrent readers."""
+    one_zone, _ = _heavy_scan(64, zones=1)
+    two_zones, _ = _heavy_scan(64, zones=2)
+    assert two_zones.all_done
+    assert (two_zones.read_bandwidth_bytes_per_s
+            > 1.2 * one_zone.read_bandwidth_bytes_per_s)
+    zones = {r.zone for r in two_zones.per_worker}
+    assert zones == {0, 1}
+
+
+def test_single_reader_matches_table_iii_row():
+    report, _ = _heavy_scan(1, tasks_per_node=2)
+    assert report.read_bandwidth_bytes_per_s == pytest.approx(1.0e9, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# metadata-KV latency accounting
+# ---------------------------------------------------------------------------
+def test_meta_ops_counted_and_charged_to_clocks():
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x11" * 1024)
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=1, virtual_time=True, meta_op_latency_s=1.0,
+        min_completions_for_speculation=10**6))
+
+    def handler(worker, _):
+        worker.fs.stat("obj")  # exactly one KV round-trip
+        return True
+
+    report = engine.run({"t0": 0}, handler)
+    assert report.all_done
+    assert report.meta_ops == 1
+    assert report.per_worker[0].meta_ops == 1
+    # the round-trip is charged to the worker clock, not just counted
+    assert report.makespan_s == pytest.approx(1.0, abs=1e-6)
+
+
+def test_meta_latency_default_is_negligible_but_nonzero():
+    report, _ = _heavy_scan(1, tasks_per_node=2)
+    assert report.meta_ops > 0  # stat per read went through the shared KV
+
+
+# ---------------------------------------------------------------------------
+# elastic fleets: join/leave mid-campaign, lease-expiry handoff
+# ---------------------------------------------------------------------------
+def test_elastic_requires_virtual_time():
+    with pytest.raises(ValueError):
+        ClusterEngine(InMemoryObjectStore(), config=ClusterConfig(
+            nodes=2, virtual_time=False,
+            elastic=ElasticSchedule((ElasticEvent(1.0, -1),))))
+
+
+def test_elastic_schedule_validation():
+    with pytest.raises(ValueError):
+        ElasticSchedule((ElasticEvent(-1.0, 1),))
+    with pytest.raises(ValueError):
+        ElasticSchedule((ElasticEvent(0.0, 0),))
+    with pytest.raises(ValueError):
+        ElasticSchedule.churn(8, 0.25, leave_t=2.0, rejoin_t=1.0)
+    with pytest.raises(ValueError):  # fraction too small to pre-empt anyone
+        ElasticSchedule.churn(8, 0.01, leave_t=1.0, rejoin_t=2.0)
+
+
+def test_churn_completes_exactly_once_with_identical_output():
+    """The acceptance bar: 25% of the fleet pre-empted mid-campaign and
+    replaced later; the campaign still completes every task exactly once
+    and the written artifacts are byte-identical to the static run."""
+    static, static_store = _heavy_scan(8, tasks_per_node=4, write_out=True)
+    assert static.all_done
+
+    schedule = ElasticSchedule.churn(8, 0.25,
+                                     leave_t=0.3 * static.makespan_s,
+                                     rejoin_t=0.6 * static.makespan_s)
+    churn, churn_store = _heavy_scan(
+        8, tasks_per_node=4, write_out=True, elastic=schedule,
+        lease_s=1.5 * static.makespan_s, spec=5)
+    assert churn.all_done
+    assert churn.left == 2 and churn.joined == 2
+    assert churn.queue_stats["completed"] == churn.tasks
+    assert not churn.dead_tasks
+    # the handoff went through the queue's recovery machinery
+    assert churn.queue_stats["expired"] + churn.queue_stats["speculated"] > 0
+    assert churn.makespan_s > static.makespan_s  # pre-emption is not free
+
+    def outputs(store):
+        return {k: store.get_range(k, 0, store.head(k).size)
+                for k in store.list("out/")}
+
+    assert outputs(churn_store) == outputs(static_store)
+    assert len(outputs(churn_store)) == churn.tasks
+    # departed workers are reported as inactive; replacements exist
+    inactive = [r for r in churn.per_worker if not r.active]
+    assert len(inactive) == 2
+    assert len(churn.per_worker) == 10
+
+
+def test_join_only_fleet_accelerates_campaign():
+    """A fleet that doubles mid-campaign must beat the static half-fleet.
+    (Joiners get fresh mounts/clocks and start claiming immediately.)"""
+    small, _ = _heavy_scan(2, tasks_per_node=8)
+    grow_sched = ElasticSchedule((ElasticEvent(0.25 * small.makespan_s, 2),))
+    grown, _ = _heavy_scan(2, tasks_per_node=8, elastic=grow_sched)
+    assert grown.all_done
+    assert grown.joined == 2 and grown.left == 0
+    assert grown.makespan_s < small.makespan_s
+    assert len(grown.per_worker) == 4
+
+
+def test_shrink_only_fleet_still_completes():
+    schedule = ElasticSchedule((ElasticEvent(1e-4, -3),))
+    report, _ = _heavy_scan(4, tasks_per_node=4, elastic=schedule,
+                            lease_s=0.05, spec=5)
+    assert report.all_done
+    assert report.left == 3
+    assert report.queue_stats["completed"] == report.tasks

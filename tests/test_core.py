@@ -281,6 +281,77 @@ def test_chunkstore_pyramid_spatial(chunkstore):
     assert arr.read_level(2).shape == (4, 4, 4, 3)
 
 
+def _pyramid_reference(x: np.ndarray, levels: int):
+    """Numpy oracle for build_pyramid's mean-pooling (spatial dims last-2/-3)."""
+    nd = x.ndim
+    dh = nd - 3 if nd >= 3 else nd - 2
+    out = []
+    cur = x.astype(np.float64)
+    for _ in range(levels):
+        h, w = cur.shape[dh], cur.shape[dh + 1]
+        h2, w2 = max(1, h // 2), max(1, w // 2)
+        sl = [slice(None)] * cur.ndim
+        sl[dh], sl[dh + 1] = slice(0, h2 * 2), slice(0, w2 * 2)
+        c = cur[tuple(sl)]
+        shape = c.shape[:dh] + (h2, 2, w2, 2) + c.shape[dh + 2:]
+        cur = c.reshape(shape).mean(axis=(dh + 1, dh + 3))
+        out.append(cur.astype(x.dtype))
+    return out
+
+
+@pytest.mark.parametrize("shape,chunks", [
+    ((21, 37, 3), (8, 16, 3)),    # non-square, chunk-unaligned spatial dims
+    ((50, 18), (16, 7)),          # rank-2, unaligned both ways
+    ((3, 33, 65, 2), (1, 32, 32, 2)),  # leading temporal dim, odd extents
+])
+def test_pyramid_roundtrip_non_square_non_aligned(chunkstore, rng, shape, chunks):
+    x = rng.standard_normal(shape).astype(np.float32)
+    arr = chunkstore.create("pyr", shape, np.float32, chunks, codec="zlib",
+                            pyramid_levels=2)
+    arr.write_region((0,) * len(shape), x)
+    arr.build_pyramid()
+    refs = _pyramid_reference(x, 2)
+    for level, ref in enumerate(refs, start=1):
+        got = arr.read_level(level)
+        assert got.shape == ref.shape
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    # level 0 is the original; a reopened handle sees the same pyramid
+    np.testing.assert_array_equal(arr.read_level(0), x)
+    np.testing.assert_allclose(chunkstore.open("pyr").read_level(1), refs[0],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pyramid_read_level_unbuilt_raises(chunkstore):
+    arr = chunkstore.create("nopyr", (8, 8), np.float32, (4, 4),
+                            pyramid_levels=2)
+    arr.write_region((0, 0), np.ones((8, 8), np.float32))
+    with pytest.raises(KeyError):
+        arr.read_level(1)
+
+
+def test_festivus_cache_invalidated_on_write(fs, store):
+    fs.write("obj", b"a" * 1000)
+    assert fs.read("obj") == b"a" * 1000  # populates the block cache
+    assert fs.read("obj") == b"a" * 1000  # served from cache
+    hits_before = fs.stats.cache_hits
+    assert hits_before > 0
+    fs.write("obj", b"b" * 500)  # update == rewrite; must invalidate
+    assert fs.read("obj") == b"b" * 500
+    assert int(fs.stat("obj")["size"]) == 500
+
+
+def test_festivus_cache_invalidated_on_delete(fs, store):
+    fs.write("gone", b"x" * 256)
+    assert fs.read("gone") == b"x" * 256
+    fs.delete("gone")
+    assert not fs.exists("gone")
+    with pytest.raises(FileNotFoundError):
+        fs.read("gone")
+    # re-creating the path must not resurrect stale cached blocks
+    fs.write("gone", b"y" * 64)
+    assert fs.read("gone") == b"y" * 64
+
+
 def test_chunkstore_list_and_delete(chunkstore):
     chunkstore.create("one", (4,), np.float32, (2,))
     chunkstore.create("two", (4,), np.float32, (2,))

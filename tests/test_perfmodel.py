@@ -80,6 +80,63 @@ def test_petabyte_storage_cost():
     assert cost == pytest.approx(315_000, rel=0.02)
 
 
+def test_zone_capacity_interpolates_table_iii():
+    """The simulated fabric's capacity curve passes through every measured
+    16-vCPU row exactly and is monotone in the reader count."""
+    for nodes, gb_s in ((1, 1.0), (4, 4.1), (16, 17.4), (64, 36.3),
+                        (128, 70.5), (512, 231.3)):
+        cap = pm.FABRIC_MODEL.zone_capacity_bytes_per_s(nodes)
+        assert cap == pytest.approx(gb_s * 1e9, rel=1e-6), nodes
+    caps = [pm.FABRIC_MODEL.zone_capacity_bytes_per_s(n)
+            for n in (1, 2, 3, 8, 32, 100, 256, 512, 600, 2048)]
+    assert all(b > a for a, b in zip(caps, caps[1:]))
+    assert pm.FABRIC_MODEL.zone_capacity_bytes_per_s(0) == 0.0
+    # beyond the last measured row: the fitted power law keeps the slope
+    assert pm.FABRIC_MODEL.zone_capacity_bytes_per_s(1024) == pytest.approx(
+        231.3e9 * 2 ** pm.FABRIC_MODEL.fabric_exponent, rel=1e-6)
+
+
+def test_water_fill_max_min_fairness():
+    # under capacity: everyone gets their demand
+    assert pm.water_fill([3.0, 1.0, 2.0], 10.0) == [3.0, 1.0, 2.0]
+    # over capacity: small demands satisfied first, rest split evenly
+    assert pm.water_fill([5.0, 1.0, 5.0], 7.0) == [3.0, 1.0, 3.0]
+    alloc = pm.water_fill([10.0, 10.0, 10.0, 10.0], 6.0)
+    assert alloc == [1.5] * 4
+    # conservation + no flow exceeds its demand
+    demands = [0.5, 8.0, 2.5, 4.0]
+    alloc = pm.water_fill(demands, 6.0)
+    assert sum(alloc) == pytest.approx(6.0)
+    assert all(a <= d + 1e-12 for a, d in zip(alloc, demands))
+    assert pm.water_fill([], 5.0) == []
+    with pytest.raises(ValueError):
+        pm.water_fill([1.0, -2.0], 5.0)
+
+
+def test_shared_fabric_zones_isolate_contention():
+    fab = pm.SharedFabric(zones=2)
+    # two heavy readers in *different* zones each get a full 1-reader zone
+    fab.add_flow("a", 0, 2e9)
+    fab.add_flow("b", 1, 2e9)
+    rates = fab.allocations()
+    one_reader_cap = pm.FABRIC_MODEL.zone_capacity_bytes_per_s(1)
+    assert rates["a"] == pytest.approx(one_reader_cap)
+    assert rates["b"] == pytest.approx(one_reader_cap)
+    # the same two readers in *one* zone share the 2-reader capacity
+    fab1 = pm.SharedFabric(zones=1)
+    fab1.add_flow("a", 0, 2e9)
+    fab1.add_flow("b", 0, 2e9)
+    shared = fab1.allocations()
+    two_reader_cap = pm.FABRIC_MODEL.zone_capacity_bytes_per_s(2)
+    assert shared["a"] + shared["b"] == pytest.approx(two_reader_cap)
+    # bookkeeping: removal frees the zone; duplicate keys are rejected
+    assert fab.readers() == 2 and fab.readers(zone=0) == 1
+    with pytest.raises(ValueError):
+        fab.add_flow("a", 0, 1e9)
+    fab.remove_flow("a")
+    assert fab.readers() == 1
+
+
 def test_roofline_terms_bottleneck():
     terms = pm.roofline_terms(hlo_flops=1e18, hlo_bytes=1e12,
                               collective_bytes=1e12, chips=256)
