@@ -10,9 +10,11 @@ export PYTHONPATH := src:$(PYTHONPATH)
 test:  ## tier-1: full suite, fail fast
 	$(PYTHON) -m pytest -x -q
 
-bench-smoke:  ## cluster-engine scaling curve + end-to-end composite example
+bench-smoke:  ## scaling curve + serving SLO + end-to-end examples
 	$(PYTHON) benchmarks/cluster_scaling.py --nodes 1,8,64,512
+	$(PYTHON) benchmarks/serving.py --smoke --out ''
 	$(PYTHON) examples/global_composite.py
+	$(PYTHON) examples/tile_server.py
 
 bench:  ## every paper-table reproduction + kernel timings
 	$(PYTHON) -m benchmarks.run

@@ -61,6 +61,7 @@ def main() -> None:
         composite_bench,
         linpack,
         pipeline_bench,
+        serving,
     )
 
     results = {}
@@ -71,6 +72,7 @@ def main() -> None:
         ("sec_IV_A_linpack", linpack.run),
         ("sec_V_C_composite", composite_bench.run),
         ("sec_V_A_pipeline", pipeline_bench.run),
+        ("sec_V_D_serving", serving.run),
         ("kernel_microbench", kernel_microbench),
     ]
     timings = []

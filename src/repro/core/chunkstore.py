@@ -73,6 +73,26 @@ def _chunk_key(root: str, name: str, idx: Sequence[int], level: int = 0) -> str:
     return f"{prefix}/c/{'.'.join(str(i) for i in idx)}"
 
 
+def spatial_dims(shape: Sequence[int]) -> Tuple[int, int]:
+    """Imagery convention: channel-last for rank >= 3 ([..., H, W, C]),
+    plain [..., H, W] otherwise.  The single source of truth — the serving
+    layer (repro.serve) addresses tiles with the same convention."""
+    nd = len(shape)
+    return (nd - 3, nd - 2) if nd >= 3 else (nd - 2, nd - 1)
+
+
+def pyramid_level_shape(shape: Sequence[int], level: int) -> Tuple[int, ...]:
+    """Shape of a pyramid level: spatial axes halved `level` times with a
+    floor of 1 (an axis at the floor stops halving; build_pyramid pools
+    it with window 1)."""
+    if level == 0:
+        return tuple(shape)
+    out = list(shape)
+    for d in spatial_dims(shape):
+        out[d] = max(1, out[d] >> level)
+    return tuple(out)
+
+
 class ChunkStore:
     """Create/open chunked arrays on a Festivus mount."""
 
@@ -130,6 +150,9 @@ class ChunkedArray:
         self.spec = spec
         self._np_dtype = np.dtype(spec.dtype)
         self._codec = codec_mod.by_name(spec.codec)
+        #: levels known built (positive cache only: a built level never
+        #: un-builds, so one metadata-KV check per handle suffices)
+        self._built_levels: set = set()
 
     # -- chunk primitives -----------------------------------------------------
     def _key(self, idx: Sequence[int], level: int = 0) -> str:
@@ -171,13 +194,31 @@ class ChunkedArray:
         yield from np.ndindex(*[h - l for l, h in zip(los, his)])
         # note: caller adds `los` back; see read_region
 
-    def read_region(self, start: Sequence[int], stop: Sequence[int]) -> np.ndarray:
-        """Read [start, stop) assembling covering chunks (fetched in parallel)."""
+    def read_region(self, start: Sequence[int], stop: Sequence[int],
+                    level: int = 0) -> np.ndarray:
+        """Read [start, stop) assembling covering chunks (fetched in parallel).
+
+        With ``level > 0`` the region is addressed in that pyramid level's
+        coordinate space (:meth:`level_shape`) and assembled from the level's
+        chunk grid — the JPX progressive-decode path a tile server uses to
+        serve an overview without touching full-resolution data.
+        """
+        if not (0 <= level <= self.spec.pyramid_levels):
+            raise ValueError(
+                f"level {level} outside pyramid of {self.spec.name} "
+                f"(levels 0..{self.spec.pyramid_levels})")
+        if level > 0:
+            # an unbuilt level must raise like read_level, not silently
+            # assemble fill values (level 0's sparse semantics don't apply:
+            # only build_pyramid can populate a level's chunks)
+            self._check_level_built(level)
+        shape = self.level_shape(level)
         start = tuple(int(s) for s in start)
         stop = tuple(int(s) for s in stop)
-        for s, e, dim in zip(start, stop, self.spec.shape):
+        for s, e, dim in zip(start, stop, shape):
             if not (0 <= s <= e <= dim):
-                raise ValueError(f"region {start}..{stop} outside {self.spec.shape}")
+                raise ValueError(
+                    f"region {start}..{stop} outside {shape} (level {level})")
         out = np.full(tuple(e - s for s, e in zip(start, stop)),
                       self.spec.fill_value, dtype=self._np_dtype)
         los = [s // c for s, c in zip(start, self.spec.chunks)]
@@ -185,7 +226,7 @@ class ChunkedArray:
 
         def fetch(rel_idx):
             idx = tuple(l + r for l, r in zip(los, rel_idx))
-            chunk = self.read_chunk(idx)
+            chunk = self.read_chunk(idx, level)
             src, dst = [], []
             for d, (i, c) in enumerate(zip(idx, self.spec.chunks)):
                 c0 = i * c
@@ -199,6 +240,9 @@ class ChunkedArray:
         for dst, piece in self.store._pool.map(fetch, rels):
             out[dst] = piece
         return out
+
+    #: the serving-layer spelling: any region, any pyramid level
+    read = read_region
 
     def write_region(self, start: Sequence[int], data: np.ndarray) -> None:
         """Write a region; only whole-chunk-aligned writes touch one object
@@ -235,18 +279,20 @@ class ChunkedArray:
 
     # -- multi-resolution pyramid (JPX codestream analogue) ---------------------
     def _spatial_dims(self) -> Tuple[int, int]:
-        """Imagery convention: channel-last for rank >= 3 ([..., H, W, C]),
-        plain [..., H, W] otherwise."""
-        nd = len(self.spec.shape)
-        return (nd - 3, nd - 2) if nd >= 3 else (nd - 2, nd - 1)
+        return spatial_dims(self.spec.shape)
 
     def level_shape(self, level: int) -> Tuple[int, ...]:
-        if level == 0:
-            return self.spec.shape
-        shape = list(self.spec.shape)
-        for d in self._spatial_dims():
-            shape[d] = max(1, shape[d] >> level)
-        return tuple(shape)
+        return pyramid_level_shape(self.spec.shape, level)
+
+    def _check_level_built(self, level: int) -> None:
+        if level in self._built_levels:
+            return
+        raw = self.store.fs.meta.hget(
+            f"pyramid:{self.store.root}/{self.spec.name}", str(level))
+        if raw is None:
+            raise KeyError(
+                f"pyramid level {level} not built for {self.spec.name}")
+        self._built_levels.add(level)
 
     def build_pyramid(self) -> None:
         """Build 2x-downsampled levels by mean-pooling the spatial axes."""
@@ -256,11 +302,14 @@ class ChunkedArray:
         current = self.read_all().astype(np.float64)
         for level in range(1, self.spec.pyramid_levels + 1):
             h, w = current.shape[dh], current.shape[dw]
-            h2, w2 = max(1, h // 2), max(1, w // 2)
+            # an axis already at its max(1, ...) floor stops halving: pool
+            # window 1 keeps it while the other axis keeps downsampling
+            ph, pw = (2 if h >= 2 else 1), (2 if w >= 2 else 1)
+            h2, w2 = h // ph, w // pw
             sl = [slice(None)] * current.ndim
-            sl[dh], sl[dw] = slice(0, h2 * 2), slice(0, w2 * 2)
+            sl[dh], sl[dw] = slice(0, h2 * ph), slice(0, w2 * pw)
             c = current[tuple(sl)]
-            new_shape = c.shape[:dh] + (h2, 2, w2, 2) + c.shape[dh + 2:]
+            new_shape = c.shape[:dh] + (h2, ph, w2, pw) + c.shape[dh + 2:]
             current = c.reshape(new_shape).mean(axis=(dh + 1, dh + 3))
             data = np.ascontiguousarray(current).astype(self._np_dtype)
             grid = tuple(-(-s // ch) for s, ch in
@@ -275,6 +324,7 @@ class ChunkedArray:
             self.store.fs.meta.hset(
                 f"pyramid:{self.store.root}/{self.spec.name}", str(level),
                 json.dumps(list(data.shape)))
+            self._built_levels.add(level)
 
     def read_level(self, level: int) -> np.ndarray:
         if level == 0:

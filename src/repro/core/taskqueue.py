@@ -57,6 +57,10 @@ class Task:
     #: the workers holding those claims — fail/heartbeat from anyone else
     #: (e.g. a zombie whose lease already expired) is ignored
     claimants: set = dataclasses.field(default_factory=set)
+    #: routing tag: only workers claiming with the same pool see this task
+    #: (None = the default shared pool) — how a serving tier and a batch
+    #: campaign share one queue + fabric without stealing each other's work
+    pool: Optional[str] = None
 
 
 class TaskQueue:
@@ -73,7 +77,9 @@ class TaskQueue:
         self.min_completions = min_completions_for_speculation
         self.clock = clock
         self._tasks: Dict[str, Task] = {}
-        self._ready: List = []  # heap of (-priority, seq, task_id)
+        #: per-pool ready heaps of (-priority, seq, task_id); None is the
+        #: default shared pool (claims match a task's pool exactly)
+        self._ready: Dict[Optional[str], List] = {}
         self._seq = 0
         self._lock = threading.RLock()
         self._durations: List[float] = []
@@ -83,12 +89,12 @@ class TaskQueue:
 
     # -- producer side --------------------------------------------------------
     def submit(self, task_id: str, payload: Any, priority: int = 0,
-               max_retries: int = 3) -> Task:
+               max_retries: int = 3, pool: Optional[str] = None) -> Task:
         with self._lock:
             if task_id in self._tasks:
                 raise ValueError(f"duplicate task id {task_id}")
             task = Task(task_id=task_id, payload=payload, priority=priority,
-                        max_retries=max_retries)
+                        max_retries=max_retries, pool=pool)
             self._tasks[task_id] = task
             self._push_ready(task)
             self.stats["submitted"] += 1
@@ -100,17 +106,23 @@ class TaskQueue:
 
     def _push_ready(self, task: Task):
         self._seq += 1
-        heapq.heappush(self._ready, (-task.priority, self._seq, task.task_id))
+        heapq.heappush(self._ready.setdefault(task.pool, []),
+                       (-task.priority, self._seq, task.task_id))
 
     # -- worker side ----------------------------------------------------------
-    def claim(self, worker: str, lease_s: Optional[float] = None) -> Optional[Task]:
-        """Claim the next task: pending first, then a straggler to speculate."""
+    def claim(self, worker: str, lease_s: Optional[float] = None,
+              pool: Optional[str] = None) -> Optional[Task]:
+        """Claim the next task: pending first, then a straggler to speculate.
+
+        A worker claiming with ``pool=P`` sees only tasks submitted with
+        ``pool=P`` (None being the default shared pool)."""
         lease = lease_s if lease_s is not None else self.default_lease_s
         now = self.clock()
         with self._lock:
             self._reap_expired(now)
-            while self._ready:
-                _, _, tid = heapq.heappop(self._ready)
+            ready = self._ready.get(pool, ())
+            while ready:
+                _, _, tid = heapq.heappop(ready)
                 task = self._tasks[tid]
                 if task.state != PENDING:
                     continue  # stale heap entry
@@ -122,8 +134,9 @@ class TaskQueue:
                 task.started_at = now
                 task.lease_deadline = now + lease
                 return task
-            # nothing pending: speculate on a straggler
-            straggler = self._pick_straggler(now, exclude_worker=worker)
+            # nothing pending: speculate on a straggler (same pool only)
+            straggler = self._pick_straggler(now, exclude_worker=worker,
+                                             pool=pool)
             if straggler is not None:
                 straggler.claimants.add(worker)
                 straggler.active_claims = len(straggler.claimants)
@@ -202,13 +215,15 @@ class TaskQueue:
                     task.state = PENDING
                     self._push_ready(task)
 
-    def _pick_straggler(self, now: float, exclude_worker: str) -> Optional[Task]:
+    def _pick_straggler(self, now: float, exclude_worker: str,
+                        pool: Optional[str] = None) -> Optional[Task]:
         if len(self._durations) < self.min_completions:
             return None
         median = statistics.median(self._durations)
         threshold = self.speculation_factor * max(median, 1e-9)
         candidates = [t for t in self._tasks.values()
                       if t.state == RUNNING and t.active_claims == 1
+                      and t.pool == pool
                       and t.worker != exclude_worker
                       and (now - t.started_at) > threshold]
         if not candidates:
@@ -233,6 +248,13 @@ class TaskQueue:
     def results(self) -> Dict[str, Any]:
         with self._lock:
             return {tid: t.result for tid, t in self._tasks.items()
+                    if t.state == DONE}
+
+    def completion_times(self) -> Dict[str, float]:
+        """task_id -> clock() at first completion (virtual time under the
+        cluster DES) — the timestamps a serving tier turns into latency."""
+        with self._lock:
+            return {tid: t.completed_at for tid, t in self._tasks.items()
                     if t.state == DONE}
 
     def dead_tasks(self) -> List[Task]:

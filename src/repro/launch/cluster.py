@@ -39,6 +39,15 @@ Two execution modes share one worker contract:
   (real data always flows; only time is virtual), so tasks must be
   idempotent and write disjoint outputs — the paper's tile model.
 
+Request-shaped tasks (virtual-time only): :meth:`ClusterEngine.run`
+accepts per-task ``arrivals`` (a task becomes claimable at its virtual
+arrival instant, and an arrival wakes idle workers immediately — the
+request-socket model) and ``pools`` (tasks routed to named worker pools,
+:attr:`ClusterConfig.worker_pools`), with per-task
+:attr:`ClusterReport.completion_times` in the gather.  This is what lets
+an interactive serving tier (:mod:`repro.serve`) and a batch campaign
+share one queue and one fabric without stealing each other's workers.
+
 Elastic fleets (virtual-time only): an :class:`ElasticSchedule` adds or
 pre-empts workers mid-campaign.  A pre-empted worker vanishes without
 failing its task — the realistic cloud exit — and the task is handed off
@@ -244,7 +253,8 @@ class Worker:
 
     def __init__(self, index: int, store: MountStore, fs: Festivus,
                  clock: perfmodel.WorkerClock, zone: int = 0,
-                 meta: Optional[MountMeta] = None):
+                 meta: Optional[MountMeta] = None,
+                 pool: Optional[str] = None):
         self.index = index
         self.name = f"node{index}"
         self.store = store
@@ -256,12 +266,18 @@ class Worker:
         self.zone = zone
         #: per-worker view of the shared metadata KV (op counts + latency)
         self.meta = meta
+        #: task-routing pool (ClusterConfig.worker_pools); None = shared
+        self.pool = pool
         #: False once pre-empted by an ElasticSchedule leave event
         self.active = True
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.duplicate_completions = 0
         self._idle_backoff = 0.0
+        #: bumped when an arrival wakes this worker, so the superseded
+        #: backoff-poll chain event is dropped instead of forking a second
+        #: poll chain (same stale-event pattern as _Flow.epoch)
+        self._dispatch_epoch = 0
         self._pending_compute_s = 0.0
         #: the task id currently being executed (heartbeat chain target)
         self._current: Optional[str] = None
@@ -324,6 +340,12 @@ class ClusterConfig:
     meta_op_latency_s: float = perfmodel.METADATA_OP_LATENCY_S
     #: virtual mode: join/leave timetable for an elastic fleet
     elastic: Optional[ElasticSchedule] = None
+    #: ordered (pool_name, count) worker partition, e.g. (("serve", 4),
+    #: ("batch", 16)); counts must sum to `nodes`.  Workers claim only
+    #: tasks routed to their pool (run()'s `pools` argument) — the mixed
+    #: batch+interactive shape where both tiers still share one fabric.
+    #: None = every worker in the default shared pool.
+    worker_pools: Optional[Tuple[Tuple[str, int], ...]] = None
 
 
 @dataclasses.dataclass
@@ -364,6 +386,10 @@ class ClusterReport:
     #: elastic-fleet accounting: workers added / pre-empted mid-campaign
     joined: int = 0
     left: int = 0
+    #: task_id -> completion timestamp (virtual time under the DES; wall
+    #: offsets in thread mode).  With run()'s `arrivals` this is what a
+    #: serving tier turns into per-request latency.
+    completion_times: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def all_done(self) -> bool:
@@ -382,7 +408,7 @@ class ClusterReport:
 #: task handler contract: (worker context, payload) -> result
 Handler = Callable[[Worker, Any], Any]
 
-_DISPATCH, _FINISH, _HEARTBEAT, _IO_DONE, _JOIN, _LEAVE = range(6)
+_DISPATCH, _FINISH, _HEARTBEAT, _IO_DONE, _JOIN, _LEAVE, _ARRIVE = range(7)
 
 
 class ClusterEngine:
@@ -423,6 +449,12 @@ class ClusterEngine:
             ThreadPoolExecutor(max_workers=fest_cfg.max_inflight,
                                thread_name_prefix="cluster-io")
             if self.config.virtual_time else None)
+        if self.config.worker_pools is not None:
+            total = sum(n for _, n in self.config.worker_pools)
+            if total != self.config.nodes:
+                raise ValueError(
+                    f"worker_pools counts sum to {total}, expected "
+                    f"nodes={self.config.nodes}")
         self.workers: List[Worker] = []
         for i in range(self.config.nodes):
             self.workers.append(self._make_worker(i))
@@ -433,6 +465,18 @@ class ClusterEngine:
         self._joined = 0
         self._left = 0
 
+    def _pool_of(self, index: int) -> Optional[str]:
+        """Pool membership by worker index (elastic joiners beyond the
+        configured partition land in the default shared pool)."""
+        if self.config.worker_pools is None:
+            return None
+        hi = 0
+        for name, count in self.config.worker_pools:
+            hi += count
+            if index < hi:
+                return name
+        return None
+
     def _make_worker(self, index: int) -> Worker:
         """One node: private mount + metered KV view + clock (also the
         elastic-join path, so joiners get exactly the same plumbing)."""
@@ -441,16 +485,57 @@ class ClusterEngine:
         fs = Festivus(mount, meta=mmeta, config=self._fest_cfg,
                       pool=self._shared_pool)
         return Worker(index, mount, fs, perfmodel.WorkerClock(),
-                      zone=index % self.config.zones, meta=mmeta)
+                      zone=index % self.config.zones, meta=mmeta,
+                      pool=self._pool_of(index))
 
     # -- public API -----------------------------------------------------------
-    def run(self, tasks: Dict[str, Any], handler: Handler) -> ClusterReport:
+    def run(self, tasks: Dict[str, Any], handler: Handler,
+            arrivals: Optional[Dict[str, float]] = None,
+            pools: Optional[Dict[str, str]] = None) -> ClusterReport:
+        """Scatter `tasks`, gather a :class:`ClusterReport`.
+
+        `arrivals` (virtual-time only) maps task ids to the virtual instant
+        they become claimable — the request-shaped contract: a tile request
+        arriving at t competes for workers and fabric from t on, and its
+        latency is ``completion_times[id] - arrivals[id]`` (queueing
+        included).  Tasks absent from `arrivals` are available at t=0.
+        `pools` maps task ids to a worker-pool name (see
+        :attr:`ClusterConfig.worker_pools`); absent ids go to the default
+        shared pool.
+        """
+        arrivals = arrivals or {}
+        pools = pools or {}
+        if arrivals and not self.config.virtual_time:
+            raise ValueError("timed arrivals require virtual_time=True "
+                             "(real-thread mode has no event loop to hold "
+                             "back a request)")
+        for tid in list(arrivals) + list(pools):
+            if tid not in tasks:
+                raise ValueError(f"unknown task id {tid!r} in arrivals/pools")
+        # every task must land in a pool some worker actually claims from,
+        # else it sits unclaimable and the campaign never drains (a typo'd
+        # pool name, or worker_pools partitioning away the default pool
+        # while un-pooled tasks exist)
+        worker_pools = {w.pool for w in self.workers}
+        for tid in tasks:
+            if pools.get(tid) not in worker_pools:
+                raise ValueError(
+                    f"task {tid!r} routed to pool {pools.get(tid)!r} but no "
+                    f"worker claims from it (worker pools: "
+                    f"{sorted(p if p is not None else '<default>' for p in worker_pools)})")
         queue = self._make_queue()
+        deferred = []
         for task_id, payload in tasks.items():
-            queue.submit(task_id, payload, max_retries=self.config.max_retries)
+            t = arrivals.get(task_id, 0.0)
+            if t > 0.0:
+                deferred.append((t, task_id, payload, pools.get(task_id)))
+            else:
+                queue.submit(task_id, payload,
+                             max_retries=self.config.max_retries,
+                             pool=pools.get(task_id))
         try:
             if self.config.virtual_time:
-                makespan = self._run_virtual(queue, handler)
+                makespan = self._run_virtual(queue, handler, deferred)
             else:
                 makespan = self._run_threads(queue, handler)
         finally:
@@ -498,7 +583,8 @@ class ClusterEngine:
         def loop(worker: Worker):
             idle = 0
             while idle < self.config.max_idle_polls:
-                task = queue.claim(worker.name, lease_s=self.config.lease_s)
+                task = queue.claim(worker.name, lease_s=self.config.lease_s,
+                                   pool=worker.pool)
                 if task is None:
                     if queue.done():
                         return
@@ -531,9 +617,10 @@ class ClusterEngine:
         return time.monotonic() - t0
 
     # -- virtual-time mode: deterministic discrete-event simulation -----------
-    def _run_virtual(self, queue: TaskQueue, handler: Handler) -> float:
+    def _run_virtual(self, queue: TaskQueue, handler: Handler,
+                     deferred: Optional[List[Tuple]] = None) -> float:
         """Global event loop: dispatch, fabric-contended I/O flows, elastic
-        join/leave.
+        join/leave, timed request arrivals.
 
         The fabric is reallocated lazily: membership changes (flow start,
         flow end, pre-emption) mark it dirty, and one water-filling pass
@@ -577,6 +664,11 @@ class ClusterEngine:
 
         for ev in (self.config.elastic.events if self.config.elastic else ()):
             push(ev.t, _JOIN if ev.delta > 0 else _LEAVE, -1, abs(ev.delta))
+        #: requests not yet arrived: workers must not retire while these are
+        #: pending even though the queue looks drained
+        pending_arrivals = len(deferred or ())
+        for t, task_id, payload, pool in (deferred or ()):
+            push(t, _ARRIVE, -1, (task_id, payload, pool))
         for w in self.workers:
             push(0.0, _DISPATCH, w.index)
         busy = 0
@@ -594,6 +686,21 @@ class ClusterEngine:
                     "disabled polls forever)")
             t, _, kind, widx, data = heapq.heappop(heap)
             self._now = max(self._now, t)
+
+            if kind == _ARRIVE:
+                task_id, payload, pool = data
+                queue.submit(task_id, payload,
+                             max_retries=self.config.max_retries, pool=pool)
+                pending_arrivals -= 1
+                # wake idle workers of this pool (the request-socket model:
+                # a server parked on an empty queue reacts immediately, not
+                # after its exponential idle backoff elapses)
+                for w in self.workers:
+                    if w.active and not w._inflight and w.pool == pool:
+                        w._idle_backoff = 0.0
+                        w._dispatch_epoch += 1  # supersede the backoff poll
+                        push(self._now, _DISPATCH, w.index, w._dispatch_epoch)
+                continue
 
             if kind == _JOIN:
                 for _ in range(data):
@@ -666,14 +773,18 @@ class ClusterEngine:
             # _DISPATCH: try to claim; retire when the campaign is over
             if not worker.active:
                 continue
-            task = queue.claim(worker.name, lease_s=self.config.lease_s)
+            if data is not None and data != worker._dispatch_epoch:
+                continue  # poll superseded by an arrival wake-up
+            task = queue.claim(worker.name, lease_s=self.config.lease_s,
+                               pool=worker.pool)
             if task is None:
-                if queue.done() and busy == 0:
+                if queue.done() and busy == 0 and pending_arrivals == 0:
                     continue  # retire this worker (no reschedule)
                 worker._idle_backoff = min(
                     max(worker._idle_backoff * 2, self.config.idle_poll_s),
                     self.config.max_idle_backoff_s)
-                push(self._now + worker._idle_backoff, _DISPATCH, worker.index)
+                push(self._now + worker._idle_backoff, _DISPATCH, worker.index,
+                     worker._dispatch_epoch)
                 continue
             worker._idle_backoff = 0.0
             worker._current = task.task_id
@@ -725,7 +836,8 @@ class ClusterEngine:
             dead_tasks=[t.task_id for t in queue.dead_tasks()],
             results=queue.results(), per_worker=per_worker,
             meta_ops=sum(r.meta_ops for r in per_worker),
-            joined=self._joined, left=self._left)
+            joined=self._joined, left=self._left,
+            completion_times=queue.completion_times())
 
 
 def scatter_gather(store: ObjectStore, tasks: Dict[str, Any], handler: Handler,

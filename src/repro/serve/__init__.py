@@ -1,0 +1,34 @@
+"""Serving tier — the paper's Mapserver-over-festivus role (§V.D).
+
+The paper's web visualization "decodes JPEG 2000 imagery at the resolution
+requested" behind Mapserver, on the same bucket the analytic campaigns
+scan.  This package is that role over the repo's stack: XYZ-style tile
+requests map onto :class:`~repro.core.chunkstore.ChunkedArray` pyramid
+reads through a per-server festivus mount, fronted by an LRU tile cache,
+and a :class:`TileFleet` runs N servers as cluster-engine workers so
+request I/O is water-filled on the same simulated zone fabric as any
+concurrently-running batch campaign (the mixed-workload story of
+Sector/Sphere and the Matsu wheel: serving and scanning share one
+chunkstore).
+"""
+
+from repro.serve.tileserver import (
+    ServingReport,
+    TileCache,
+    TileCacheStats,
+    TileFleet,
+    TileRequest,
+    TileResponse,
+    TileServer,
+    TileServerStats,
+    tile_bounds,
+    tile_grid,
+)
+from repro.serve.trace import Spike, rate_at, tile_universe, zipf_spike_trace
+
+__all__ = [
+    "ServingReport", "Spike", "TileCache", "TileCacheStats", "TileFleet",
+    "TileRequest", "TileResponse", "TileServer", "TileServerStats",
+    "rate_at", "tile_bounds", "tile_grid", "tile_universe",
+    "zipf_spike_trace",
+]

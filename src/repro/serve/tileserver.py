@@ -1,0 +1,410 @@
+"""Tile server over the chunkstore pyramids (paper §V.D, Mapserver role).
+
+A tile request names a pyramid level and an (x, y) tile index; the server
+maps it to a spatial region of the named :class:`ChunkedArray` at that
+level and reads exactly the covering chunks through its festivus mount —
+the paper's "decode ... at the resolution requested" with the chunk grid
+playing the JPX codestream.  Request service is:
+
+    cache hit   -> TileServingModel.cache_hit_s of virtual CPU, no I/O
+    cache miss  -> covering-chunk reads (modeled object I/O, water-filled
+                   against the shared fabric by the cluster DES) + a
+                   decode/assembly CPU bill, then LRU insertion
+
+:class:`TileFleet` runs N servers as cluster-engine workers in their own
+worker pool: a request trace (see :mod:`repro.serve.trace`) arrives over
+virtual time, each request is a queue task routed to the "serve" pool, and
+an optional batch campaign runs simultaneously in a "batch" pool — both
+tiers' flows share one :class:`~repro.core.perfmodel.SharedFabric`, which
+is what makes a load spike and a composite scan degrade each other
+honestly inside one simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.chunkstore import ChunkedArray, ChunkStore, spatial_dims
+from repro.core.festivus import FestivusConfig
+from repro.core.metadata import MetadataStore
+from repro.core.object_store import ObjectStore
+from repro.launch.cluster import ClusterConfig, ClusterEngine, ClusterReport, Worker
+
+SERVE_POOL = "serve"
+BATCH_POOL = "batch"
+
+
+# ---------------------------------------------------------------------------
+# requests and the XYZ -> pyramid-region mapping
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TileRequest:
+    """One XYZ-style request: array + pyramid level + tile column/row.
+
+    `t` is the virtual arrival instant (seconds into the trace); `level`
+    counts like the pyramid (0 = full resolution, higher = coarser), so a
+    web map's zoom z maps to ``pyramid_levels - z``.
+    """
+
+    t: float
+    level: int
+    x: int
+    y: int
+    array: str = "composite"
+
+
+@dataclasses.dataclass(frozen=True)
+class TileResponse:
+    data: np.ndarray
+    nbytes: int
+    cache_hit: bool
+    level: int
+    x: int
+    y: int
+
+
+def tile_grid(level_shape: Sequence[int], tile_px: int) -> Tuple[int, int]:
+    """(tiles_down, tiles_across) covering a level's spatial extent."""
+    dh, dw = spatial_dims(level_shape)
+    return (-(-level_shape[dh] // tile_px), -(-level_shape[dw] // tile_px))
+
+
+def tile_bounds(level_shape: Sequence[int], tile_px: int, x: int,
+                y: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """(start, stop) region of tile (x, y); edge tiles are clipped.
+
+    Non-spatial axes (time, channel) span their full extent — a map tile
+    serves every band of the composite.
+    """
+    dh, dw = spatial_dims(level_shape)
+    ny, nx = tile_grid(level_shape, tile_px)
+    if not (0 <= x < nx and 0 <= y < ny):
+        raise KeyError(f"tile ({x},{y}) outside {ny}x{nx} grid "
+                       f"of {tuple(level_shape)} at tile_px={tile_px}")
+    start = [0] * len(level_shape)
+    stop = list(level_shape)
+    start[dh] = y * tile_px
+    stop[dh] = min((y + 1) * tile_px, level_shape[dh])
+    start[dw] = x * tile_px
+    stop[dw] = min((x + 1) * tile_px, level_shape[dw])
+    return tuple(start), tuple(stop)
+
+
+# ---------------------------------------------------------------------------
+# LRU tile cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TileCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    inserted_bytes: int = 0
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class TileCache:
+    """Byte-bounded LRU of decoded tiles, keyed (array, level, x, y).
+
+    The serving analogue of the page cache: repeated requests for a hot
+    tile skip the object store entirely.  A tile larger than the whole
+    capacity is served but never cached (it would evict everything for a
+    single-use entry).
+    """
+
+    def __init__(self, capacity_bytes: int):
+        if capacity_bytes < 0:
+            raise ValueError(f"negative cache capacity {capacity_bytes}")
+        self.capacity = capacity_bytes
+        self.stats = TileCacheStats()
+        self._data: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+        self._bytes = 0
+
+    def get(self, key: Tuple) -> Optional[np.ndarray]:
+        tile = self._data.get(key)
+        if tile is None:
+            self.stats.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.stats.hits += 1
+        return tile
+
+    def put(self, key: Tuple, tile: np.ndarray) -> None:
+        if tile.nbytes > self.capacity:
+            return
+        old = self._data.pop(key, None)
+        if old is not None:
+            self._bytes -= old.nbytes
+        self._data[key] = tile
+        self._bytes += tile.nbytes
+        self.stats.inserted_bytes += tile.nbytes
+        while self._bytes > self.capacity:
+            _, victim = self._data.popitem(last=False)
+            self._bytes -= victim.nbytes
+            self.stats.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+
+# ---------------------------------------------------------------------------
+# one server
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TileServerStats:
+    requests: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    bytes_served: int = 0
+
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.requests if self.requests else 0.0
+
+
+class TileServer:
+    """One serving node: festivus-mounted chunkstore + LRU tile cache.
+
+    `charge` receives virtual CPU seconds per request (wire it to
+    ``worker.charge_compute`` under the cluster DES; standalone use leaves
+    it None and only the stats/caching behaviour applies).
+    """
+
+    def __init__(self, cs: ChunkStore, tile_px: int = 256,
+                 cache_bytes: int = 64 * perfmodel.MiB,
+                 model: Optional[perfmodel.TileServingModel] = None,
+                 charge: Optional[Callable[[float], None]] = None):
+        if tile_px <= 0:
+            raise ValueError(f"tile_px must be positive, got {tile_px}")
+        self.cs = cs
+        self.tile_px = tile_px
+        self.model = model if model is not None else perfmodel.TILE_SERVING_MODEL
+        self.cache = TileCache(cache_bytes)
+        self.stats = TileServerStats()
+        self._charge = charge
+        self._arrays: Dict[str, ChunkedArray] = {}
+
+    def _array(self, name: str) -> ChunkedArray:
+        arr = self._arrays.get(name)
+        if arr is None:
+            arr = self._arrays[name] = self.cs.open(name)
+        return arr
+
+    def serve(self, req: TileRequest) -> TileResponse:
+        """Serve one tile: cache, else pyramid region read + decode bill."""
+        self.stats.requests += 1
+        key = (req.array, req.level, req.x, req.y)
+        tile = self.cache.get(key)
+        if tile is not None:
+            self.stats.cache_hits += 1
+            self.stats.bytes_served += tile.nbytes
+            if self._charge is not None:
+                self._charge(self.model.hit_cost_s())
+            return TileResponse(tile, tile.nbytes, True, req.level, req.x, req.y)
+        self.stats.cache_misses += 1
+        arr = self._array(req.array)
+        start, stop = tile_bounds(arr.level_shape(req.level), self.tile_px,
+                                  req.x, req.y)
+        tile = arr.read(start, stop, level=req.level)
+        self.cache.put(key, tile)
+        self.stats.bytes_served += tile.nbytes
+        if self._charge is not None:
+            self._charge(self.model.miss_cost_s(tile.nbytes))
+        return TileResponse(tile, tile.nbytes, False, req.level, req.x, req.y)
+
+
+# ---------------------------------------------------------------------------
+# the fleet: N servers as cluster-engine workers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServingReport:
+    """Gathered serving-tier metrics (virtual time throughout)."""
+
+    servers: int
+    requests: int
+    completed: int
+    hit_rate: float
+    cache_hits: int
+    cache_misses: int
+    cache_evictions: int
+    bytes_served: int
+    #: request latency = completion - arrival, queueing included
+    p50_s: float
+    p90_s: float
+    p99_s: float
+    mean_s: float
+    max_s: float
+    #: trace span (last arrival) and offered request rate over it
+    trace_duration_s: float
+    offered_rps: float
+    #: object-store bytes the serve pool actually read (cache misses)
+    serve_bytes_read: int
+    #: the concurrent batch campaign, if any — same simulation, same fabric
+    batch_tasks: int
+    batch_bytes_read: int
+    #: the underlying cluster gather (makespan, per-worker stats, fabric)
+    cluster: ClusterReport
+    #: per-request (arrival_t, latency_s) samples, trace order — lets a
+    #: benchmark slice percentiles by window (e.g. inside a load spike)
+    samples: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
+
+    def window_percentile(self, q: float, t0: float = 0.0,
+                          t1: float = float("inf")) -> float:
+        """Latency percentile over requests arriving in [t0, t1)."""
+        return perfmodel.percentile(
+            [lat for t, lat in self.samples if t0 <= t < t1], q)
+
+    @property
+    def all_served(self) -> bool:
+        return self.completed == self.requests
+
+
+class TileFleet:
+    """Run N tile servers (and optionally a batch pool) on the cluster DES.
+
+    Each server is a cluster worker with its own festivus mount and its own
+    :class:`TileServer` (private LRU cache — the paper's per-Mapserver
+    memcached analogue).  Requests become queue tasks routed to the
+    ``serve`` pool, arriving at their trace timestamps; batch tasks run in
+    a ``batch`` pool at t=0.  Both pools' I/O flows share the configured
+    fabric zone(s), so serving latency degrades under a concurrent scan
+    campaign *inside* the simulation.
+    """
+
+    def __init__(self, store: ObjectStore, meta: MetadataStore,
+                 root: str = "bucket", servers: int = 4,
+                 tile_px: int = 256, cache_bytes: int = 64 * perfmodel.MiB,
+                 serving_model: Optional[perfmodel.TileServingModel] = None,
+                 vcpus: int = 16, zones: int = 1,
+                 fabric: Optional[perfmodel.FabricModel] = perfmodel.FABRIC_MODEL,
+                 block_bytes: int = 4 * perfmodel.MiB,
+                 max_inflight: int = 16):
+        if servers < 1:
+            raise ValueError(f"need at least one server, got {servers}")
+        self.store = store
+        self.meta = meta
+        self.root = root
+        self.servers = servers
+        self.tile_px = tile_px
+        self.cache_bytes = cache_bytes
+        self.serving_model = (serving_model if serving_model is not None
+                              else perfmodel.TILE_SERVING_MODEL)
+        self.vcpus = vcpus
+        self.zones = zones
+        self.fabric = fabric
+        self.block_bytes = block_bytes
+        self.max_inflight = max_inflight
+
+    def _config(self, batch_nodes: int) -> ClusterConfig:
+        pools: Tuple[Tuple[str, int], ...] = ((SERVE_POOL, self.servers),)
+        if batch_nodes:
+            pools += ((BATCH_POOL, batch_nodes),)
+        return ClusterConfig(
+            nodes=self.servers + batch_nodes, vcpus=self.vcpus,
+            virtual_time=True, lease_s=3600.0,
+            # short idle polls: a serving node parked on an empty queue
+            # must not owe a request its own backoff (arrivals also wake)
+            idle_poll_s=0.002, max_idle_backoff_s=0.5,
+            # speculation off: duplicate tile serves would skew cache stats
+            min_completions_for_speculation=10**9,
+            fabric=self.fabric, zones=self.zones,
+            worker_pools=pools,
+            # the tile cache is the cache under test; festivus block cache
+            # off so hits/misses are attributable to it alone
+            festivus=FestivusConfig(block_bytes=self.block_bytes,
+                                    readahead_blocks=0, cache_bytes=0,
+                                    max_inflight=self.max_inflight))
+
+    def run(self, trace: Sequence[TileRequest],
+            batch_tasks: Optional[Dict[str, Any]] = None,
+            batch_handler: Optional[Callable[[Worker, Any], Any]] = None,
+            batch_nodes: int = 0,
+            batch_arrival_t: float = 0.0) -> ServingReport:
+        """Serve a request trace; optionally run a batch campaign alongside.
+
+        `batch_arrival_t` delays the whole batch wave to that virtual
+        instant (the Matsu-wheel shape: a reanalysis scan kicked off while
+        the serving tier is live — align it with a spike window to collide
+        the two on the fabric).
+        """
+        if not trace:
+            raise ValueError("empty request trace")
+        if batch_tasks and (batch_handler is None or batch_nodes < 1):
+            raise ValueError("batch_tasks needs batch_handler and "
+                             "batch_nodes >= 1")
+        reqs = {f"req{i:06d}": r for i, r in enumerate(trace)}
+        tasks: Dict[str, Any] = dict(reqs)
+        arrivals = {tid: r.t for tid, r in reqs.items()}
+        pools = {tid: SERVE_POOL for tid in reqs}
+        if batch_tasks:
+            for tid, payload in batch_tasks.items():
+                btid = f"batch/{tid}"
+                tasks[btid] = payload
+                pools[btid] = BATCH_POOL
+                if batch_arrival_t > 0.0:
+                    arrivals[btid] = batch_arrival_t
+
+        tile_servers: Dict[int, TileServer] = {}
+
+        def handler(worker: Worker, payload):
+            if isinstance(payload, TileRequest):
+                srv = tile_servers.get(worker.index)
+                if srv is None:
+                    srv = tile_servers[worker.index] = TileServer(
+                        worker.chunkstore(self.root), tile_px=self.tile_px,
+                        cache_bytes=self.cache_bytes,
+                        model=self.serving_model,
+                        charge=worker.charge_compute)
+                resp = srv.serve(payload)
+                return {"hit": resp.cache_hit, "nbytes": resp.nbytes}
+            return batch_handler(worker, payload)
+
+        engine = ClusterEngine(self.store, meta=self.meta,
+                               config=self._config(batch_nodes))
+        report = engine.run(tasks, handler, arrivals=arrivals, pools=pools)
+        if not report.all_done:
+            raise RuntimeError(f"serving campaign incomplete: "
+                               f"{report.queue_stats} dead={report.dead_tasks}")
+
+        latencies: List[float] = []
+        samples: List[Tuple[float, float]] = []
+        hits = misses = bytes_served = 0
+        for tid, req in reqs.items():
+            done_t = report.completion_times[tid]
+            latencies.append(done_t - req.t)
+            samples.append((req.t, done_t - req.t))
+            res = report.results[tid]
+            hits += bool(res["hit"])
+            misses += not res["hit"]
+            bytes_served += res["nbytes"]
+        evictions = sum(s.cache.stats.evictions for s in tile_servers.values())
+        duration = max(r.t for r in trace)
+        serve_workers = report.per_worker[: self.servers]
+        batch_workers = report.per_worker[self.servers:
+                                          self.servers + batch_nodes]
+        return ServingReport(
+            servers=self.servers, requests=len(reqs), completed=len(latencies),
+            hit_rate=hits / len(reqs), cache_hits=hits, cache_misses=misses,
+            cache_evictions=evictions, bytes_served=bytes_served,
+            p50_s=perfmodel.percentile(latencies, 50),
+            p90_s=perfmodel.percentile(latencies, 90),
+            p99_s=perfmodel.percentile(latencies, 99),
+            mean_s=sum(latencies) / len(latencies), max_s=max(latencies),
+            trace_duration_s=duration,
+            offered_rps=len(reqs) / duration if duration > 0 else 0.0,
+            serve_bytes_read=sum(w.store_stats.bytes_read
+                                 for w in serve_workers),
+            batch_tasks=sum(w.tasks_completed for w in batch_workers),
+            batch_bytes_read=sum(w.store_stats.bytes_read
+                                 for w in batch_workers),
+            cluster=report, samples=samples)

@@ -1,0 +1,100 @@
+"""Request-trace generation: Zipf popularity + load spikes.
+
+Web-map traffic is famously skewed — a few hot tiles (cities, coastlines)
+absorb most requests, and events produce sharp load spikes on top of a
+steady base rate.  This module generates deterministic synthetic traces
+with both properties:
+
+* **Zipf popularity** — tile k (in a seeded random popularity order) is
+  requested with probability proportional to ``1 / rank^alpha``.
+* **Spikes** — piecewise-constant rate multipliers over time windows
+  (:class:`Spike`), driving a Poisson arrival process whose rate is
+  re-evaluated per inter-arrival draw.
+
+Everything is seeded, so a trace is a pure function of its parameters —
+the serving benchmark's runs are reproducible records.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.chunkstore import pyramid_level_shape
+from repro.serve.tileserver import TileRequest, tile_grid
+
+
+@dataclasses.dataclass(frozen=True)
+class Spike:
+    """Rate multiplier over [t0, t1): offered load = base * multiplier."""
+
+    t0: float
+    t1: float
+    multiplier: float
+
+    def __post_init__(self):
+        if self.t1 <= self.t0:
+            raise ValueError(f"empty spike window [{self.t0}, {self.t1})")
+        if self.multiplier <= 0:
+            raise ValueError(f"non-positive spike multiplier {self.multiplier}")
+
+
+def rate_at(t: float, base_rps: float, spikes: Sequence[Spike]) -> float:
+    """Offered request rate at instant t (overlapping spikes compound)."""
+    rate = base_rps
+    for s in spikes:
+        if s.t0 <= t < s.t1:
+            rate *= s.multiplier
+    return rate
+
+
+def tile_universe(shape: Sequence[int], pyramid_levels: int, tile_px: int,
+                  array: str = "composite") -> List[Tuple[str, int, int, int]]:
+    """Every addressable (array, level, x, y) across the pyramid (level
+    shapes from the chunkstore's own halving rule, so the universe matches
+    what a TileServer can actually serve)."""
+    out = []
+    for level in range(pyramid_levels + 1):
+        ny, nx = tile_grid(pyramid_level_shape(shape, level), tile_px)
+        for y in range(ny):
+            for x in range(nx):
+                out.append((array, level, x, y))
+    return out
+
+
+def zipf_spike_trace(universe: Sequence[Tuple[str, int, int, int]],
+                     duration_s: float, base_rps: float,
+                     alpha: float = 1.1, spikes: Sequence[Spike] = (),
+                     seed: int = 0) -> List[TileRequest]:
+    """Deterministic Zipf-popularity trace with spike windows.
+
+    Tiles are ranked by a seeded shuffle of `universe`; request k picks a
+    tile with probability ∝ ``1 / rank^alpha``.  Arrivals follow a
+    piecewise-homogeneous Poisson process: each inter-arrival gap is drawn
+    at the rate in force at the previous arrival (spike edges blur by one
+    gap — fine for benchmark purposes, and keeps generation one-pass).
+    """
+    if not universe:
+        raise ValueError("empty tile universe")
+    if duration_s <= 0 or base_rps <= 0:
+        raise ValueError(f"need positive duration/rate, got "
+                         f"{duration_s}/{base_rps}")
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(universe))
+    ranks = np.arange(1, len(universe) + 1, dtype=np.float64)
+    probs = ranks ** -alpha
+    probs /= probs.sum()
+    trace: List[TileRequest] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_at(t, base_rps, spikes)))
+        if t >= duration_s:
+            break
+        array, level, x, y = universe[order[rng.choice(len(universe),
+                                                       p=probs)]]
+        trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array))
+    if not trace:
+        raise ValueError("trace came out empty; raise duration_s * base_rps")
+    return trace

@@ -1,0 +1,98 @@
+"""Schema regression for tracked BENCH_*.json records.
+
+The benchmark writers and the committed records must not drift apart
+silently: every BENCH_*.json tracked at the repo root has to parse and
+carry the row keys its writer emits (benchmarks/cluster_scaling.py,
+benchmarks/serving.py).  A new tracked record without a schema entry here
+fails loudly."""
+
+import json
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: bench file -> (required top-level keys, rows key, required per-row keys)
+SCHEMAS = {
+    "BENCH_cluster_scaling.json": {
+        "top": ["bench", "block_bytes", "task_bytes", "rows", "monotonic",
+                "sublinear_beyond_16_nodes", "within_5pct_of_paper",
+                "efficiency_by_nodes", "elasticity", "headline_engine_GB_s",
+                "paper_headline_GB_s"],
+        "row": ["nodes", "tasks", "makespan_s", "engine_GB_s", "ideal_GB_s",
+                "per_node_GB_s", "parallel_efficiency", "meta_ops",
+                "paper_GB_s", "err_vs_paper_pct"],
+        "bench": "cluster_scaling",
+    },
+    "BENCH_serving.json": {
+        "top": ["bench", "world", "trace", "slo", "rows", "mixed_workload",
+                "headline_p99_ms"],
+        "row": ["servers", "requests", "spike_multiplier", "mixed",
+                "offered_rps", "hit_rate", "cache_evictions", "p50_ms",
+                "p90_ms", "p99_ms", "max_ms", "spike_p99_ms",
+                "serve_GB_read", "batch_tasks", "batch_GB_read",
+                "makespan_s", "hit_rate_slo_met", "p99_slo_met"],
+        "bench": "serving",
+    },
+}
+
+
+def _bench_files():
+    return sorted(p.name for p in ROOT.glob("BENCH_*.json"))
+
+
+def test_every_tracked_bench_record_has_a_schema():
+    files = _bench_files()
+    assert files, "no BENCH_*.json records at repo root"
+    unknown = [f for f in files if f not in SCHEMAS]
+    assert not unknown, (
+        f"tracked bench records without a schema entry in "
+        f"tests/test_bench_schema.py: {unknown}")
+
+
+@pytest.mark.parametrize("name", sorted(SCHEMAS))
+def test_bench_record_matches_writer_schema(name):
+    path = ROOT / name
+    assert path.exists(), f"{name} is in SCHEMAS but not tracked at the root"
+    with open(path) as f:
+        record = json.load(f)
+    schema = SCHEMAS[name]
+    assert record["bench"] == schema["bench"]
+    missing = [k for k in schema["top"] if k not in record]
+    assert not missing, f"{name} missing top-level keys {missing}"
+    rows = record["rows"]
+    assert rows, f"{name} has no rows"
+    for i, row in enumerate(rows):
+        missing = [k for k in schema["row"] if k not in row]
+        assert not missing, f"{name} row {i} missing {missing}"
+
+
+def test_serving_record_meets_issue_acceptance():
+    """The committed serving record must keep proving the acceptance
+    criteria: >= 3 fleet sizes, and a mixed-workload row where the
+    concurrent composite campaign degraded p99 inside one simulation."""
+    with open(ROOT / "BENCH_serving.json") as f:
+        record = json.load(f)
+    solo_fleets = {r["servers"] for r in record["rows"] if not r["mixed"]}
+    assert len(solo_fleets) >= 3
+    mixed_rows = [r for r in record["rows"] if r["mixed"]]
+    assert mixed_rows and all(r["batch_tasks"] > 0 for r in mixed_rows)
+    mw = record["mixed_workload"]
+    assert mw["degrades_p99"] is True
+    assert mw["mixed_p99_ms"] > mw["serving_only_p99_ms"]
+    proof = mw["same_simulation"]
+    assert proof["accounted"] is True
+    assert proof["completion_windows_overlap"] is True
+    assert (proof["queue_completed"]
+            == proof["requests_completed"] + proof["batch_tasks_completed"])
+
+
+def test_cluster_scaling_record_tracks_paper_curve():
+    with open(ROOT / "BENCH_cluster_scaling.json") as f:
+        record = json.load(f)
+    assert record["within_5pct_of_paper"] is True
+    assert record["monotonic"] is True
+    rows = {r["nodes"]: r for r in record["rows"]}
+    assert 512 in rows and rows[512]["engine_GB_s"] == pytest.approx(
+        record["paper_headline_GB_s"], rel=0.05)

@@ -339,6 +339,86 @@ def test_join_only_fleet_accelerates_campaign():
     assert len(grown.per_worker) == 4
 
 
+def test_preemption_at_exact_lease_expiry_during_speculation(monkeypatch):
+    """The nastiest handoff tie: the worker holding a straggler is
+    pre-empted at its lease-expiry instant while a speculative twin is in
+    flight (and is pre-empted too), and a replacement worker joins at
+    *exactly* the extended lease's expiry instant — the join, the reap,
+    and the re-claim all land on one virtual timestamp.  Output must stay
+    byte-identical to a static run and completion exactly-once."""
+    lease_s, slow_s = 5.0, 100.0
+
+    def handler(worker, payload):
+        i, compute_s = payload
+        worker.charge_compute(compute_s)
+        # deterministic artifact: any duplicate execution must rewrite
+        # identical bytes for the byte-identity check to hold
+        worker.fs.write(f"out/t{i}", f"task{i}:{compute_s}".encode())
+        return worker.name
+
+    # "slow" submitted first => claimed by node0 at t=0 under a 5 s lease.
+    tasks = {"slow": (0, slow_s)}
+    tasks.update({f"fast{i}": (i + 1, 1.0) for i in range(6)})
+
+    def run(elastic):
+        inner = InMemoryObjectStore()
+        engine = ClusterEngine(inner, config=ClusterConfig(
+            nodes=3, virtual_time=True, lease_s=lease_s,
+            speculation_factor=3.0, min_completions_for_speculation=5,
+            elastic=elastic))
+        report = engine.run(dict(tasks), handler)
+        outs = {k: inner.get_range(k, 0, inner.head(k).size)
+                for k in inner.list("out/")}
+        return report, outs
+
+    # probe run: record the exact deadline the speculative claim (an idle
+    # worker re-polling once the six fasts are drained, ~t=3.05) stamps on
+    # "slow" — the churn run's event prefix is identical, so this IS the
+    # churn run's expiry instant, bit-for-bit
+    from repro.core.taskqueue import TaskQueue
+    deadlines = {}
+    orig_claim = TaskQueue.claim
+
+    def recording_claim(self, worker, lease_s=None, pool=None):
+        task = orig_claim(self, worker, lease_s, pool)
+        if task is not None and task.task_id == "slow":
+            deadlines[task.active_claims] = task.lease_deadline
+        return task
+
+    monkeypatch.setattr(TaskQueue, "claim", recording_claim)
+    static, static_out = run(None)
+    monkeypatch.setattr(TaskQueue, "claim", orig_claim)
+    assert static.all_done
+    assert 2 in deadlines, "probe run never speculated"
+    extended_deadline = deadlines[2]
+
+    schedule = ElasticSchedule((
+        # both claimants vanish at the original claim's expiry instant
+        ElasticEvent(lease_s, -3),
+        # one replacement joins at exactly the extended expiry instant
+        ElasticEvent(extended_deadline, +1),
+    ))
+    churn, churn_out = run(schedule)
+    assert churn.all_done
+    assert churn.left == 3 and churn.joined == 1
+    # the handoff went through lease expiry exactly once, after exactly
+    # one speculative claim; nobody double-completed
+    assert churn.queue_stats["speculated"] == 1
+    assert churn.queue_stats["expired"] == 1
+    assert churn.queue_stats["completed"] == len(tasks)
+    assert churn.queue_stats["duplicate_completions"] == 0
+    assert not churn.dead_tasks
+    assert sum(r.tasks_completed for r in churn.per_worker) == len(tasks)
+    # the joiner (not a pre-empted original) finished the straggler,
+    # re-claiming it at the exact join==expiry timestamp (its completion
+    # is that instant plus the task's compute, not an idle-poll later)
+    assert churn.results["slow"] == "node3"
+    assert (churn.completion_times["slow"]
+            == pytest.approx(extended_deadline + slow_s, abs=0.02))
+    # byte-identical artifacts despite three executions of "slow"
+    assert churn_out == static_out and len(churn_out) == len(tasks)
+
+
 def test_shrink_only_fleet_still_completes():
     schedule = ElasticSchedule((ElasticEvent(1e-4, -3),))
     report, _ = _heavy_scan(4, tasks_per_node=4, elastic=schedule,

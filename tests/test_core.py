@@ -282,18 +282,23 @@ def test_chunkstore_pyramid_spatial(chunkstore):
 
 
 def _pyramid_reference(x: np.ndarray, levels: int):
-    """Numpy oracle for build_pyramid's mean-pooling (spatial dims last-2/-3)."""
+    """Numpy oracle for build_pyramid's mean-pooling (spatial dims last-2/-3).
+
+    An axis already at the max(1, ...) floor stops halving (pool window 1),
+    matching ChunkedArray.level_shape on odd/tiny extents.
+    """
     nd = x.ndim
     dh = nd - 3 if nd >= 3 else nd - 2
     out = []
     cur = x.astype(np.float64)
     for _ in range(levels):
         h, w = cur.shape[dh], cur.shape[dh + 1]
-        h2, w2 = max(1, h // 2), max(1, w // 2)
+        ph, pw = (2 if h >= 2 else 1), (2 if w >= 2 else 1)
+        h2, w2 = h // ph, w // pw
         sl = [slice(None)] * cur.ndim
-        sl[dh], sl[dh + 1] = slice(0, h2 * 2), slice(0, w2 * 2)
+        sl[dh], sl[dh + 1] = slice(0, h2 * ph), slice(0, w2 * pw)
         c = cur[tuple(sl)]
-        shape = c.shape[:dh] + (h2, 2, w2, 2) + c.shape[dh + 2:]
+        shape = c.shape[:dh] + (h2, ph, w2, pw) + c.shape[dh + 2:]
         cur = c.reshape(shape).mean(axis=(dh + 1, dh + 3))
         out.append(cur.astype(x.dtype))
     return out
@@ -319,6 +324,65 @@ def test_pyramid_roundtrip_non_square_non_aligned(chunkstore, rng, shape, chunks
     np.testing.assert_array_equal(arr.read_level(0), x)
     np.testing.assert_allclose(chunkstore.open("pyr").read_level(1), refs[0],
                                rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape,chunks,levels", [
+    # odd spatial extents whose level_shape hits the max(1, ...) floor
+    ((7, 5, 3), (4, 2, 3), 3),        # 7>>3 == 0 -> floored to 1
+    ((3, 9, 2), (2, 4, 2), 2),        # H collapses to 1 before W
+    ((5, 21), (3, 8), 3),             # rank-2, both odd
+    ((2, 11, 33, 1), (1, 8, 16, 1), 4),  # leading temporal dim
+])
+def test_pyramid_region_reads_at_levels(chunkstore, rng, shape, chunks, levels):
+    """ChunkedArray.read / read_chunk at levels >= 1, cross-checked against
+    mean-pooling level 0 (the serving layer's partial-tile read path)."""
+    x = rng.standard_normal(shape).astype(np.float32)
+    arr = chunkstore.create("plr", shape, np.float32, chunks,
+                            pyramid_levels=levels)
+    arr.write_region((0,) * len(shape), x)
+    arr.build_pyramid()
+    refs = _pyramid_reference(x, levels)
+    for level, ref in enumerate(refs, start=1):
+        lshape = arr.level_shape(level)
+        assert tuple(ref.shape) == lshape  # floor behaviour agrees
+        # whole-level region read == the pooled oracle
+        got = arr.read((0,) * len(shape), lshape, level=level)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+        # a strict sub-region, offset to land mid-chunk where possible
+        start = tuple(min(1, s - 1) for s in lshape)
+        stop = tuple(max(1, s - 1) if s > 1 else s for s in lshape)
+        if all(b > a for a, b in zip(start, stop)):
+            sub = arr.read(start, stop, level=level)
+            np.testing.assert_allclose(
+                sub, ref[tuple(slice(a, b) for a, b in zip(start, stop))],
+                rtol=1e-5, atol=1e-6)
+        # read_chunk agrees with the region read on the level's edge chunk
+        grid = tuple(-(-s // c) for s, c in zip(lshape, chunks))
+        edge = tuple(g - 1 for g in grid)
+        chunk = arr.read_chunk(edge, level)
+        cstart = tuple(e * c for e, c in zip(edge, chunks))
+        np.testing.assert_allclose(
+            chunk, arr.read(cstart, lshape, level=level), rtol=0, atol=0)
+        assert chunk.shape == arr.chunk_shape(edge, level)
+
+
+def test_pyramid_region_read_validation(chunkstore):
+    arr = chunkstore.create("plv", (8, 8), np.float32, (4, 4),
+                            pyramid_levels=1)
+    arr.write_region((0, 0), np.ones((8, 8), np.float32))
+    # an unbuilt level raises like read_level — never fill-value tiles
+    with pytest.raises(KeyError):
+        arr.read((0, 0), (4, 4), level=1)
+    arr.build_pyramid()
+    with pytest.raises(ValueError):
+        arr.read((0, 0), (8, 8), level=2)  # beyond the pyramid
+    with pytest.raises(ValueError):
+        arr.read((0, 0), (5, 5), level=1)  # outside the level-1 extent
+    with pytest.raises(ValueError):
+        arr.read((0, 0), (4, 4), level=-1)
+    # level-0 read is exactly the original region API
+    np.testing.assert_array_equal(arr.read((0, 0), (8, 8)),
+                                  arr.read_region((0, 0), (8, 8)))
 
 
 def test_pyramid_read_level_unbuilt_raises(chunkstore):

@@ -113,6 +113,93 @@ def test_water_fill_max_min_fairness():
         pm.water_fill([1.0, -2.0], 5.0)
 
 
+def _assert_water_fill_invariants(demands, capacity):
+    """The three water_fill contracts, checked on one instance:
+
+    * conservation — allocations sum to min(capacity, total demand);
+    * per-flow cap — no flow exceeds its own demand;
+    * max-min fairness — every unsatisfied flow gets the same (maximal)
+      share, and every satisfied flow's demand is below that share, so no
+      flow can gain without a smaller one losing.
+    """
+    alloc = pm.water_fill(demands, capacity)
+    assert len(alloc) == len(demands)
+    assert sum(alloc) == pytest.approx(min(capacity, sum(demands)), abs=1e-9)
+    assert all(a <= d + 1e-9 for a, d in zip(alloc, demands))
+    unsatisfied = [a for a, d in zip(alloc, demands) if a < d - 1e-9]
+    if unsatisfied:
+        share = max(unsatisfied)
+        assert all(a == pytest.approx(share, abs=1e-9) for a in unsatisfied)
+        satisfied = [a for a, d in zip(alloc, demands) if a >= d - 1e-9]
+        assert all(a <= share + 1e-9 for a in satisfied)
+    return alloc
+
+
+def test_water_fill_conservation_deterministic():
+    """Conservation across under-, exactly-, and over-subscribed cases
+    (the deterministic face of the hypothesis property in
+    tests/test_properties.py — runs without the optional dep)."""
+    for demands, capacity in [
+        ([1.0, 2.0, 3.0], 100.0),          # under capacity
+        ([1.0, 2.0, 3.0], 6.0),            # exactly at capacity
+        ([4.0, 4.0, 4.0], 6.0),            # uniform over-subscription
+        ([0.5, 8.0, 2.5, 4.0], 6.0),       # mixed over-subscription
+        ([0.0, 5.0, 0.0], 3.0),            # zero-demand flows stay zero
+        ([7.0], 3.0),                      # single flow, capped
+        ([2.0, 2.0], 0.0),                 # zero capacity
+    ]:
+        _assert_water_fill_invariants(demands, capacity)
+
+
+def test_water_fill_per_flow_cap_and_order_invariance():
+    demands = [8.0, 1.0, 64.0, 0.25, 4.0, 16.0, 2.0, 32.0, 0.5]
+    alloc = _assert_water_fill_invariants(demands, 20.0)
+    # allocations pair with their own demand regardless of input order
+    rev = pm.water_fill(demands[::-1], 20.0)
+    assert rev == alloc[::-1]
+    # small flows are fully satisfied, the big ones share the residue
+    assert alloc[demands.index(0.25)] == 0.25
+    assert alloc[demands.index(64.0)] == pytest.approx(
+        alloc[demands.index(32.0)])
+
+
+def test_water_fill_max_min_no_flow_gains_without_smaller_losing():
+    """Direct max-min check: raising any flow's allocation while keeping
+    conservation must lower some flow with an equal-or-smaller share."""
+    demands = [10.0, 3.0, 7.0, 1.0]
+    capacity = 12.0
+    alloc = _assert_water_fill_invariants(demands, capacity)
+    share = max(alloc)
+    for i, (a, d) in enumerate(zip(alloc, demands)):
+        if a < d:  # unsatisfied: already at the fair share
+            assert a == pytest.approx(share)
+            # everyone else is at their demand or the same share — any
+            # donor flow necessarily has allocation <= this flow's
+            assert all(b <= share + 1e-9 for b in alloc)
+
+
+def test_tile_serving_model_costs():
+    m = pm.TILE_SERVING_MODEL
+    tile = 3 * 1024 * 1024
+    assert m.hit_cost_s() == m.cache_hit_s
+    assert m.miss_cost_s(tile) == pytest.approx(
+        m.request_overhead_s + tile * m.decode_s_per_byte)
+    assert m.miss_cost_s(tile) > m.hit_cost_s()
+
+
+def test_percentile_matches_numpy_linear_interpolation():
+    np = pytest.importorskip("numpy")
+    vals = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0]
+    for q in (0, 25, 50, 90, 99, 100):
+        assert pm.percentile(vals, q) == pytest.approx(
+            float(np.percentile(vals, q)))
+    assert pm.percentile([42.0], 99) == 42.0
+    with pytest.raises(ValueError):
+        pm.percentile([], 50)
+    with pytest.raises(ValueError):
+        pm.percentile([1.0], 101)
+
+
 def test_shared_fabric_zones_isolate_contention():
     fab = pm.SharedFabric(zones=2)
     # two heavy readers in *different* zones each get a full 1-reader zone

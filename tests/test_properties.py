@@ -129,3 +129,55 @@ def test_quantize_roundtrip_error_bounded(rows, cols, scale):
     bound = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0 + 1e-12
     err = np.abs(np.asarray(back) - np.asarray(x))
     assert (err <= bound + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# fabric water-filling (test_perfmodel's deterministic cases, generalized)
+# ---------------------------------------------------------------------------
+_demand = st.floats(0.0, 1e9, allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=100, deadline=None)
+@given(demands=st.lists(_demand, min_size=0, max_size=32),
+       capacity=st.floats(0.0, 1e9, allow_nan=False, allow_infinity=False))
+def test_water_fill_conservation(demands, capacity):
+    """INVARIANT: allocations sum to min(capacity, total demand)."""
+    from repro.core import perfmodel as pm
+
+    alloc = pm.water_fill(demands, capacity)
+    assert len(alloc) == len(demands)
+    total = sum(alloc)
+    expect = min(capacity, sum(demands))
+    assert total == pytest.approx(expect, rel=1e-9, abs=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(demands=st.lists(_demand, min_size=1, max_size=32),
+       capacity=st.floats(0.0, 1e9, allow_nan=False, allow_infinity=False))
+def test_water_fill_capped_by_demand(demands, capacity):
+    """INVARIANT: no flow is ever granted more than it asked for."""
+    from repro.core import perfmodel as pm
+
+    alloc = pm.water_fill(demands, capacity)
+    for a, d in zip(alloc, demands):
+        assert a <= d * (1 + 1e-12) + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(demands=st.lists(st.floats(1e-3, 1e6), min_size=1, max_size=32),
+       capacity=st.floats(1e-3, 1e6))
+def test_water_fill_max_min_fairness(demands, capacity):
+    """INVARIANT: unsatisfied flows all hold the same (maximal) share, and
+    no satisfied flow exceeds it — so no flow can gain without a smaller
+    (or equal) one losing."""
+    from repro.core import perfmodel as pm
+
+    alloc = pm.water_fill(demands, capacity)
+    unsat = [a for a, d in zip(alloc, demands) if a < d - 1e-9 * max(d, 1.0)]
+    if not unsat:
+        return  # everyone satisfied: fairness is vacuous
+    share = max(unsat)
+    for a in unsat:
+        assert a == pytest.approx(share, rel=1e-9, abs=1e-9)
+    for a, d in zip(alloc, demands):
+        assert a <= share * (1 + 1e-9) + 1e-9

@@ -1,0 +1,362 @@
+"""Tile-serving layer: request->chunk mapping, LRU cache eviction, the
+fleet on the cluster DES (arrivals, pools, latency accounting), and the
+engine-level request-shaped-task plumbing it rides on."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkStore,
+    Festivus,
+    FestivusConfig,
+    InMemoryObjectStore,
+    MetadataStore,
+)
+from repro.core import perfmodel
+from repro.launch.cluster import ClusterConfig, ClusterEngine
+from repro.serve import (
+    Spike,
+    TileCache,
+    TileFleet,
+    TileRequest,
+    TileServer,
+    rate_at,
+    tile_bounds,
+    tile_grid,
+    tile_universe,
+    zipf_spike_trace,
+)
+
+KiB = 1024
+MiB = 1024 * 1024
+
+
+def _world(hw=128, chunk=32, levels=2, seed=0):
+    """Small composite pyramid on a shared store + metadata KV."""
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    cs = ChunkStore(Festivus(inner, meta=meta), "bucket")
+    rng = np.random.default_rng(seed)
+    data = rng.random((hw, hw, 3), dtype=np.float32)
+    arr = cs.create("composite", data.shape, np.float32, (chunk, chunk, 3),
+                    pyramid_levels=levels)
+    arr.write_region((0, 0, 0), data)
+    arr.build_pyramid()
+    return inner, meta, cs, data
+
+
+# ---------------------------------------------------------------------------
+# request -> region -> chunk mapping
+# ---------------------------------------------------------------------------
+def test_tile_grid_and_bounds():
+    shape = (100, 130, 3)
+    assert tile_grid(shape, 64) == (2, 3)
+    # interior tile
+    start, stop = tile_bounds(shape, 64, 0, 0)
+    assert start == (0, 0, 0) and stop == (64, 64, 3)
+    # edge tiles are clipped to the level extent
+    start, stop = tile_bounds(shape, 64, 2, 1)
+    assert start == (64, 128, 0) and stop == (100, 130, 3)
+    # rank-2 arrays use the last two dims
+    assert tile_grid((50, 70), 32) == (2, 3)
+    with pytest.raises(KeyError):
+        tile_bounds(shape, 64, 3, 0)
+    with pytest.raises(KeyError):
+        tile_bounds(shape, 64, 0, 2)
+
+
+def test_server_tile_matches_pyramid_region():
+    _, _, cs, data = _world(hw=128, chunk=32, levels=2)
+    srv = TileServer(cs, tile_px=32, cache_bytes=4 * MiB)
+    arr = cs.open("composite")
+    for level in (0, 1, 2):
+        ny, nx = tile_grid(arr.level_shape(level), 32)
+        for (x, y) in [(0, 0), (nx - 1, ny - 1)]:
+            resp = srv.serve(TileRequest(0.0, level, x, y))
+            start, stop = tile_bounds(arr.level_shape(level), 32, x, y)
+            ref = arr.read(start, stop, level=level)
+            assert resp.data.tobytes() == ref.tobytes()
+            assert resp.nbytes == ref.nbytes
+    # out-of-grid request surfaces as KeyError, not silent fill
+    with pytest.raises(KeyError):
+        srv.serve(TileRequest(0.0, 0, 99, 0))
+
+
+def test_server_miss_reads_only_covering_chunks():
+    """A one-chunk tile must fetch exactly one chunk object (the paper's
+    'read smaller portions of a file' requirement, per request).  The
+    server gets its own cold mount, as TileFleet gives each node (the
+    builder's block cache must not mask the counts)."""
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=1)
+    cold = ChunkStore(
+        Festivus(inner, meta=meta, config=FestivusConfig(cache_bytes=0)),
+        "bucket")
+    srv = TileServer(cold, tile_px=32, cache_bytes=4 * MiB)
+    srv.serve(TileRequest(0.0, 0, 0, 0))  # warm: manifest + 1 chunk
+    gets_before = inner.stats.gets
+    srv.serve(TileRequest(0.0, 0, 1, 1))  # cold tile, manifest cached
+    assert inner.stats.gets == gets_before + 1
+    # a tile_px spanning 2x2 chunks fetches exactly four
+    srv4 = TileServer(cold, tile_px=64, cache_bytes=4 * MiB)
+    srv4.serve(TileRequest(0.0, 0, 0, 0))
+    gets_before = inner.stats.gets
+    srv4.serve(TileRequest(0.0, 0, 1, 1))
+    assert inner.stats.gets == gets_before + 4
+
+
+def test_server_cache_hit_skips_store_and_bills_less():
+    inner, _, cs, _ = _world()
+    charges = []
+    srv = TileServer(cs, tile_px=32, cache_bytes=4 * MiB,
+                     charge=charges.append)
+    srv.serve(TileRequest(0.0, 1, 0, 0))
+    gets_after_miss = inner.stats.gets
+    resp = srv.serve(TileRequest(1.0, 1, 0, 0))
+    assert resp.cache_hit
+    assert inner.stats.gets == gets_after_miss  # no store I/O on a hit
+    assert srv.stats.requests == 2
+    assert srv.stats.cache_hits == 1 and srv.stats.cache_misses == 1
+    model = perfmodel.TILE_SERVING_MODEL
+    assert charges[0] == pytest.approx(model.miss_cost_s(resp.nbytes))
+    assert charges[1] == pytest.approx(model.cache_hit_s)
+    assert charges[1] < charges[0]
+
+
+# ---------------------------------------------------------------------------
+# LRU tile cache
+# ---------------------------------------------------------------------------
+def test_tile_cache_lru_eviction_order():
+    tile = np.zeros(100, np.uint8)  # 100 B each
+    cache = TileCache(capacity_bytes=250)
+    cache.put(("a",), tile)
+    cache.put(("b",), tile)
+    assert cache.get(("a",)) is not None  # a is now most-recent
+    cache.put(("c",), tile)  # 300 B > 250: evicts LRU = b
+    assert cache.get(("b",)) is None
+    assert cache.get(("a",)) is not None and cache.get(("c",)) is not None
+    assert cache.stats.evictions == 1
+    assert cache.bytes_used == 200 and len(cache) == 2
+
+
+def test_tile_cache_update_and_oversize():
+    cache = TileCache(capacity_bytes=250)
+    cache.put(("a",), np.zeros(100, np.uint8))
+    cache.put(("a",), np.zeros(200, np.uint8))  # replace, not double-count
+    assert cache.bytes_used == 200 and len(cache) == 1
+    assert cache.get(("a",)).nbytes == 200
+    # an entry bigger than the whole cache is served but never cached
+    cache.put(("big",), np.zeros(1000, np.uint8))
+    assert cache.get(("big",)) is None
+    assert cache.bytes_used == 200
+    assert cache.stats.hit_rate() == pytest.approx(0.5)  # 1 hit, 1 miss
+    with pytest.raises(ValueError):
+        TileCache(capacity_bytes=-1)
+
+
+def test_fleet_cache_eviction_under_pressure():
+    """A cache holding ~2 tiles must evict while still serving correctly."""
+    inner, meta, cs, _ = _world(hw=128, chunk=32, levels=1)
+    tile_bytes = 32 * 32 * 3 * 4
+    reqs = [TileRequest(0.01 * i, 0, x, y)
+            for i, (x, y) in enumerate([(0, 0), (1, 0), (2, 0), (0, 0),
+                                        (3, 0), (1, 1), (0, 0), (1, 0)])]
+    fleet = TileFleet(inner, meta, root="bucket", servers=1, tile_px=32,
+                      cache_bytes=2 * tile_bytes + 1)
+    rep = fleet.run(reqs)
+    assert rep.all_served
+    assert rep.cache_evictions > 0
+    assert rep.cache_hits + rep.cache_misses == len(reqs)
+    assert rep.hit_rate < 1.0
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+def test_trace_deterministic_and_spiked():
+    uni = tile_universe((128, 128, 3), 2, 32)
+    # matches the pyramid: 4x4 at level 0, 2x2 at 1, 1x1 at 2
+    assert len(uni) == 16 + 4 + 1
+    kw = dict(duration_s=10.0, base_rps=50.0, alpha=1.1,
+              spikes=(Spike(4.0, 6.0, 8.0),), seed=7)
+    t1 = zipf_spike_trace(uni, **kw)
+    t2 = zipf_spike_trace(uni, **kw)
+    assert t1 == t2  # pure function of its parameters
+    assert all(0 <= r.t < 10.0 for r in t1)
+    in_spike = sum(1 for r in t1 if 4.0 <= r.t < 6.0)
+    before = sum(1 for r in t1 if 2.0 <= r.t < 4.0)
+    assert in_spike > 3 * before  # x8 spike over an equal-width window
+    # Zipf skew: the hottest tile gets far more than a uniform share
+    counts = {}
+    for r in t1:
+        counts[(r.level, r.x, r.y)] = counts.get((r.level, r.x, r.y), 0) + 1
+    assert max(counts.values()) > 3 * len(t1) / len(uni)
+
+
+def test_trace_and_spike_validation():
+    uni = tile_universe((64, 64, 3), 1, 32)
+    with pytest.raises(ValueError):
+        Spike(2.0, 2.0, 2.0)
+    with pytest.raises(ValueError):
+        Spike(0.0, 1.0, 0.0)
+    with pytest.raises(ValueError):
+        zipf_spike_trace([], 1.0, 10.0)
+    with pytest.raises(ValueError):
+        zipf_spike_trace(uni, 0.0, 10.0)
+    assert rate_at(0.5, 10.0, (Spike(0.0, 1.0, 3.0),)) == 30.0
+    assert rate_at(1.5, 10.0, (Spike(0.0, 1.0, 3.0),)) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# the fleet on the cluster DES
+# ---------------------------------------------------------------------------
+def test_fleet_serves_trace_with_latency_accounting():
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=2)
+    uni = tile_universe((128, 128, 3), 2, 32)
+    trace = zipf_spike_trace(uni, duration_s=2.0, base_rps=80.0, seed=5)
+    fleet = TileFleet(inner, meta, root="bucket", servers=2, tile_px=32,
+                      cache_bytes=4 * MiB)
+    rep = fleet.run(trace)
+    assert rep.all_served and rep.requests == len(trace)
+    assert rep.cluster.all_done
+    # latency = completion - arrival: positive, ordered percentiles
+    assert all(lat > 0 for _, lat in rep.samples)
+    assert 0 < rep.p50_s <= rep.p90_s <= rep.p99_s <= rep.max_s
+    assert rep.hit_rate > 0  # a Zipf trace over 21 tiles repeats itself
+    assert rep.serve_bytes_read > 0
+    assert rep.batch_tasks == 0 and rep.batch_bytes_read == 0
+    # deterministic: the DES replays byte-for-byte
+    rep2 = TileFleet(*_world(hw=128, chunk=32, levels=2)[:2], root="bucket",
+                     servers=2, tile_px=32, cache_bytes=4 * MiB).run(trace)
+    assert rep2.p99_s == rep.p99_s and rep2.hit_rate == rep.hit_rate
+
+
+def test_fleet_mixed_workload_shares_one_simulation():
+    """Requests and batch tasks complete in one queue, on disjoint worker
+    pools, with overlapping completion windows — the same-simulation
+    contract the serving benchmark's proof fields rely on."""
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=1)
+    uni = tile_universe((128, 128, 3), 1, 32)
+    trace = zipf_spike_trace(uni, duration_s=1.0, base_rps=60.0, seed=2)
+
+    def batch_handler(worker, payload):
+        data = worker.fs.read("bucket/composite/c/0.0.0")
+        return (worker.name, len(data))
+
+    fleet = TileFleet(inner, meta, root="bucket", servers=2, tile_px=32,
+                      cache_bytes=4 * MiB)
+    rep = fleet.run(trace, batch_tasks={f"b{i}": i for i in range(6)},
+                    batch_handler=batch_handler, batch_nodes=2,
+                    batch_arrival_t=0.3)
+    assert rep.all_served
+    assert rep.batch_tasks == 6 and rep.batch_bytes_read > 0
+    assert (rep.cluster.queue_stats["completed"]
+            == rep.requests + rep.batch_tasks)
+    # batch ran on the batch pool only (servers 0,1 serve; 2,3 batch)
+    batch_workers = {rep.cluster.results[f"batch/b{i}"][0] for i in range(6)}
+    assert batch_workers <= {"node2", "node3"}
+    # batch arrivals honoured: no batch completion before the wave
+    batch_done = [t for tid, t in rep.cluster.completion_times.items()
+                  if tid.startswith("batch/")]
+    assert min(batch_done) >= 0.3
+
+
+def test_fleet_validation():
+    inner, meta, _, _ = _world()
+    fleet = TileFleet(inner, meta, root="bucket", servers=1)
+    with pytest.raises(ValueError):
+        fleet.run([])
+    with pytest.raises(ValueError):
+        fleet.run([TileRequest(0.0, 0, 0, 0)], batch_tasks={"b": 1})
+    with pytest.raises(ValueError):
+        TileFleet(inner, meta, servers=0)
+
+
+# ---------------------------------------------------------------------------
+# engine-level request-shaped plumbing (arrivals, pools, completion times)
+# ---------------------------------------------------------------------------
+def _sync_world(nbytes=64 * KiB):
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x22" * nbytes)
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    return inner, meta
+
+
+def test_engine_arrivals_hold_tasks_and_wake_idle_workers():
+    inner, meta = _sync_world()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=1, virtual_time=True,
+        min_completions_for_speculation=10**6))
+
+    def handler(worker, _):
+        return worker.fs.read("obj", 0, 1024) is not None
+
+    report = engine.run({"early": 0, "late": 1}, handler,
+                        arrivals={"late": 5.0})
+    assert report.all_done
+    early_t = report.completion_times["early"]
+    late_t = report.completion_times["late"]
+    assert early_t < 5.0  # t=0 task served immediately
+    assert late_t >= 5.0  # held until its arrival
+    # the arrival wake-up beats the idle-poll backoff (3.2 s cap): the
+    # request is picked up essentially at its arrival instant
+    assert late_t - 5.0 < 0.5
+    assert report.makespan_s == pytest.approx(late_t)
+
+
+def test_engine_arrivals_require_virtual_time_and_known_ids():
+    inner, meta = _sync_world()
+    with pytest.raises(ValueError):
+        ClusterEngine(inner, meta=meta, config=ClusterConfig(
+            nodes=1, virtual_time=False)).run(
+                {"t": 0}, lambda w, p: p, arrivals={"t": 1.0})
+    with pytest.raises(ValueError):
+        ClusterEngine(inner, meta=meta, config=ClusterConfig(
+            nodes=1, virtual_time=True)).run(
+                {"t": 0}, lambda w, p: p, arrivals={"ghost": 1.0})
+
+
+def test_engine_worker_pools_route_tasks():
+    inner, meta = _sync_world()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=3, virtual_time=True,
+        worker_pools=(("serve", 1), ("batch", 2)),
+        min_completions_for_speculation=10**6))
+    tasks = {f"s{i}": i for i in range(3)}
+    tasks.update({f"b{i}": i for i in range(4)})
+    pools = {tid: ("serve" if tid.startswith("s") else "batch")
+             for tid in tasks}
+    report = engine.run(tasks, lambda w, p: w.name, pools=pools)
+    assert report.all_done
+    for tid, name in report.results.items():
+        if tid.startswith("s"):
+            assert name == "node0"  # the serve pool is worker 0
+        else:
+            assert name in {"node1", "node2"}
+    assert report.per_worker[0].tasks_completed == 3
+    assert sum(r.tasks_completed for r in report.per_worker[1:]) == 4
+
+
+def test_engine_worker_pools_must_sum_to_nodes():
+    with pytest.raises(ValueError):
+        ClusterEngine(InMemoryObjectStore(), config=ClusterConfig(
+            nodes=4, virtual_time=True, worker_pools=(("serve", 1),)))
+
+
+def test_engine_rejects_unclaimable_pool_routing():
+    """A task routed to a pool no worker claims from must fail fast, not
+    hang the campaign (or silently never run in thread mode)."""
+    inner, meta = _sync_world()
+    # typo'd pool name on a default (un-pooled) fleet
+    with pytest.raises(ValueError, match="no worker claims"):
+        ClusterEngine(inner, meta=meta, config=ClusterConfig(
+            nodes=1, virtual_time=True)).run(
+                {"t": 0}, lambda w, p: p, pools={"t": "serve"})
+    # fully-partitioned fleet + an un-pooled task: same dead end
+    with pytest.raises(ValueError, match="no worker claims"):
+        ClusterEngine(inner, meta=meta, config=ClusterConfig(
+            nodes=2, virtual_time=True,
+            worker_pools=(("serve", 1), ("batch", 1)))).run(
+                {"t": 0}, lambda w, p: p)
