@@ -5,10 +5,13 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench deps-optional
+.PHONY: test bench-smoke bench docs-check deps-optional
 
 test:  ## tier-1: full suite, fail fast
 	$(PYTHON) -m pytest -x -q
+
+docs-check:  ## docs-consistency: README links resolve, ARCHITECTURE paths import
+	$(PYTHON) tools/check_docs.py
 
 bench-smoke:  ## scaling curve + serving SLO + end-to-end examples
 	$(PYTHON) benchmarks/cluster_scaling.py --nodes 1,8,64,512

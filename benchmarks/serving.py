@@ -21,6 +21,17 @@ queueing) across:
   p99 with no post-hoc coupling.  The record carries the proof: one
   queue completed requests + batch tasks, and the two pools' completion
   windows overlap.
+* **autoscaling**: fixed fleet vs `ServeAutoscaler` across the three
+  spike intensities.  The strongest spike deliberately exceeds the fixed
+  fleet's capacity — the §V.D regime where adding capacity (not
+  over-provisioning) is the only way to hold the SLO.  Each row carries
+  the proof fields: join decisions timestamped *inside* the spike window
+  by the in-simulation controller, warm-up accounted (no joiner served
+  before its warm-up ended), and the $-proxy worker-seconds column
+  (paper §IV.A node rate) showing the autoscaled fleet is also cheaper.
+* **edge cache**: the same trace through an `EdgeCache` tier in front of
+  the fleet — the two-level hit rate (edge-hit -> server-cache-hit ->
+  pyramid read), request coalescing counts, and the p99 effect.
 
 Writes a BENCH_serving.json record (schema-checked by
 tests/test_bench_schema.py).
@@ -36,7 +47,8 @@ import numpy as np
 
 from repro.core import ChunkStore, Festivus, InMemoryObjectStore, MetadataStore
 from repro.core import perfmodel as pm
-from repro.serve import Spike, TileFleet, tile_universe, zipf_spike_trace
+from repro.serve import (AutoscalePolicy, Spike, TileFleet, tile_universe,
+                         zipf_spike_trace)
 
 ROOT = "bucket"
 #: serving SLOs the rows are scored against (benchmark-level targets, not
@@ -56,6 +68,9 @@ class WorldSpec:
     stack_depth: int = 8
     tile_px: int = 512
     cache_bytes: int = 40 * pm.MiB
+    #: the CDN-role tier for the edge_cache section (per-edge, in front
+    #: of the whole fleet; ~1/3 of the pyramid's total tile bytes)
+    edge_cache_bytes: int = 24 * pm.MiB
 
 
 def _build_world(spec: WorldSpec, seed: int = 0):
@@ -100,11 +115,14 @@ def _composite_scan_handler(worker, payload):
 
 def _serve(world_spec: WorldSpec, trace, servers: int, *,
            batch_nodes: int = 0, batch_tasks_per_node: int = 0,
-           batch_arrival_t: float = 0.0, seed: int = 0):
+           batch_arrival_t: float = 0.0, seed: int = 0,
+           autoscale=None, edge_cache_bytes: int = 0):
     inner, meta = _build_world(world_spec, seed=seed)
     fleet = TileFleet(inner, meta, root=ROOT, servers=servers,
                       tile_px=world_spec.tile_px,
-                      cache_bytes=world_spec.cache_bytes)
+                      cache_bytes=world_spec.cache_bytes,
+                      autoscale=autoscale,
+                      edge_cache_bytes=edge_cache_bytes)
     batch = ({f"scan{i}": i for i in range(batch_nodes * batch_tasks_per_node)}
              if batch_nodes else None)
     return fleet.run(
@@ -139,9 +157,66 @@ def _row(rep, *, servers: int, spike_mult: float, mixed: bool,
     }
 
 
-def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 4.0, 8.0),
+def _autoscale_policy(mid_fleet: int) -> AutoscalePolicy:
+    """SLO-driven: the breach line is the benchmark's own p99 target."""
+    return AutoscalePolicy(
+        min_servers=max(1, mid_fleet // 2), max_servers=3 * mid_fleet,
+        # the calm line sits above the organic base-load p99 (~10 ms: one
+        # cold miss) and well under the 50 ms target — latency between the
+        # two lines changes nothing (hysteresis)
+        target_p99_s=P99_SLO_MS / 1e3, scale_in_p99_s=P99_SLO_MS / 2e3,
+        window_s=0.1, interval_s=0.02, queue_high_per_server=3.0,
+        queue_high_min=10, scale_out_step=mid_fleet,
+        scale_in_step=mid_fleet, warmup_s=pm.SERVE_WARMUP_S,
+        cooldown_s=0.08, calm_ticks_to_drain=2, drain_headroom=2.0,
+        lease_s=0.5)
+
+
+def _autoscale_row(fixed, auto, *, mult: float, mid_fleet: int,
+                   spike: Spike) -> dict:
+    """One fixed-vs-autoscaled comparison, with the proof fields."""
+    w0, w1 = spike.t0, spike.t1 + 0.1
+    rep = auto.autoscale
+    joins = [{"t": round(a.t, 6), "delta": a.delta, "reason": a.reason,
+              "window_p99_ms": round(a.window_p99_s * 1e3, 3),
+              "queue_depth": a.queue_depth,
+              "servers_after": a.servers_after} for a in rep.joins]
+    fixed_spike = fixed.window_percentile(99, w0, w1)
+    auto_spike = auto.window_percentile(99, w0, w1)
+    return {
+        "spike_multiplier": mult,
+        "fixed_servers": mid_fleet,
+        "fixed_p99_ms": round(fixed.p99_s * 1e3, 3),
+        "auto_p99_ms": round(auto.p99_s * 1e3, 3),
+        "fixed_spike_p99_ms": round(fixed_spike * 1e3, 3),
+        "auto_spike_p99_ms": round(auto_spike * 1e3, 3),
+        # the $-proxy: node uptime integrated over joins/drains (§IV.A rate)
+        "fixed_worker_seconds": round(fixed.serve_worker_seconds, 6),
+        "auto_worker_seconds": round(auto.serve_worker_seconds, 6),
+        "fixed_usd_proxy": round(
+            pm.worker_seconds_cost(fixed.serve_worker_seconds), 9),
+        "auto_usd_proxy": round(
+            pm.worker_seconds_cost(auto.serve_worker_seconds), 9),
+        "peak_servers": rep.peak_servers,
+        "min_servers_seen": rep.min_servers_seen,
+        "joins": joins,
+        "drains": len(rep.drains),
+        # proof: the scale-out decisions were taken inside the spike
+        # window by a controller living inside the simulation
+        "first_join_in_spike": (spike.contains(rep.joins[0].t)
+                                if rep.joins else None),
+        "joins_in_spike": sum(spike.contains(a.t) for a in rep.joins),
+        # proof: no joiner completed a request before its warm-up ended
+        "warmup_accounted": rep.warmup_ok,
+        "auto_beats_fixed_spike_p99": auto_spike < fixed_spike,
+        "auto_cheaper": (auto.serve_worker_seconds
+                         < fixed.serve_worker_seconds),
+    }
+
+
+def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         mid_fleet: int = 4, batch_nodes: int = 32,
-        batch_tasks_per_node: int = 8, duration_s: float = 1.5,
+        batch_tasks_per_node: int = 8, duration_s: float = 2.0,
         base_rps: float = 150.0, alpha: float = 1.1, seed: int = 3,
         out_path: str = "BENCH_serving.json") -> dict:
     spec = WorldSpec()
@@ -154,21 +229,89 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 4.0, 8.0),
 
     rows = []
     # -- fleet-size sweep (serve-only, fixed spike profile) -----------------
+    fleet_reps = {}
     for servers in fleets:
-        rep = _serve(spec, trace, servers)
+        rep = fleet_reps[servers] = _serve(spec, trace, servers)
         rows.append(_row(rep, servers=servers, spike_mult=spike.multiplier,
                          mixed=False, spike=spike))
     # -- spike-intensity sweep at the mid fleet -----------------------------
+    #: mult -> (spike, trace, fixed-fleet report); the fixed side of the
+    #: autoscaling comparison reuses these same runs
+    fixed_by_mult = {}
     for mult in spike_mults:
         m_spike = Spike(spike.t0, spike.t1, mult)
-        m_trace = zipf_spike_trace(universe, duration_s, base_rps,
-                                   alpha=alpha, spikes=(m_spike,), seed=seed)
-        rep = _serve(spec, m_trace, mid_fleet)
+        if mult == spike.multiplier and mid_fleet in fleet_reps:
+            # the max-mult mid-fleet run IS the fleet-sweep run (same
+            # trace, same fleet, deterministic DES) — don't pay it twice
+            m_trace, rep = trace, fleet_reps[mid_fleet]
+        else:
+            m_trace = zipf_spike_trace(universe, duration_s, base_rps,
+                                       alpha=alpha, spikes=(m_spike,),
+                                       seed=seed)
+            rep = _serve(spec, m_trace, mid_fleet)
+        fixed_by_mult[mult] = (m_spike, m_trace, rep)
         rows.append(_row(rep, servers=mid_fleet, spike_mult=mult,
                          mixed=False, spike=m_spike))
 
+    # -- autoscaling: fixed vs SLO-driven elastic serve pool ----------------
+    policy = _autoscale_policy(mid_fleet)
+    auto_rows = []
+    for mult in spike_mults:
+        m_spike, m_trace, fixed_rep = fixed_by_mult[mult]
+        auto_rep = _serve(spec, m_trace, mid_fleet, autoscale=policy)
+        auto_rows.append(_autoscale_row(fixed_rep, auto_rep, mult=mult,
+                                        mid_fleet=mid_fleet, spike=m_spike))
+    strongest = auto_rows[spike_mults.index(max(spike_mults))]
+    autoscaling = {
+        "policy": dataclasses.asdict(policy),
+        "node_cost_per_hr_usd": pm.NODE_COST_PER_HR_USD,
+        "rows": auto_rows,
+        # the acceptance verdict, on the spike that saturates the fixed
+        # fleet: better spike p99 for fewer worker-seconds, with the join
+        # decisions timestamped inside the window
+        "strongest_spike": {
+            "spike_multiplier": strongest["spike_multiplier"],
+            "auto_beats_fixed_spike_p99":
+                strongest["auto_beats_fixed_spike_p99"],
+            "auto_cheaper": strongest["auto_cheaper"],
+            "first_join_in_spike": strongest["first_join_in_spike"],
+            "joins_in_spike": strongest["joins_in_spike"],
+            "warmup_accounted": strongest["warmup_accounted"],
+        },
+    }
+
+    # -- edge cache: the CDN tier in front of the same mid fleet ------------
+    _, _, no_edge = fixed_by_mult[max(spike_mults)]
+    edge_rep = _serve(spec, trace, mid_fleet,
+                      edge_cache_bytes=spec.edge_cache_bytes)
+    edge_cache = {
+        "edge_cache_bytes": spec.edge_cache_bytes,
+        "servers": mid_fleet,
+        "requests": edge_rep.requests,
+        "forwarded": edge_rep.forwarded,
+        "edge_hits": edge_rep.edge_hits,
+        "edge_coalesced": edge_rep.edge_coalesced,
+        "edge_evictions": edge_rep.edge_evictions,
+        "edge_hit_rate": round(edge_rep.edge_hit_rate, 4),
+        "server_hit_rate": round(edge_rep.hit_rate, 4),
+        "combined_hit_rate": round(edge_rep.combined_hit_rate, 4),
+        "no_edge_hit_rate": round(no_edge.combined_hit_rate, 4),
+        "p99_ms_no_edge": round(no_edge.p99_s * 1e3, 3),
+        "p99_ms_with_edge": round(edge_rep.p99_s * 1e3, 3),
+        "p50_ms_no_edge": round(no_edge.p50_s * 1e3, 3),
+        "p50_ms_with_edge": round(edge_rep.p50_s * 1e3, 3),
+        # every request resolved at exactly one tier
+        "tiers_account": (edge_rep.forwarded + edge_rep.edge_hits
+                          + edge_rep.edge_coalesced == edge_rep.requests),
+        "two_level_hit_rate_improves": (edge_rep.combined_hit_rate
+                                        >= no_edge.combined_hit_rate),
+        "improves_p99": edge_rep.p99_s <= no_edge.p99_s,
+    }
+
     # -- mixed workload: the same trace +- a concurrent composite wave -----
-    solo = _serve(spec, trace, mid_fleet)
+    # the serve-only baseline is the max-mult spike-sweep run (identical
+    # trace, fleet, and seed — the DES is deterministic), not a re-run
+    _, _, solo = fixed_by_mult[max(spike_mults)]
     mixed = _serve(spec, trace, mid_fleet, batch_nodes=batch_nodes,
                    batch_tasks_per_node=batch_tasks_per_node,
                    batch_arrival_t=spike.t0)
@@ -217,6 +360,8 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 4.0, 8.0),
         "slo": {"hit_rate_min": HIT_RATE_SLO, "p99_ms_max": P99_SLO_MS},
         "rows": rows,
         "mixed_workload": mixed_workload,
+        "autoscaling": autoscaling,
+        "edge_cache": edge_cache,
         "headline_p99_ms": rows[len(fleets) - 1]["p99_ms"],
     }
     if out_path:
@@ -240,6 +385,27 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 4.0, 8.0),
               f"({mw['p99_degradation_x']}x), same-simulation proof: "
               f"accounted={mw['same_simulation']['accounted']} "
               f"overlap={mw['same_simulation']['completion_windows_overlap']}")
+        print(f"\n{'spike':>6} {'fix p99':>9} {'auto p99':>9} "
+              f"{'fix ws':>7} {'auto ws':>8} {'peak':>4} {'joins':>5} "
+              f"{'in-spike':>8} {'warmup':>6} {'verdict':>8}")
+        for r in auto_rows:
+            verdict = ("WIN" if (r["auto_beats_fixed_spike_p99"]
+                                 and r["auto_cheaper"]) else
+                       "cheap" if r["auto_cheaper"] else "-")
+            print(f"{r['spike_multiplier']:>6.1f} "
+                  f"{r['fixed_spike_p99_ms']:>9.2f} "
+                  f"{r['auto_spike_p99_ms']:>9.2f} "
+                  f"{r['fixed_worker_seconds']:>7.2f} "
+                  f"{r['auto_worker_seconds']:>8.2f} "
+                  f"{r['peak_servers']:>4} {len(r['joins']):>5} "
+                  f"{r['joins_in_spike']:>8} "
+                  f"{str(r['warmup_accounted']):>6} {verdict:>8}")
+        ec = edge_cache
+        print(f"edge cache {ec['edge_cache_bytes'] >> 20} MiB @ "
+              f"{ec['servers']} servers: hit {ec['edge_hit_rate']:.1%} edge "
+              f"(+{ec['edge_coalesced']} coalesced) -> combined "
+              f"{ec['combined_hit_rate']:.1%} vs {ec['no_edge_hit_rate']:.1%}"
+              f", p99 {ec['p99_ms_no_edge']} -> {ec['p99_ms_with_edge']} ms")
         if out_path:
             print(f"wrote {out_path}")
     return result
@@ -249,10 +415,12 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--fleets", default="2,4,8",
                    help="comma-separated serve-fleet sizes (>= 3 of them)")
-    p.add_argument("--spike-mults", default="1,4,8")
+    p.add_argument("--spike-mults", default="1,8,16",
+                   help="the strongest should exceed the mid fleet's "
+                        "capacity (the autoscaling section's proof regime)")
     p.add_argument("--batch-nodes", type=int, default=32)
     p.add_argument("--batch-tasks-per-node", type=int, default=8)
-    p.add_argument("--duration", type=float, default=1.5)
+    p.add_argument("--duration", type=float, default=2.0)
     p.add_argument("--base-rps", type=float, default=150.0)
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized: smaller batch wave, same schema")
@@ -267,7 +435,7 @@ def main(argv=None) -> int:
         duration_s=args.duration, base_rps=args.base_rps, out_path=args.out)
     if args.smoke:
         kwargs.update(batch_nodes=24, batch_tasks_per_node=4,
-                      duration_s=1.0, base_rps=120.0)
+                      duration_s=1.4, base_rps=120.0)
     run(**kwargs)
     return 0
 

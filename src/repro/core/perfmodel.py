@@ -244,11 +244,16 @@ class TileServingModel:
     * ``request_overhead_s`` — HTTP parse + tile assembly + response
       write, ~0.8 ms.
     * ``cache_hit_s`` — serving straight from the in-memory tile cache.
+    * ``edge_hit_s`` — a hit at the CDN/edge tier *in front of* the fleet:
+      the request never reaches a server (no queueing, no worker, no HTTP
+      parse on a mapserver), it pays only the edge lookup + response
+      write — cheaper than even an unqueued server cache hit.
     """
 
     decode_s_per_byte: float = 1.0 / 500e6
     request_overhead_s: float = 0.8e-3
     cache_hit_s: float = 60e-6
+    edge_hit_s: float = 30e-6
 
     def miss_cost_s(self, nbytes: int) -> float:
         return self.request_overhead_s + nbytes * self.decode_s_per_byte
@@ -256,8 +261,32 @@ class TileServingModel:
     def hit_cost_s(self) -> float:
         return self.cache_hit_s
 
+    def edge_hit_cost_s(self) -> float:
+        return self.edge_hit_s
+
 
 TILE_SERVING_MODEL = TileServingModel()
+
+#: virtual seconds between a serve-pool join being requested and the new
+#: server taking traffic: process start + festivus mount + first manifest
+#: sync.  Deliberately on the benchmark traces' compressed virtual
+#: timescale (a real GCE VM boots in ~tens of seconds against minutes-long
+#: spikes; the traces compress a spike to ~0.25 virtual seconds, so the
+#: warm-up compresses with it — what matters is that capacity added by the
+#: autoscaler is *not* free or instant, and every joiner's first completion
+#: provably waits out this window).
+SERVE_WARMUP_S = 0.05
+
+#: §IV.A's measured node rate ("$0.51 per node hour", n1-highcpu-64): the
+#: $-proxy the serving benchmark multiplies worker-seconds by.  A proxy —
+#: serve nodes are smaller than LINPACK nodes — but it is the paper's own
+#: number, and it prices fixed-vs-autoscaled fleets identically.
+NODE_COST_PER_HR_USD = 0.51
+
+
+def worker_seconds_cost(worker_seconds: float) -> float:
+    """$-proxy for a fleet's total node uptime (see NODE_COST_PER_HR_USD)."""
+    return worker_seconds * NODE_COST_PER_HR_USD / 3600.0
 
 
 def percentile(values, q: float) -> float:

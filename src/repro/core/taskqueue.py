@@ -80,6 +80,10 @@ class TaskQueue:
         #: per-pool ready heaps of (-priority, seq, task_id); None is the
         #: default shared pool (claims match a task's pool exactly)
         self._ready: Dict[Optional[str], List] = {}
+        #: per-pool PENDING counts, maintained at every state transition —
+        #: an autoscaler polls this every tick, so it must not cost a
+        #: full-task scan (the heaps can't be used: they hold stale entries)
+        self._pending_counts: Dict[Optional[str], int] = {}
         self._seq = 0
         self._lock = threading.RLock()
         self._durations: List[float] = []
@@ -105,9 +109,13 @@ class TaskQueue:
             self.submit(task_id, payload, priority=priority)
 
     def _push_ready(self, task: Task):
+        """Every PENDING transition comes through here (submit, retry,
+        lease-expiry requeue), so the per-pool count rides along."""
         self._seq += 1
         heapq.heappush(self._ready.setdefault(task.pool, []),
                        (-task.priority, self._seq, task.task_id))
+        self._pending_counts[task.pool] = \
+            self._pending_counts.get(task.pool, 0) + 1
 
     # -- worker side ----------------------------------------------------------
     def claim(self, worker: str, lease_s: Optional[float] = None,
@@ -126,6 +134,7 @@ class TaskQueue:
                 task = self._tasks[tid]
                 if task.state != PENDING:
                     continue  # stale heap entry
+                self._pending_counts[task.pool] -= 1
                 task.state = RUNNING
                 task.worker = worker
                 task.attempt += 1
@@ -169,6 +178,10 @@ class TaskQueue:
             if task.state in (DONE, DEAD):
                 self.stats["duplicate_completions"] += 1
                 return False
+            if task.state == PENDING:
+                # a zombie's completion landing after lease expiry
+                # re-queued the task: it leaves PENDING without a claim
+                self._pending_counts[task.pool] -= 1
             task.state = DONE
             task.worker = worker
             task.result = result
@@ -240,6 +253,17 @@ class TaskQueue:
 
     def pending(self) -> int:
         return self.counts()[PENDING]
+
+    def pending_by_pool(self) -> Dict[Optional[str], int]:
+        """PENDING depth per routing pool (None = the default shared pool).
+
+        This is the backlog signal an autoscaling controller watches (every
+        tick, so it is counter-maintained, not scanned): tasks submitted
+        (or re-queued by lease expiry) but not yet claimed by any worker
+        of that pool."""
+        with self._lock:
+            return {pool: n for pool, n in self._pending_counts.items()
+                    if n > 0}
 
     def done(self) -> bool:
         c = self.counts()

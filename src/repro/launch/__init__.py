@@ -10,6 +10,8 @@ from repro.launch.cluster import (
     ClusterReport,
     ElasticEvent,
     ElasticSchedule,
+    FleetController,
+    FleetView,
     Worker,
     scatter_gather,
 )
@@ -22,6 +24,6 @@ from repro.launch.mesh import (
 
 __all__ = [
     "ClusterConfig", "ClusterEngine", "ClusterReport", "ElasticEvent",
-    "ElasticSchedule", "Worker", "dp_axes", "dp_size", "make_local_mesh",
-    "make_production_mesh", "scatter_gather",
+    "ElasticSchedule", "FleetController", "FleetView", "Worker", "dp_axes",
+    "dp_size", "make_local_mesh", "make_production_mesh", "scatter_gather",
 ]

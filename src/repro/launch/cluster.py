@@ -55,6 +55,15 @@ through the existing :class:`TaskQueue` machinery (lease expiry, or
 straggler speculation by a surviving worker); completion stays
 exactly-once and outputs stay byte-identical because tile tasks are
 idempotent.
+
+The schedule can also be extended *mid-run, from inside the simulation*:
+a :class:`FleetController` (:attr:`ClusterConfig.controller`) is ticked
+every ``interval_s`` of virtual time with a :class:`FleetView` snapshot
+(queue depth per pool, completion times, active/warming worker counts)
+and returns further :class:`ElasticEvent`\\s — pool-targeted joins with a
+warm-up window before the new worker takes traffic, and drains that
+prefer idle victims.  This is how :mod:`repro.serve.autoscale` closes the
+SLO loop: the scaling decision is itself a participant in the event loop.
 """
 
 from __future__ import annotations
@@ -182,10 +191,37 @@ class MountMeta:
 @dataclasses.dataclass(frozen=True)
 class ElasticEvent:
     """One fleet-size change: at virtual time `t`, `delta` workers join
-    (positive) or are pre-empted (negative)."""
+    (positive) or are pre-empted (negative).
+
+    `pool` targets the change at one worker pool (joiners are created *in*
+    that pool; leaves pick victims only from it); None keeps the legacy
+    behaviour (joiners land in the default shared pool, leaves pre-empt the
+    highest-index active workers fleet-wide).  `warmup_s` (joins only)
+    holds a new worker out of dispatch until ``t + warmup_s`` — the VM
+    boot / mount / first-manifest-sync window an autoscaler must pay
+    before added capacity takes traffic.  `prefer_idle` (leaves only) lets
+    a *planned* scale-in pick idle victims first — the scheduler's choice,
+    not a safety property: a busy victim still vanishes abruptly and its
+    task still recovers through lease expiry / speculation.
+    """
 
     t: float
     delta: int
+    pool: Optional[str] = None
+    warmup_s: float = 0.0
+    prefer_idle: bool = False
+
+    def __post_init__(self):
+        # validated here, not only in ElasticSchedule: controller-returned
+        # events reach the heap without passing through a schedule, and a
+        # delta of 0 would classify as a leave whose [0:] victim slice
+        # drains the whole fleet
+        if self.delta == 0:
+            raise ValueError(f"no-op elastic event: {self}")
+        if self.warmup_s < 0:
+            raise ValueError(f"negative warmup_s in {self}")
+        if self.warmup_s and self.delta < 0:
+            raise ValueError(f"warmup_s is meaningless on a leave: {self}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,6 +258,54 @@ class ElasticSchedule:
             raise ValueError(f"rejoin {rejoin_t} must follow leave {leave_t}")
         return ElasticSchedule((ElasticEvent(leave_t, -n),
                                 ElasticEvent(rejoin_t, +n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetView:
+    """What a :class:`FleetController` sees at a tick: a read-only snapshot
+    of the running campaign, all in virtual time.
+
+    `pending_by_pool` is the queue backlog (submitted or re-queued, not yet
+    claimed); `active_by_pool` counts workers ready to take traffic;
+    `warming_by_pool` counts joiners still inside their warm-up window
+    (capacity already paid for but not yet serving — a controller that
+    ignores these will over-scale during its own warm-ups).
+    """
+
+    now: float
+    pending_by_pool: Dict[Optional[str], int]
+    #: task_id -> first-completion virtual timestamp.  A live reference to
+    #: the engine's own accounting (no per-tick copy): read it during the
+    #: tick, don't hold it across ticks expecting a snapshot.
+    completion_times: Dict[str, float]
+    #: the same completions as an append-only (completed_at, task_id) log,
+    #: time-ordered because simulation time is monotonic — bisect it for
+    #: "completed in the last window" queries instead of scanning the dict
+    completion_log: List[Tuple[float, str]]
+    active_by_pool: Dict[Optional[str], int]
+    warming_by_pool: Dict[Optional[str], int]
+
+
+class FleetController:
+    """Scaling-decision loop living *inside* the DES (virtual-time only).
+
+    The engine calls :meth:`tick` every `interval_s` of simulated time
+    while the campaign runs; returned :class:`ElasticEvent`s are applied
+    through the same join/leave machinery as a precomputed
+    :class:`ElasticSchedule` — which is what makes controller-driven
+    scaling exactly-once and byte-identical: a drained worker's in-flight
+    task recovers via lease expiry / speculation, and completion stays
+    idempotent in the queue.  This is the same architectural step fabric
+    contention took in PR 2: the decision maker is a participant in the
+    event loop, not a post-hoc analysis.
+    """
+
+    #: virtual seconds between ticks
+    interval_s: float = 0.05
+
+    def tick(self, now: float,
+             view: FleetView) -> Optional[List[ElasticEvent]]:
+        raise NotImplementedError
 
 
 class _Flow:
@@ -270,6 +354,13 @@ class Worker:
         self.pool = pool
         #: False once pre-empted by an ElasticSchedule leave event
         self.active = True
+        #: virtual instants bounding this node's uptime: when it joined
+        #: (0.0 for the initial fleet), when it may first claim (join +
+        #: warm-up), and when it was pre-empted/drained (None = never) —
+        #: the worker-seconds a $-proxy bills
+        self.joined_t = 0.0
+        self.ready_t = 0.0
+        self.left_t: Optional[float] = None
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.duplicate_completions = 0
@@ -340,6 +431,10 @@ class ClusterConfig:
     meta_op_latency_s: float = perfmodel.METADATA_OP_LATENCY_S
     #: virtual mode: join/leave timetable for an elastic fleet
     elastic: Optional[ElasticSchedule] = None
+    #: virtual mode: a FleetController ticked every controller.interval_s
+    #: of simulated time; its returned ElasticEvents extend the elastic
+    #: schedule *mid-run, from inside the simulation* (SLO autoscaling)
+    controller: Optional[FleetController] = None
     #: ordered (pool_name, count) worker partition, e.g. (("serve", 4),
     #: ("batch", 16)); counts must sum to `nodes`.  Workers claim only
     #: tasks routed to their pool (run()'s `pools` argument) — the mixed
@@ -363,6 +458,13 @@ class WorkerReport:
     zone: int = 0
     #: False if the worker was pre-empted mid-campaign (elastic leave)
     active: bool = True
+    #: task-routing pool this worker claimed from (None = default shared)
+    pool: Optional[str] = None
+    #: uptime bounds (virtual): joined at `joined_t` (0.0 for the initial
+    #: fleet), pre-empted/drained at `left_t` (None = up at campaign end).
+    #: Uptime = (left_t or makespan) - joined_t — the $-proxy integrand.
+    joined_t: float = 0.0
+    left_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -408,7 +510,8 @@ class ClusterReport:
 #: task handler contract: (worker context, payload) -> result
 Handler = Callable[[Worker, Any], Any]
 
-_DISPATCH, _FINISH, _HEARTBEAT, _IO_DONE, _JOIN, _LEAVE, _ARRIVE = range(7)
+(_DISPATCH, _FINISH, _HEARTBEAT, _IO_DONE, _JOIN, _LEAVE, _ARRIVE,
+ _CONTROL) = range(8)
 
 
 class ClusterEngine:
@@ -427,6 +530,9 @@ class ClusterEngine:
             raise ValueError("elastic fleets require virtual_time=True "
                              "(real-thread mode has no event loop to drive "
                              "join/leave)")
+        if self.config.controller is not None and not self.config.virtual_time:
+            raise ValueError("a FleetController requires virtual_time=True "
+                             "(its ticks are simulation events)")
         #: the shared metadata KV — pass the caller's so its mounts see
         #: everything the fleet writes (and vice versa)
         self.meta = meta if meta is not None else MetadataStore()
@@ -477,16 +583,22 @@ class ClusterEngine:
                 return name
         return None
 
-    def _make_worker(self, index: int) -> Worker:
+    def _make_worker(self, index: int,
+                     pool_override: Optional[str] = None) -> Worker:
         """One node: private mount + metered KV view + clock (also the
-        elastic-join path, so joiners get exactly the same plumbing)."""
+        elastic-join path, so joiners get exactly the same plumbing).
+        `pool_override` puts an elastic joiner into a named pool (an
+        autoscaler growing the serve pool); None keeps positional
+        assignment (joiners beyond the partition land in the default
+        shared pool)."""
         mount = MountStore(self.inner, model=self._store_model)
         mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
         fs = Festivus(mount, meta=mmeta, config=self._fest_cfg,
                       pool=self._shared_pool)
         return Worker(index, mount, fs, perfmodel.WorkerClock(),
                       zone=index % self.config.zones, meta=mmeta,
-                      pool=self._pool_of(index))
+                      pool=(pool_override if pool_override is not None
+                            else self._pool_of(index)))
 
     # -- public API -----------------------------------------------------------
     def run(self, tasks: Dict[str, Any], handler: Handler,
@@ -524,6 +636,17 @@ class ClusterEngine:
                     f"worker claims from it (worker pools: "
                     f"{sorted(p if p is not None else '<default>' for p in worker_pools)})")
         queue = self._make_queue()
+        #: per-pool unfinished-task counts, maintained at completion — what
+        #: lets a pool-targeted elastic leave refuse to strand live work
+        self._unfinished_by_pool = {}
+        for tid in tasks:
+            p = pools.get(tid)
+            self._unfinished_by_pool[p] = self._unfinished_by_pool.get(p, 0) + 1
+        #: completion accounting maintained inline at _FINISH (virtual
+        #: mode), so a controller tick reads it for free instead of
+        #: rebuilding a dict over every DONE task per tick
+        self._completions: Dict[str, float] = {}
+        self._completion_log: List[Tuple[float, str]] = []
         deferred = []
         for task_id, payload in tasks.items():
             t = arrivals.get(task_id, 0.0)
@@ -616,6 +739,21 @@ class ClusterEngine:
             t.join()
         return time.monotonic() - t0
 
+    def _fleet_view(self, queue: TaskQueue) -> FleetView:
+        """Snapshot the campaign for a FleetController tick."""
+        active: Dict[Optional[str], int] = {}
+        warming: Dict[Optional[str], int] = {}
+        for w in self.workers:
+            if not w.active:
+                continue
+            bucket = warming if self._now < w.ready_t else active
+            bucket[w.pool] = bucket.get(w.pool, 0) + 1
+        return FleetView(now=self._now,
+                         pending_by_pool=queue.pending_by_pool(),
+                         completion_times=self._completions,
+                         completion_log=self._completion_log,
+                         active_by_pool=active, warming_by_pool=warming)
+
     # -- virtual-time mode: deterministic discrete-event simulation -----------
     def _run_virtual(self, queue: TaskQueue, handler: Handler,
                      deferred: Optional[List[Tuple]] = None) -> float:
@@ -663,7 +801,10 @@ class ClusterEngine:
             dirty = False
 
         for ev in (self.config.elastic.events if self.config.elastic else ()):
-            push(ev.t, _JOIN if ev.delta > 0 else _LEAVE, -1, abs(ev.delta))
+            push(ev.t, _JOIN if ev.delta > 0 else _LEAVE, -1, ev)
+        controller = self.config.controller
+        if controller is not None:
+            push(controller.interval_s, _CONTROL, -1)
         #: requests not yet arrived: workers must not retire while these are
         #: pending even though the queue looks drained
         pending_arrivals = len(deferred or ())
@@ -696,24 +837,75 @@ class ClusterEngine:
                 # a server parked on an empty queue reacts immediately, not
                 # after its exponential idle backoff elapses)
                 for w in self.workers:
-                    if w.active and not w._inflight and w.pool == pool:
+                    # a warming joiner (now < ready_t) keeps its scheduled
+                    # ready-time dispatch instead — capacity the autoscaler
+                    # added must not take traffic before its warm-up ends
+                    if (w.active and not w._inflight and w.pool == pool
+                            and self._now >= w.ready_t):
                         w._idle_backoff = 0.0
                         w._dispatch_epoch += 1  # supersede the backoff poll
                         push(self._now, _DISPATCH, w.index, w._dispatch_epoch)
                 continue
 
+            if kind == _CONTROL:
+                # ordered cheapest-first: pending_arrivals/busy are plain
+                # counters and non-zero for nearly every tick of a live
+                # campaign, so the O(tasks) done() scan almost never runs
+                if pending_arrivals == 0 and busy == 0 and queue.done():
+                    continue  # campaign drained: let the tick chain die
+                for ev in (controller.tick(self._now,
+                                           self._fleet_view(queue)) or ()):
+                    push(max(ev.t, self._now),
+                         _JOIN if ev.delta > 0 else _LEAVE, -1, ev)
+                push(self._now + controller.interval_s, _CONTROL, -1)
+                continue
+
             if kind == _JOIN:
-                for _ in range(data):
-                    w = self._make_worker(len(self.workers))
+                ev = data
+                for _ in range(ev.delta):
+                    w = self._make_worker(len(self.workers),
+                                          pool_override=ev.pool)
+                    w.joined_t = self._now
+                    w.ready_t = self._now + ev.warmup_s
                     self.workers.append(w)
                     self._joined += 1
-                    push(self._now, _DISPATCH, w.index)
+                    push(w.ready_t, _DISPATCH, w.index)
                 continue
 
             if kind == _LEAVE:
-                victims = [w for w in self.workers if w.active][-data:]
+                ev = data
+                candidates = [w for w in self.workers if w.active
+                              and (ev.pool is None or w.pool == ev.pool)]
+                if ev.prefer_idle:
+                    # planned drain: idle victims first (list tail is taken),
+                    # busy ones only if the drain outnumbers the idle —
+                    # recovery of a busy victim's task still rides the
+                    # lease-expiry / speculation safety net
+                    candidates = ([w for w in candidates if w._inflight]
+                                  + [w for w in candidates if not w._inflight])
+                victims = candidates[ev.delta:]  # delta < 0: the list tail
+                # a pool-*targeted* drain must not strand that pool's live
+                # tasks with no claimant (a controller bug would otherwise
+                # surface as an opaque event-loop runaway); fleet-wide
+                # leaves keep the legacy contract (drain all, rejoin later)
+                if (ev.pool is not None and candidates
+                        and len(victims) == len(candidates)):
+                    # _unfinished_by_pool is decremented on completion
+                    # only, so discount DEAD tasks here (lazily — this
+                    # branch is a rare drain-to-zero, not the hot path):
+                    # a dead-lettered task needs no worker, and a leave
+                    # on its account would abort a valid simulation
+                    unfinished = (self._unfinished_by_pool.get(ev.pool, 0)
+                                  - sum(1 for t in queue.dead_tasks()
+                                        if t.pool == ev.pool))
+                    if unfinished > 0:
+                        raise RuntimeError(
+                            f"elastic leave {ev} would remove every active "
+                            f"'{ev.pool}' worker while {unfinished} of its "
+                            f"tasks are unfinished — keep min_servers >= 1")
                 for w in victims:
                     w.active = False
+                    w.left_t = self._now
                     self._left += 1
                     fl = flows.pop(w.index, None)
                     if fl is not None:
@@ -762,6 +954,9 @@ class ClusterEngine:
                     worker.tasks_failed += 1
                 elif queue.complete(task.task_id, worker.name, result):
                     worker.tasks_completed += 1
+                    self._unfinished_by_pool[task.pool] -= 1
+                    self._completions[task.task_id] = self._now
+                    self._completion_log.append((self._now, task.task_id))
                 else:
                     worker.duplicate_completions += 1
                 worker.clock.advance_to(self._now)  # busy until this finish
@@ -822,7 +1017,8 @@ class ClusterEngine:
                          store_stats=w.store.stats.snapshot(),
                          festivus_stats=dataclasses.replace(w.fs.stats),
                          meta_ops=w.meta.ops if w.meta is not None else 0,
-                         zone=w.zone, active=w.active)
+                         zone=w.zone, active=w.active, pool=w.pool,
+                         joined_t=w.joined_t, left_t=w.left_t)
             for w in self.workers
         ]
         store_stats = StoreStats.merge(r.store_stats for r in per_worker)

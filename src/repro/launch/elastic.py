@@ -14,6 +14,12 @@ claiming trainer runs (train/checkpoint.py restores region-wise).
 
 This module is deliberately runtime-agnostic (the step function is
 injected) so tests can drive it with a counter instead of a model.
+
+The *simulated* counterpart lives in :mod:`repro.launch.cluster`
+(`ElasticSchedule` / `ElasticEvent` / `FleetController`): there the
+join/leave timetable — or an SLO autoscaler extending it mid-run
+(:mod:`repro.serve.autoscale`) — drives virtual-time workers through the
+same lease-expiry handoff this trainer relies on for real pre-emption.
 """
 
 from __future__ import annotations

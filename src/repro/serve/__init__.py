@@ -12,7 +12,15 @@ Sector/Sphere and the Matsu wheel: serving and scanning share one
 chunkstore).
 """
 
+from repro.serve.autoscale import (
+    AutoscaleAction,
+    AutoscalePolicy,
+    AutoscaleReport,
+    ServeAutoscaler,
+)
 from repro.serve.tileserver import (
+    EdgeCache,
+    EdgeCacheStats,
     ServingReport,
     TileCache,
     TileCacheStats,
@@ -27,8 +35,9 @@ from repro.serve.tileserver import (
 from repro.serve.trace import Spike, rate_at, tile_universe, zipf_spike_trace
 
 __all__ = [
-    "ServingReport", "Spike", "TileCache", "TileCacheStats", "TileFleet",
-    "TileRequest", "TileResponse", "TileServer", "TileServerStats",
-    "rate_at", "tile_bounds", "tile_grid", "tile_universe",
-    "zipf_spike_trace",
+    "AutoscaleAction", "AutoscalePolicy", "AutoscaleReport", "EdgeCache",
+    "EdgeCacheStats", "ServeAutoscaler", "ServingReport", "Spike",
+    "TileCache", "TileCacheStats", "TileFleet", "TileRequest",
+    "TileResponse", "TileServer", "TileServerStats", "rate_at",
+    "tile_bounds", "tile_grid", "tile_universe", "zipf_spike_trace",
 ]

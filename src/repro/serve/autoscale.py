@@ -1,0 +1,276 @@
+"""SLO-driven serve-pool autoscaler (paper §V.D: survive spikes by adding
+capacity, not by over-provisioning).
+
+The Mapserver tier's elastic-cloud advantage over a fixed HPC installation
+is that a traffic spike is answered with *joins*, and the quiet hours are
+not billed at peak size.  :class:`ServeAutoscaler` closes that loop inside
+the cluster DES: it is a :class:`~repro.launch.cluster.FleetController`,
+ticked by the engine every ``interval_s`` of *virtual* time, and its scale
+decisions are :class:`~repro.launch.cluster.ElasticEvent`\\s applied
+through the same join/leave machinery as any elastic schedule — so scaling
+stays exactly-once (a drained worker's in-flight request recovers through
+lease expiry / speculation) and adds no second source of truth.
+
+Signals, per tick:
+
+* **windowed p99 latency** — completion − arrival over requests that
+  completed in the last ``window_s`` (the trailing SLO view; lags the
+  spike by up to one window).
+* **queue depth** — PENDING requests in the serve pool right now (the
+  leading signal: a spike shows up here within one tick, long before the
+  latency window turns over).
+
+Scale-out joins pay a warm-up (:data:`repro.core.perfmodel.SERVE_WARMUP_S`
+by default): a joiner takes no traffic until ``join_t + warmup_s``, so
+added capacity is provably not instant.  Scale-in drains prefer idle
+victims and never go below ``min_servers``; both directions honour a
+cooldown so one hot window cannot thrash the fleet.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core import perfmodel
+from repro.launch.cluster import ElasticEvent, FleetController, FleetView
+
+#: must match repro.serve.tileserver.SERVE_POOL (kept literal here so the
+#: policy module does not import the server module it steers)
+DEFAULT_POOL = "serve"
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """The SLO contract the autoscaler enforces, and how hard it reacts.
+
+    `target_p99_s` is the breach line (scale out above it);
+    `scale_in_p99_s` is the calm line (eligible to scale in below it —
+    keep a wide gap between the two or the fleet flaps).  Queue depth
+    breaches at ``queue_high_per_server * (active + warming)`` so a
+    half-warmed fleet is not double-scaled.  `lease_s` is the request
+    lease under autoscaling: a request orphaned by a drained worker is
+    re-delivered after at most this much virtual time (the exactly-once
+    handoff path), so keep it a small multiple of a miss service time.
+    """
+
+    min_servers: int = 1
+    max_servers: int = 16
+    target_p99_s: float = 0.05
+    scale_in_p99_s: float = 0.01
+    window_s: float = 0.1
+    interval_s: float = 0.02
+    queue_high_per_server: float = 3.0
+    #: absolute floor under the depth trigger: a briefly-busy tiny fleet
+    #: (one server, a few misses back to back) must not read as a spike
+    queue_high_min: int = 10
+    #: minimum join size; the actual join is backlog-proportional —
+    #: ``max(scale_out_step, ceil(depth / queue_high_per_server))`` capped
+    #: at max_servers — so a deep backlog is answered in one round, not
+    #: chased with fixed steps while it compounds
+    scale_out_step: int = 4
+    scale_in_step: int = 3
+    warmup_s: float = perfmodel.SERVE_WARMUP_S
+    cooldown_s: float = 0.08
+    #: consecutive calm ticks required before a drain (debounce)
+    calm_ticks_to_drain: int = 3
+    #: scale-in keeps at least ``offered_rps * mean_latency * headroom``
+    #: servers: low latency alone is not a drain licence — it may simply
+    #: mean the fleet is *currently adequate* for a still-raging spike,
+    #: and draining on it would flap (drain -> breach -> rejoin -> ...)
+    drain_headroom: float = 2.0
+    lease_s: float = 0.5
+    pool: str = DEFAULT_POOL
+
+    def __post_init__(self):
+        if self.min_servers < 1:
+            raise ValueError(f"min_servers must be >= 1, got "
+                             f"{self.min_servers}")
+        if self.max_servers < self.min_servers:
+            raise ValueError(f"max_servers {self.max_servers} < min_servers "
+                             f"{self.min_servers}")
+        if self.scale_in_p99_s >= self.target_p99_s:
+            raise ValueError(
+                f"scale-in threshold {self.scale_in_p99_s} must sit below "
+                f"the target {self.target_p99_s} (hysteresis gap)")
+        if min(self.window_s, self.interval_s, self.warmup_s,
+               self.cooldown_s, self.lease_s) < 0 or self.interval_s == 0:
+            raise ValueError("window/interval/warmup/cooldown/lease "
+                             "must be non-negative (interval positive)")
+        if self.scale_out_step < 1 or self.scale_in_step < 1:
+            raise ValueError("scale steps must be >= 1")
+        if self.drain_headroom < 1.0:
+            raise ValueError(f"drain_headroom must be >= 1, got "
+                             f"{self.drain_headroom}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleAction:
+    """One decision, with the evidence it was taken on (all virtual time)."""
+
+    t: float
+    delta: int
+    reason: str
+    window_p99_s: float
+    queue_depth: int
+    servers_before: int
+    servers_after: int
+
+
+@dataclasses.dataclass
+class AutoscaleReport:
+    """Gathered autoscaling outcome for one campaign."""
+
+    policy: AutoscalePolicy
+    actions: List[AutoscaleAction]
+    peak_servers: int
+    min_servers_seen: int
+    #: every joiner's first completion waited out its warm-up window
+    warmup_ok: bool = True
+
+    @property
+    def joins(self) -> List[AutoscaleAction]:
+        return [a for a in self.actions if a.delta > 0]
+
+    @property
+    def drains(self) -> List[AutoscaleAction]:
+        return [a for a in self.actions if a.delta < 0]
+
+
+class ServeAutoscaler(FleetController):
+    """Watch the serve pool's SLO inside the DES; emit joins and drains.
+
+    `arrivals` maps serve task ids to their virtual arrival instants (the
+    fleet passes the request trace's timestamps) — joined with the
+    engine's completion times it yields the windowed latency percentile.
+    """
+
+    def __init__(self, policy: AutoscalePolicy,
+                 arrivals: Optional[Dict[str, float]] = None):
+        self.policy = policy
+        self.interval_s = policy.interval_s
+        self.arrivals: Dict[str, float] = dict(arrivals or {})
+        #: arrival instants, sorted once: offered-rate queries bisect this
+        #: instead of scanning every arrival each tick
+        self._arrival_times = sorted(self.arrivals.values())
+        self.actions: List[AutoscaleAction] = []
+        #: cooldowns are asymmetric: a scale-out is blocked only by a
+        #: recent scale-out (give the warm-up a chance to land), never by
+        #: a drain — reacting to a breach right after a drain IS the job;
+        #: a drain is blocked by any recent action (join+drain = flap)
+        self._last_out_t = float("-inf")
+        self._last_in_t = float("-inf")
+        self._calm_ticks = 0
+
+    # -- signal extraction ----------------------------------------------------
+    def _window_latencies(self, now: float, view: FleetView) -> List[float]:
+        """completion - arrival for requests completed in the last window
+        (a bisect on the engine's time-ordered completion log, so a tick
+        costs the window's completions, not the campaign's)."""
+        horizon = now - self.policy.window_s
+        log = view.completion_log
+        lats = []
+        for done, tid in log[bisect.bisect_left(log, (horizon,)):]:
+            t0 = self.arrivals.get(tid)
+            if t0 is not None:
+                lats.append(done - t0)
+        return lats
+
+    @staticmethod
+    def _p99(lats: List[float]) -> float:
+        """The empty-window convention lives here and only here: no
+        completions yet means no evidence of a breach, not a breach."""
+        return perfmodel.percentile(lats, 99) if lats else 0.0
+
+    def window_p99_s(self, now: float, view: FleetView) -> float:
+        """Windowed latency p99 (0.0 while nothing has completed yet)."""
+        return self._p99(self._window_latencies(now, view))
+
+    def _window_offered_rps(self, now: float) -> float:
+        """Requests that *arrived* in the last window, as a rate."""
+        if self.policy.window_s <= 0:
+            return 0.0
+        horizon = now - self.policy.window_s
+        times = self._arrival_times
+        n = (bisect.bisect_right(times, now)
+             - bisect.bisect_right(times, horizon))
+        return n / self.policy.window_s
+
+    def _demand_floor(self, now: float, lats: List[float]) -> int:
+        """Servers the current offered load needs (a Little's-law estimate:
+        windowed arrival rate x mean observed latency x headroom).  With an
+        empty queue the observed latency approximates pure service time, so
+        this is what keeps a calm-*looking* but still-loaded fleet from
+        draining into a flap (drain -> breach -> rejoin -> ...)."""
+        if not lats:
+            return self.policy.min_servers
+        mean_lat = sum(lats) / len(lats)
+        demand = (self._window_offered_rps(now) * mean_lat
+                  * self.policy.drain_headroom)
+        return max(self.policy.min_servers, math.ceil(demand))
+
+    # -- the decision loop ----------------------------------------------------
+    def tick(self, now: float, view: FleetView) -> List[ElasticEvent]:
+        p = self.policy
+        lats = self._window_latencies(now, view)
+        p99 = self._p99(lats)
+        depth = view.pending_by_pool.get(p.pool, 0)
+        active = view.active_by_pool.get(p.pool, 0)
+        warming = view.warming_by_pool.get(p.pool, 0)
+        servers = active + warming
+        out_cooled = now - self._last_out_t >= p.cooldown_s
+        in_cooled = (now - max(self._last_out_t, self._last_in_t)
+                     >= p.cooldown_s)
+
+        hot = (p99 > p.target_p99_s
+               or depth > max(p.queue_high_per_server * max(1, servers),
+                              p.queue_high_min))
+        if hot:
+            self._calm_ticks = 0
+            if servers >= p.max_servers or not out_cooled:
+                return []
+            # join sized to the backlog: enough capacity to drain it to
+            # the per-server target in one round, never less than the step
+            want = max(p.scale_out_step,
+                       math.ceil(depth / max(p.queue_high_per_server, 1.0)))
+            n = min(want, p.max_servers - servers)
+            reason = ("p99_breach" if p99 > p.target_p99_s
+                      else "queue_depth")
+            self._record(now, +n, reason, p99, depth, servers)
+            return [ElasticEvent(now, +n, pool=p.pool, warmup_s=p.warmup_s)]
+
+        calm = p99 < p.scale_in_p99_s and depth == 0
+        if not calm:
+            self._calm_ticks = 0
+            return []
+        self._calm_ticks += 1
+        if (self._calm_ticks < p.calm_ticks_to_drain or not in_cooled
+                or warming > 0 or servers <= p.min_servers):
+            return []
+        floor = self._demand_floor(now, lats)
+        n = min(p.scale_in_step, servers - floor)
+        if n < 1:
+            return []  # demand still needs this fleet; latency just says ok
+        self._calm_ticks = 0
+        self._record(now, -n, "calm", p99, depth, servers)
+        return [ElasticEvent(now, -n, pool=p.pool, prefer_idle=True)]
+
+    def _record(self, now: float, delta: int, reason: str, p99: float,
+                depth: int, servers: int) -> None:
+        if delta > 0:
+            self._last_out_t = now
+        else:
+            self._last_in_t = now
+        self.actions.append(AutoscaleAction(
+            t=now, delta=delta, reason=reason, window_p99_s=p99,
+            queue_depth=depth, servers_before=servers,
+            servers_after=servers + delta))
+
+    # -- gather ---------------------------------------------------------------
+    def report(self, base_servers: int) -> AutoscaleReport:
+        sizes = [base_servers] + [a.servers_after for a in self.actions]
+        return AutoscaleReport(policy=self.policy, actions=list(self.actions),
+                               peak_servers=max(sizes),
+                               min_servers_seen=min(sizes))

@@ -30,10 +30,11 @@ import numpy as np
 
 from repro.core import perfmodel
 from repro.core.chunkstore import ChunkedArray, ChunkStore, spatial_dims
-from repro.core.festivus import FestivusConfig
+from repro.core.festivus import Festivus, FestivusConfig
 from repro.core.metadata import MetadataStore
 from repro.core.object_store import ObjectStore
 from repro.launch.cluster import ClusterConfig, ClusterEngine, ClusterReport, Worker
+from repro.serve.autoscale import AutoscalePolicy, AutoscaleReport, ServeAutoscaler
 
 SERVE_POOL = "serve"
 BATCH_POOL = "batch"
@@ -110,44 +111,45 @@ class TileCacheStats:
         return self.hits / total if total else 0.0
 
 
-class TileCache:
-    """Byte-bounded LRU of decoded tiles, keyed (array, level, x, y).
+class _ByteBoundedLRU:
+    """Shared LRU core for both cache tiers: byte accounting, replace
+    without double-count, evict from the cold end, and the oversize rule
+    (an entry larger than the whole capacity is served but never cached —
+    it would evict everything for a single-use entry).
 
-    The serving analogue of the page cache: repeated requests for a hot
-    tile skip the object store entirely.  A tile larger than the whole
-    capacity is served but never cached (it would evict everything for a
-    single-use entry).
+    Entries are ``key -> (nbytes, payload)``; subclasses choose the
+    payload (decoded pixels for the server tier, the filler's identity
+    for the edge tier) and expose their own get/put signatures.  The
+    stats object just needs hits/misses/evictions/inserted_bytes fields.
     """
 
-    def __init__(self, capacity_bytes: int):
-        if capacity_bytes < 0:
-            raise ValueError(f"negative cache capacity {capacity_bytes}")
+    def __init__(self, capacity_bytes: int, stats):
         self.capacity = capacity_bytes
-        self.stats = TileCacheStats()
-        self._data: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+        self.stats = stats
+        self._data: "OrderedDict[Tuple, Tuple[int, Any]]" = OrderedDict()
         self._bytes = 0
 
-    def get(self, key: Tuple) -> Optional[np.ndarray]:
-        tile = self._data.get(key)
-        if tile is None:
+    def _lookup(self, key: Tuple) -> Optional[Tuple[int, Any]]:
+        entry = self._data.get(key)
+        if entry is None:
             self.stats.misses += 1
             return None
         self._data.move_to_end(key)
         self.stats.hits += 1
-        return tile
+        return entry
 
-    def put(self, key: Tuple, tile: np.ndarray) -> None:
-        if tile.nbytes > self.capacity:
+    def _insert(self, key: Tuple, nbytes: int, payload) -> None:
+        if nbytes > self.capacity:
             return
         old = self._data.pop(key, None)
         if old is not None:
-            self._bytes -= old.nbytes
-        self._data[key] = tile
-        self._bytes += tile.nbytes
-        self.stats.inserted_bytes += tile.nbytes
+            self._bytes -= old[0]
+        self._data[key] = (nbytes, payload)
+        self._bytes += nbytes
+        self.stats.inserted_bytes += nbytes
         while self._bytes > self.capacity:
-            _, victim = self._data.popitem(last=False)
-            self._bytes -= victim.nbytes
+            _, (victim_bytes, _) = self._data.popitem(last=False)
+            self._bytes -= victim_bytes
             self.stats.evictions += 1
 
     def __len__(self) -> int:
@@ -156,6 +158,67 @@ class TileCache:
     @property
     def bytes_used(self) -> int:
         return self._bytes
+
+
+class TileCache(_ByteBoundedLRU):
+    """Byte-bounded LRU of decoded tiles, keyed (array, level, x, y).
+
+    The serving analogue of the page cache: repeated requests for a hot
+    tile skip the object store entirely.
+    """
+
+    def __init__(self, capacity_bytes: int):
+        if capacity_bytes < 0:
+            raise ValueError(f"negative cache capacity {capacity_bytes}")
+        super().__init__(capacity_bytes, TileCacheStats())
+
+    def get(self, key: Tuple) -> Optional[np.ndarray]:
+        entry = self._lookup(key)
+        return entry[1] if entry is not None else None
+
+    def put(self, key: Tuple, tile: np.ndarray) -> None:
+        self._insert(key, tile.nbytes, tile)
+
+
+# ---------------------------------------------------------------------------
+# the edge tier: a CDN-role cache in FRONT of the fleet
+# ---------------------------------------------------------------------------
+#: the edge tier counts exactly what the server tier counts; one class
+#: serves both (the name stays exported for call-site clarity)
+EdgeCacheStats = TileCacheStats
+
+
+class EdgeCache(_ByteBoundedLRU):
+    """Byte-bounded LRU of *encoded* tiles at the CDN/edge tier.
+
+    Sits in front of the whole fleet (the CDN role in front of the
+    paper's Mapserver tier): a hit never reaches a server — no queueing, no
+    worker, just :attr:`TileServingModel.edge_hit_s` of response time.
+    Unlike :class:`TileCache` it stores no pixels: the simulation needs a
+    tile's *size* (byte-bounded eviction) and *identity of the request
+    that filled it* (the ``leader`` — so a request arriving while the
+    filler is still in flight can be coalesced onto its response, the
+    CDN request-collapsing behaviour), not its contents.
+
+    State evolves in request-arrival order, which is what makes the edge
+    deterministic independent of fleet timing: whether an entry is
+    *filled* by arrival time is resolved later against the leader's
+    simulated completion instant.
+    """
+
+    def __init__(self, capacity_bytes: int):
+        if capacity_bytes <= 0:
+            raise ValueError(f"edge cache needs positive capacity, got "
+                             f"{capacity_bytes}")
+        super().__init__(capacity_bytes, EdgeCacheStats())
+
+    def get(self, key: Tuple) -> Optional[str]:
+        """The leader task id whose response fills `key`, or None (miss)."""
+        entry = self._lookup(key)
+        return entry[1] if entry is not None else None
+
+    def put(self, key: Tuple, nbytes: int, leader: str) -> None:
+        self._insert(key, nbytes, leader)
 
 
 # ---------------------------------------------------------------------------
@@ -254,9 +317,28 @@ class ServingReport:
     batch_bytes_read: int
     #: the underlying cluster gather (makespan, per-worker stats, fabric)
     cluster: ClusterReport
-    #: per-request (arrival_t, latency_s) samples, trace order — lets a
+    #: per-request (arrival_t, latency_s) samples, arrival order — lets a
     #: benchmark slice percentiles by window (e.g. inside a load spike)
     samples: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
+    #: requests that reached the fleet (== `requests` with the edge off)
+    forwarded: int = 0
+    #: edge tier (requests resolve edge-hit -> server-cache-hit -> pyramid):
+    #: `edge_hits` were answered from a filled edge entry, `edge_coalesced`
+    #: arrived while the filling request was still in flight and rode its
+    #: response (CDN request collapsing); `edge_hit_rate` counts both over
+    #: all requests.  All zero when no edge cache is configured.
+    edge_hits: int = 0
+    edge_coalesced: int = 0
+    edge_evictions: int = 0
+    edge_hit_rate: float = 0.0
+    #: fraction of requests served without a pyramid read (edge hit, edge
+    #: coalesce, or server tile-cache hit) — the two-level hit rate
+    combined_hit_rate: float = 0.0
+    #: serve-pool node uptime, virtual seconds summed over servers (joined
+    #: -> drained/campaign-end): the $-proxy an autoscaler economises
+    serve_worker_seconds: float = 0.0
+    #: autoscaler outcome (None when the fleet ran at fixed size)
+    autoscale: Optional[AutoscaleReport] = None
 
     def window_percentile(self, q: float, t0: float = 0.0,
                           t1: float = float("inf")) -> float:
@@ -279,6 +361,17 @@ class TileFleet:
     a ``batch`` pool at t=0.  Both pools' I/O flows share the configured
     fabric zone(s), so serving latency degrades under a concurrent scan
     campaign *inside* the simulation.
+
+    Two optional tiers complete the §V.D deployment shape:
+
+    * ``edge_cache_bytes > 0`` puts an :class:`EdgeCache` in *front* of
+      the fleet — requests resolve edge-hit -> server-cache-hit ->
+      pyramid read (the two-level hit rate), and an edge hit never
+      occupies a server.
+    * ``autoscale=AutoscalePolicy(...)`` hands the serve pool to a
+      :class:`~repro.serve.autoscale.ServeAutoscaler` living inside the
+      DES: SLO-breach joins (with warm-up) during spikes, idle-preferring
+      drains when load subsides, `servers` being the starting size.
     """
 
     def __init__(self, store: ObjectStore, meta: MetadataStore,
@@ -288,9 +381,13 @@ class TileFleet:
                  vcpus: int = 16, zones: int = 1,
                  fabric: Optional[perfmodel.FabricModel] = perfmodel.FABRIC_MODEL,
                  block_bytes: int = 4 * perfmodel.MiB,
-                 max_inflight: int = 16):
+                 max_inflight: int = 16,
+                 edge_cache_bytes: int = 0,
+                 autoscale: Optional[AutoscalePolicy] = None):
         if servers < 1:
             raise ValueError(f"need at least one server, got {servers}")
+        if edge_cache_bytes < 0:
+            raise ValueError(f"negative edge cache {edge_cache_bytes}")
         self.store = store
         self.meta = meta
         self.root = root
@@ -304,26 +401,79 @@ class TileFleet:
         self.fabric = fabric
         self.block_bytes = block_bytes
         self.max_inflight = max_inflight
+        #: > 0 puts an EdgeCache tier in front of the fleet
+        self.edge_cache_bytes = edge_cache_bytes
+        #: an AutoscalePolicy lets a ServeAutoscaler grow/drain the serve
+        #: pool mid-run; `servers` is then the starting size
+        self.autoscale = autoscale
 
-    def _config(self, batch_nodes: int) -> ClusterConfig:
+    def _config(self, batch_nodes: int,
+                controller: Optional[ServeAutoscaler] = None) -> ClusterConfig:
         pools: Tuple[Tuple[str, int], ...] = ((SERVE_POOL, self.servers),)
         if batch_nodes:
             pools += ((BATCH_POOL, batch_nodes),)
+        # speculation stays off in both shapes (duplicate tile serves would
+        # skew cache stats); under autoscaling the lease is the recovery
+        # path instead: a request orphaned by a drained server re-delivers
+        # after policy.lease_s of virtual time.  That short lease applies
+        # queue-wide, so a concurrent batch pool (whose scans can outlive
+        # it many times over) gets heartbeat renewal — only genuinely
+        # orphaned work is ever re-delivered, in either pool
+        lease_s = controller.policy.lease_s if controller is not None else 3600.0
+        heartbeat_s = (lease_s / 2.0
+                       if controller is not None and batch_nodes else None)
         return ClusterConfig(
             nodes=self.servers + batch_nodes, vcpus=self.vcpus,
-            virtual_time=True, lease_s=3600.0,
+            virtual_time=True, lease_s=lease_s, heartbeat_s=heartbeat_s,
             # short idle polls: a serving node parked on an empty queue
             # must not owe a request its own backoff (arrivals also wake)
             idle_poll_s=0.002, max_idle_backoff_s=0.5,
             # speculation off: duplicate tile serves would skew cache stats
             min_completions_for_speculation=10**9,
             fabric=self.fabric, zones=self.zones,
-            worker_pools=pools,
+            worker_pools=pools, controller=controller,
             # the tile cache is the cache under test; festivus block cache
             # off so hits/misses are attributable to it alone
             festivus=FestivusConfig(block_bytes=self.block_bytes,
                                     readahead_blocks=0, cache_bytes=0,
                                     max_inflight=self.max_inflight))
+
+    def _edge_filter(self, trace: Sequence[TileRequest], edge: EdgeCache):
+        """Pass the trace through the edge tier in arrival order.
+
+        Returns ``(forwarded, followers)``: the requests that missed the
+        edge (they become fleet tasks, ids matching their forwarded
+        order), and for every edge-absorbed request the ``(arrival_t,
+        nbytes, leader_id)`` triple — resolved into a latency later,
+        against the leader's simulated completion instant.  Tile sizes
+        come from the manifests alone (no chunk I/O here: the edge caches
+        responses, it never reads the pyramid).
+        """
+        fs = Festivus(self.store, meta=self.meta)
+        cs = ChunkStore(fs, self.root)
+        arrays: Dict[str, ChunkedArray] = {}
+        forwarded: List[TileRequest] = []
+        followers: List[Tuple[float, int, str]] = []
+        try:
+            for req in trace:
+                arr = arrays.get(req.array)
+                if arr is None:
+                    arr = arrays[req.array] = cs.open(req.array)
+                start, stop = tile_bounds(arr.level_shape(req.level),
+                                          self.tile_px, req.x, req.y)
+                nbytes = int(np.prod([b - a for a, b in zip(start, stop)])
+                             * np.dtype(arr.spec.dtype).itemsize)
+                key = (req.array, req.level, req.x, req.y)
+                leader = edge.get(key)
+                if leader is not None:
+                    followers.append((req.t, nbytes, leader))
+                else:
+                    leader = f"req{len(forwarded):06d}"
+                    edge.put(key, nbytes, leader)
+                    forwarded.append(req)
+        finally:
+            fs.close()
+        return forwarded, followers
 
     def run(self, trace: Sequence[TileRequest],
             batch_tasks: Optional[Dict[str, Any]] = None,
@@ -342,7 +492,12 @@ class TileFleet:
         if batch_tasks and (batch_handler is None or batch_nodes < 1):
             raise ValueError("batch_tasks needs batch_handler and "
                              "batch_nodes >= 1")
-        reqs = {f"req{i:06d}": r for i, r in enumerate(trace)}
+        edge = followers = None
+        serve_trace: Sequence[TileRequest] = trace
+        if self.edge_cache_bytes:
+            edge = EdgeCache(self.edge_cache_bytes)
+            serve_trace, followers = self._edge_filter(trace, edge)
+        reqs = {f"req{i:06d}": r for i, r in enumerate(serve_trace)}
         tasks: Dict[str, Any] = dict(reqs)
         arrivals = {tid: r.t for tid, r in reqs.items()}
         pools = {tid: SERVE_POOL for tid in reqs}
@@ -366,11 +521,17 @@ class TileFleet:
                         model=self.serving_model,
                         charge=worker.charge_compute)
                 resp = srv.serve(payload)
-                return {"hit": resp.cache_hit, "nbytes": resp.nbytes}
+                return {"hit": resp.cache_hit, "nbytes": resp.nbytes,
+                        "worker": worker.name}
             return batch_handler(worker, payload)
 
+        scaler = (ServeAutoscaler(self.autoscale,
+                                  arrivals={tid: r.t
+                                            for tid, r in reqs.items()})
+                  if self.autoscale is not None else None)
         engine = ClusterEngine(self.store, meta=self.meta,
-                               config=self._config(batch_nodes))
+                               config=self._config(batch_nodes,
+                                                   controller=scaler))
         report = engine.run(tasks, handler, arrivals=arrivals, pools=pools)
         if not report.all_done:
             raise RuntimeError(f"serving campaign incomplete: "
@@ -379,6 +540,7 @@ class TileFleet:
         latencies: List[float] = []
         samples: List[Tuple[float, float]] = []
         hits = misses = bytes_served = 0
+        first_done: Dict[str, float] = {}  # serving node -> first completion
         for tid, req in reqs.items():
             done_t = report.completion_times[tid]
             latencies.append(done_t - req.t)
@@ -387,13 +549,43 @@ class TileFleet:
             hits += bool(res["hit"])
             misses += not res["hit"]
             bytes_served += res["nbytes"]
+            first_done[res["worker"]] = min(
+                done_t, first_done.get(res["worker"], float("inf")))
+        # edge-absorbed requests: a follower of an in-flight leader rides
+        # its response (coalesced wait), a follower of a filled entry pays
+        # only the edge hit cost
+        edge_pure = edge_coal = 0
+        edge_hit_cost = self.serving_model.edge_hit_cost_s()
+        for (t, nbytes, leader) in (followers or ()):
+            resp_t = report.completion_times[leader]
+            if t < resp_t:
+                lat = (resp_t - t) + edge_hit_cost
+                edge_coal += 1
+            else:
+                lat = edge_hit_cost
+                edge_pure += 1
+            latencies.append(lat)
+            samples.append((t, lat))
+            bytes_served += nbytes
+        samples.sort(key=lambda s: s[0])
         evictions = sum(s.cache.stats.evictions for s in tile_servers.values())
         duration = max(r.t for r in trace)
-        serve_workers = report.per_worker[: self.servers]
-        batch_workers = report.per_worker[self.servers:
-                                          self.servers + batch_nodes]
+        serve_workers = [w for w in report.per_worker if w.pool == SERVE_POOL]
+        batch_workers = [w for w in report.per_worker if w.pool == BATCH_POOL]
+        serve_worker_seconds = sum(
+            (w.left_t if w.left_t is not None
+             else max(report.makespan_s, w.joined_t)) - w.joined_t
+            for w in serve_workers)
+        autoscale_report = None
+        if scaler is not None:
+            autoscale_report = scaler.report(self.servers)
+            autoscale_report.warmup_ok = all(
+                first_done.get(w.worker, float("inf"))
+                >= w.joined_t + self.autoscale.warmup_s
+                for w in serve_workers if w.joined_t > 0.0)
         return ServingReport(
-            servers=self.servers, requests=len(reqs), completed=len(latencies),
+            servers=self.servers, requests=len(trace),
+            completed=len(latencies),
             hit_rate=hits / len(reqs), cache_hits=hits, cache_misses=misses,
             cache_evictions=evictions, bytes_served=bytes_served,
             p50_s=perfmodel.percentile(latencies, 50),
@@ -401,10 +593,17 @@ class TileFleet:
             p99_s=perfmodel.percentile(latencies, 99),
             mean_s=sum(latencies) / len(latencies), max_s=max(latencies),
             trace_duration_s=duration,
-            offered_rps=len(reqs) / duration if duration > 0 else 0.0,
+            offered_rps=len(trace) / duration if duration > 0 else 0.0,
             serve_bytes_read=sum(w.store_stats.bytes_read
                                  for w in serve_workers),
             batch_tasks=sum(w.tasks_completed for w in batch_workers),
             batch_bytes_read=sum(w.store_stats.bytes_read
                                  for w in batch_workers),
-            cluster=report, samples=samples)
+            cluster=report, samples=samples,
+            forwarded=len(reqs),
+            edge_hits=edge_pure, edge_coalesced=edge_coal,
+            edge_evictions=edge.stats.evictions if edge is not None else 0,
+            edge_hit_rate=(edge_pure + edge_coal) / len(trace),
+            combined_hit_rate=1.0 - misses / len(trace),
+            serve_worker_seconds=serve_worker_seconds,
+            autoscale=autoscale_report)

@@ -40,6 +40,11 @@ class Spike:
         if self.multiplier <= 0:
             raise ValueError(f"non-positive spike multiplier {self.multiplier}")
 
+    def contains(self, t: float) -> bool:
+        """True iff `t` falls inside the spike window [t0, t1) — what the
+        serving benchmark checks autoscaler join timestamps against."""
+        return self.t0 <= t < self.t1
+
 
 def rate_at(t: float, base_rps: float, spikes: Sequence[Spike]) -> float:
     """Offered request rate at instant t (overlapping spikes compound)."""

@@ -1,0 +1,17 @@
+"""The docs-consistency check runs in tier-1 too (not only in CI): every
+docs/*.md referenced from README exists, and every src/repro/*.py module
+path named in docs/ARCHITECTURE.md imports cleanly."""
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_consistency():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, f"docs-check failed:\n{proc.stderr}"
+    assert "docs-check ok" in proc.stdout

@@ -1,6 +1,7 @@
 """Tile-serving layer: request->chunk mapping, LRU cache eviction, the
-fleet on the cluster DES (arrivals, pools, latency accounting), and the
-engine-level request-shaped-task plumbing it rides on."""
+edge tier in front of the fleet (two-level hit rate, request coalescing),
+the fleet on the cluster DES (arrivals, pools, latency accounting), and
+the engine-level request-shaped-task plumbing it rides on."""
 
 import numpy as np
 import pytest
@@ -15,6 +16,7 @@ from repro.core import (
 from repro.core import perfmodel
 from repro.launch.cluster import ClusterConfig, ClusterEngine
 from repro.serve import (
+    EdgeCache,
     Spike,
     TileCache,
     TileFleet,
@@ -167,6 +169,87 @@ def test_fleet_cache_eviction_under_pressure():
     assert rep.cache_evictions > 0
     assert rep.cache_hits + rep.cache_misses == len(reqs)
     assert rep.hit_rate < 1.0
+
+
+# ---------------------------------------------------------------------------
+# the edge tier in front of the fleet
+# ---------------------------------------------------------------------------
+def test_edge_cache_lru_and_oversize():
+    cache = EdgeCache(capacity_bytes=250)
+    cache.put(("a",), 100, "req0")
+    cache.put(("b",), 100, "req1")
+    assert cache.get(("a",)) == "req0"  # a is now most-recent
+    cache.put(("c",), 100, "req2")  # evicts LRU = b
+    assert cache.get(("b",)) is None
+    assert cache.get(("c",)) == "req2"
+    assert cache.stats.evictions == 1
+    assert cache.bytes_used == 200 and len(cache) == 2
+    # replacing an entry must not double-count its bytes
+    cache.put(("a",), 150, "req9")
+    assert cache.bytes_used == 250 and cache.get(("a",)) == "req9"
+    # an entry bigger than the whole capacity is never cached
+    cache.put(("big",), 1000, "reqX")
+    assert cache.get(("big",)) is None
+    with pytest.raises(ValueError):
+        EdgeCache(capacity_bytes=0)
+    with pytest.raises(ValueError):
+        TileFleet(InMemoryObjectStore(), MetadataStore(),
+                  edge_cache_bytes=-1)
+
+
+def test_edge_fronted_fleet_two_level_hit_rate():
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=2)
+    uni = tile_universe((128, 128, 3), 2, 32)
+    trace = zipf_spike_trace(uni, duration_s=2.0, base_rps=80.0, seed=5)
+    kw = dict(root="bucket", servers=2, tile_px=32, cache_bytes=4 * MiB)
+    plain = TileFleet(inner, meta, **kw).run(trace)
+    edged = TileFleet(*_world(hw=128, chunk=32, levels=2)[:2],
+                      edge_cache_bytes=8 * MiB, **kw).run(trace)
+    assert edged.all_served and edged.requests == len(trace)
+    # every request is accounted to exactly one tier
+    assert (edged.forwarded + edged.edge_hits + edged.edge_coalesced
+            == len(trace))
+    assert edged.completed == len(trace)
+    # the fleet saw only the forwarded subset; the queue completed exactly it
+    assert edged.cluster.queue_stats["completed"] == edged.forwarded
+    assert 0.0 < edged.edge_hit_rate < 1.0
+    # two-level: combined strictly beats the server-only tier's rate on the
+    # same trace (the edge absorbs the Zipf-hot repeats)
+    assert edged.combined_hit_rate >= plain.combined_hit_rate
+    assert edged.combined_hit_rate == 1.0 - edged.cache_misses / len(trace)
+    # absorbing hot repeats at the edge improves the latency distribution
+    assert edged.p50_s <= plain.p50_s
+    # determinism: the edge pass + DES replay identically
+    again = TileFleet(*_world(hw=128, chunk=32, levels=2)[:2],
+                      edge_cache_bytes=8 * MiB, **kw).run(trace)
+    assert again.p99_s == edged.p99_s
+    assert again.edge_hits == edged.edge_hits
+    assert again.edge_coalesced == edged.edge_coalesced
+
+
+def test_edge_coalesces_requests_onto_inflight_leader():
+    """A request for a tile whose edge fill is still in flight rides the
+    leader's response (CDN request collapsing): it never reaches the
+    fleet, and its latency is the leader's completion minus its own
+    arrival plus the edge hit cost."""
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=1)
+    model = perfmodel.TILE_SERVING_MODEL
+    trace = [
+        TileRequest(0.010, 0, 0, 0),    # leader: cold miss, ~ms service
+        TileRequest(0.0101, 0, 0, 0),   # arrives mid-flight: coalesced
+        TileRequest(1.5, 0, 0, 0),      # long after the fill: pure hit
+    ]
+    fleet = TileFleet(inner, meta, root="bucket", servers=1, tile_px=32,
+                      cache_bytes=4 * MiB, edge_cache_bytes=8 * MiB)
+    rep = fleet.run(trace)
+    assert rep.forwarded == 1
+    assert rep.edge_coalesced == 1 and rep.edge_hits == 1
+    leader_done = rep.cluster.completion_times["req000000"]
+    assert leader_done > 0.0101  # the follower really arrived mid-flight
+    samples = dict(rep.samples)
+    assert samples[0.0101] == pytest.approx(
+        (leader_done - 0.0101) + model.edge_hit_s)
+    assert samples[1.5] == pytest.approx(model.edge_hit_s)
 
 
 # ---------------------------------------------------------------------------

@@ -234,3 +234,36 @@ def test_elastic_trainer_preemption_resume():
     # no step below the last commit was lost; re-run from 10 is expected
     assert max(steps_run) == 29
     assert q.done()
+
+
+def test_pending_by_pool_tracks_every_transition():
+    """The per-pool PENDING counter (the autoscaler's backlog signal) must
+    stay exact through submit, claim, lease-expiry requeue, retry, and the
+    zombie-completion-from-PENDING corner."""
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("a0", 0, pool="a")
+    q.submit("a1", 1, pool="a")
+    q.submit("d0", 2)  # default pool
+    assert q.pending_by_pool() == {"a": 2, None: 1}
+    t = q.claim("w1", pool="a")
+    assert t.task_id == "a0"
+    assert q.pending_by_pool() == {"a": 1, None: 1}
+    # lease expires: a0 re-queued, the count comes back
+    clock.t = 11.0
+    assert q.claim("w2", pool="b") is None  # triggers the reap
+    assert q.pending_by_pool() == {"a": 2, None: 1}
+    # the zombie's late completion lands while a0 is PENDING: consumed
+    # without ever being claimed again
+    assert q.complete("a0", "w1") is True
+    assert q.pending_by_pool() == {"a": 1, None: 1}
+    # a failure retries back to PENDING
+    t = q.claim("w2", pool="a")
+    q.fail(t.task_id, "w2", "boom")
+    assert q.pending_by_pool() == {"a": 1, None: 1}
+    # and the counter always matches a fresh scan
+    scan = {}
+    for task in q._tasks.values():
+        if task.state == PENDING:
+            scan[task.pool] = scan.get(task.pool, 0) + 1
+    assert q.pending_by_pool() == scan

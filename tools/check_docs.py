@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Docs-consistency check (run by CI and `make docs-check`).
+
+Two invariants keep the docs/ site from rotting as the code grows:
+
+1. Every `docs/*.md` file referenced from README.md exists.
+2. Every `src/repro/...py` module path named in docs/ARCHITECTURE.md
+   imports cleanly (a renamed or deleted module must break the build,
+   not silently strand the walkthrough).
+
+Exits non-zero with one line per violation.  Stdlib only.
+"""
+
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: docs/<name>.md references (links or inline mentions) in README.md
+DOC_REF_RE = re.compile(r"docs/[A-Za-z0-9_\-]+\.md")
+#: src/repro/... module paths named in the architecture walkthrough
+MODULE_PATH_RE = re.compile(r"src/repro/[A-Za-z0-9_/]+\.py")
+
+
+def check_readme_doc_refs(errors: list) -> int:
+    readme = (ROOT / "README.md").read_text()
+    refs = sorted(set(DOC_REF_RE.findall(readme)))
+    if not refs:
+        errors.append("README.md references no docs/*.md at all "
+                      "(the docs site must be linked from the README)")
+    for ref in refs:
+        if not (ROOT / ref).is_file():
+            errors.append(f"README.md references {ref}, which does not exist")
+    return len(refs)
+
+
+def check_architecture_module_paths(errors: list) -> int:
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        errors.append("docs/ARCHITECTURE.md is missing")
+        return 0
+    sys.path.insert(0, str(ROOT / "src"))
+    paths = sorted(set(MODULE_PATH_RE.findall(arch.read_text())))
+    if not paths:
+        errors.append("docs/ARCHITECTURE.md names no src/repro/*.py "
+                      "defining-class pointers")
+    for path in paths:
+        if not (ROOT / path).is_file():
+            errors.append(f"docs/ARCHITECTURE.md names {path}, "
+                          f"which does not exist")
+            continue
+        module = path[len("src/"):-len(".py")].replace("/", ".")
+        try:
+            importlib.import_module(module)
+        except Exception as exc:  # noqa: BLE001 — report, don't crash
+            errors.append(f"docs/ARCHITECTURE.md names {path}, but "
+                          f"importing {module} failed: "
+                          f"{type(exc).__name__}: {exc}")
+    return len(paths)
+
+
+def main() -> int:
+    errors: list = []
+    n_refs = check_readme_doc_refs(errors)
+    n_mods = check_architecture_module_paths(errors)
+    if errors:
+        for err in errors:
+            print(f"docs-check FAIL: {err}", file=sys.stderr)
+        return 1
+    print(f"docs-check ok: {n_refs} README doc link(s) resolve, "
+          f"{n_mods} ARCHITECTURE.md module path(s) import")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
