@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench docs-check deps-optional
+.PHONY: test bench-smoke bench perf-smoke docs-check deps-optional
 
 test:  ## tier-1: full suite, fail fast
 	$(PYTHON) -m pytest -x -q
@@ -14,10 +14,16 @@ docs-check:  ## docs-consistency: README links resolve, ARCHITECTURE paths impor
 	$(PYTHON) tools/check_docs.py
 
 bench-smoke:  ## scaling curve + serving SLO + end-to-end examples
-	$(PYTHON) benchmarks/cluster_scaling.py --nodes 1,8,64,512
+	# full default sweep (1..4096 nodes): affordable now that the DES hot
+	# path is incremental — and it records wall-clock + events/sec into
+	# BENCH_cluster_scaling.json exactly like the committed record
+	$(PYTHON) benchmarks/cluster_scaling.py
 	$(PYTHON) benchmarks/serving.py --smoke --out ''
 	$(PYTHON) examples/global_composite.py
 	$(PYTHON) examples/tile_server.py
+
+perf-smoke:  ## non-blocking: 512-node DES wall-clock vs committed baseline
+	$(PYTHON) tools/perf_smoke.py
 
 bench:  ## every paper-table reproduction + kernel timings
 	$(PYTHON) -m benchmarks.run

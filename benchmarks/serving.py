@@ -227,11 +227,23 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
     trace = zipf_spike_trace(universe, duration_s, base_rps, alpha=alpha,
                              spikes=(spike,), seed=seed)
 
+    #: DES cost across every simulation this benchmark runs (each report
+    #: carries its engine's wall-clock/event accounting)
+    sim_totals = {"wall_s": 0.0, "events": 0, "runs": 0}
+
+    def serve(*args, **kwargs):
+        rep = _serve(*args, **kwargs)
+        des = rep.cluster.simulator
+        sim_totals["wall_s"] += des.get("wall_s", 0.0)
+        sim_totals["events"] += des.get("events", 0)
+        sim_totals["runs"] += 1
+        return rep
+
     rows = []
     # -- fleet-size sweep (serve-only, fixed spike profile) -----------------
     fleet_reps = {}
     for servers in fleets:
-        rep = fleet_reps[servers] = _serve(spec, trace, servers)
+        rep = fleet_reps[servers] = serve(spec, trace, servers)
         rows.append(_row(rep, servers=servers, spike_mult=spike.multiplier,
                          mixed=False, spike=spike))
     # -- spike-intensity sweep at the mid fleet -----------------------------
@@ -248,7 +260,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
             m_trace = zipf_spike_trace(universe, duration_s, base_rps,
                                        alpha=alpha, spikes=(m_spike,),
                                        seed=seed)
-            rep = _serve(spec, m_trace, mid_fleet)
+            rep = serve(spec, m_trace, mid_fleet)
         fixed_by_mult[mult] = (m_spike, m_trace, rep)
         rows.append(_row(rep, servers=mid_fleet, spike_mult=mult,
                          mixed=False, spike=m_spike))
@@ -258,7 +270,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
     auto_rows = []
     for mult in spike_mults:
         m_spike, m_trace, fixed_rep = fixed_by_mult[mult]
-        auto_rep = _serve(spec, m_trace, mid_fleet, autoscale=policy)
+        auto_rep = serve(spec, m_trace, mid_fleet, autoscale=policy)
         auto_rows.append(_autoscale_row(fixed_rep, auto_rep, mult=mult,
                                         mid_fleet=mid_fleet, spike=m_spike))
     strongest = auto_rows[spike_mults.index(max(spike_mults))]
@@ -282,8 +294,8 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
 
     # -- edge cache: the CDN tier in front of the same mid fleet ------------
     _, _, no_edge = fixed_by_mult[max(spike_mults)]
-    edge_rep = _serve(spec, trace, mid_fleet,
-                      edge_cache_bytes=spec.edge_cache_bytes)
+    edge_rep = serve(spec, trace, mid_fleet,
+                     edge_cache_bytes=spec.edge_cache_bytes)
     edge_cache = {
         "edge_cache_bytes": spec.edge_cache_bytes,
         "servers": mid_fleet,
@@ -312,9 +324,9 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
     # the serve-only baseline is the max-mult spike-sweep run (identical
     # trace, fleet, and seed — the DES is deterministic), not a re-run
     _, _, solo = fixed_by_mult[max(spike_mults)]
-    mixed = _serve(spec, trace, mid_fleet, batch_nodes=batch_nodes,
-                   batch_tasks_per_node=batch_tasks_per_node,
-                   batch_arrival_t=spike.t0)
+    mixed = serve(spec, trace, mid_fleet, batch_nodes=batch_nodes,
+                  batch_tasks_per_node=batch_tasks_per_node,
+                  batch_arrival_t=spike.t0)
     rows.append(_row(mixed, servers=mid_fleet, spike_mult=spike.multiplier,
                      mixed=True, spike=spike))
     req_done = [t for tid, t in mixed.cluster.completion_times.items()
@@ -362,6 +374,16 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "mixed_workload": mixed_workload,
         "autoscaling": autoscaling,
         "edge_cache": edge_cache,
+        # what simulating the whole benchmark cost (summed over every
+        # engine run above — the serving twin of cluster_scaling's section)
+        "simulator": {
+            "runs": sim_totals["runs"],
+            "total_wall_s": round(sim_totals["wall_s"], 3),
+            "total_events": sim_totals["events"],
+            "events_per_s": round(
+                sim_totals["events"] / sim_totals["wall_s"], 1)
+            if sim_totals["wall_s"] > 0 else None,
+        },
         "headline_p99_ms": rows[len(fleets) - 1]["p99_ms"],
     }
     if out_path:
@@ -406,6 +428,10 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
               f"(+{ec['edge_coalesced']} coalesced) -> combined "
               f"{ec['combined_hit_rate']:.1%} vs {ec['no_edge_hit_rate']:.1%}"
               f", p99 {ec['p99_ms_no_edge']} -> {ec['p99_ms_with_edge']} ms")
+        sim = result["simulator"]
+        print(f"simulator: {sim['runs']} simulations, "
+              f"{sim['total_events']} events in {sim['total_wall_s']}s "
+              f"({sim['events_per_s']} events/s)")
         if out_path:
             print(f"wrote {out_path}")
     return result

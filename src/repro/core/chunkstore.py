@@ -173,7 +173,10 @@ class ChunkedArray:
         key = self._key(idx, level)
         if not self.store.fs.exists(key):
             return np.full(shape, self.spec.fill_value, dtype=self._np_dtype)
-        raw = codec_mod.decode(self.store.fs.read(key))
+        # read_view: the codec decodes straight out of the block cache /
+        # store buffer (raw chunks: zero copies until the final owned
+        # ndarray) — same block requests and modeled service time as read()
+        raw = codec_mod.decode(self.store.fs.read_view(key))
         return np.frombuffer(raw, dtype=self._np_dtype).reshape(shape).copy()
 
     def chunk_exists(self, idx: Sequence[int]) -> bool:

@@ -54,6 +54,13 @@ class FestivusConfig:
     cache_bytes: int = 256 * perfmodel.MiB
     #: retry attempts for transient store errors
     max_retries: int = 5
+    #: fetch blocks synchronously on the caller's thread instead of through
+    #: the async engine.  The cluster DES sets this: it runs one handler at
+    #: a time, so a thread-pool round-trip per block is pure overhead there
+    #: (I/O *time* is modeled analytically from the service-time accounting,
+    #: which is identical either way) — and without pool threads the
+    #: simulation is single-threaded end to end.
+    inline_fetch: bool = False
 
 
 @dataclasses.dataclass
@@ -136,10 +143,15 @@ class Festivus:
         self._cache = _BlockCache(self.config.cache_bytes)
         #: `pool` lets many mounts share one block engine (the cluster DES
         #: runs hundreds of mounts but one task at a time — per-mount pools
-        #: would pin nodes x max_inflight idle OS threads)
-        self._owns_pool = pool is None
-        self._pool = pool if pool is not None else ThreadPoolExecutor(
-            max_workers=self.config.max_inflight, thread_name_prefix="festivus")
+        #: would pin nodes x max_inflight idle OS threads); with
+        #: `inline_fetch` there is no block engine at all
+        self._owns_pool = pool is None and not self.config.inline_fetch
+        if self.config.inline_fetch:
+            self._pool = None
+        else:
+            self._pool = pool if pool is not None else ThreadPoolExecutor(
+                max_workers=self.config.max_inflight,
+                thread_name_prefix="festivus")
         self._inflight: Dict[Tuple[str, int], Future] = {}
         # RLock: if a fetch completes before add_done_callback registers, the
         # done-callback runs synchronously on this thread while it still
@@ -188,10 +200,13 @@ class Festivus:
         self.statcache.remove(path)
 
     # -- block engine ---------------------------------------------------------
-    def _fetch_block(self, path: str, block: int, size: int) -> bytes:
+    def _fetch_block(self, path: str, block: int, size: int) -> memoryview:
+        """Fetch one aligned block as a read-only buffer view (zero-copy
+        from stores that can serve it that way); accounting (stats and,
+        under the DES, modeled service time) is identical to a bytes GET."""
         offset = block * self.config.block_bytes
         length = min(self.config.block_bytes, size - offset)
-        data = retrying(self.store.get_range, path, offset, length,
+        data = retrying(self.store.get_range_view, path, offset, length,
                         attempts=self.config.max_retries,
                         on_retry=self._count_retry)
         self._bump(blocks_fetched=1, bytes_fetched=len(data))
@@ -222,6 +237,8 @@ class Festivus:
             self._bump(cache_hits=1)
             return cached
         self._bump(cache_misses=1)
+        if self._pool is None:  # inline mode: fetch on this thread
+            return self._fetch_block(path, block, size)
         return self._block_future(path, block, size).result()
 
     def _maybe_readahead(self, path: str, last_block: int, size: int) -> None:
@@ -234,16 +251,17 @@ class Festivus:
                        min(last_block + 1 + self.config.readahead_blocks, nblocks)):
             if self._cache.get((path, b)) is None:
                 self._bump(readahead_issued=1)
-                self._block_future(path, b, size)
+                if self._pool is None:  # inline: prefetch == warm the cache
+                    self._fetch_block(path, b, size)
+                else:
+                    self._block_future(path, b, size)
 
     # -- read path -------------------------------------------------------------
-    def read(self, path: str, offset: int = 0, length: Optional[int] = None) -> bytes:
-        """Random-access read; any range, assembled from aligned blocks.
-
-        Blocks beyond the first are fetched concurrently (the async engine),
-        which is what lets a single mount saturate a node NIC (Table III's
-        1 GB/s single-node row).
-        """
+    def _gather_parts(self, path: str, offset: int,
+                      length: Optional[int]) -> List:
+        """Fetch the covering blocks of [offset, offset+length) and return
+        the in-order list of bytes-like parts (shared by :meth:`read` /
+        :meth:`read_view`; all cache and stats accounting lives here)."""
         size = int(self.stat(path)["size"])
         if length is None:
             length = size - offset
@@ -251,11 +269,12 @@ class Festivus:
             raise ValueError(f"offset {offset} out of range for {path} ({size}B)")
         length = max(0, min(length, size - offset))
         if length == 0:
-            return b""
+            return []
         bb = self.config.block_bytes
         first, last = offset // bb, (offset + length - 1) // bb
 
-        # issue all misses concurrently, then assemble in order
+        # issue all misses concurrently, then assemble in order (inline
+        # mode fetches at discovery: there is no concurrency to exploit)
         futures: Dict[int, Future] = {}
         blocks: Dict[int, bytes] = {}
         for b in range(first, last + 1):
@@ -265,7 +284,10 @@ class Festivus:
                 blocks[b] = cached
             else:
                 self._bump(cache_misses=1)
-                futures[b] = self._block_future(path, b, size)
+                if self._pool is None:
+                    blocks[b] = self._fetch_block(path, b, size)
+                else:
+                    futures[b] = self._block_future(path, b, size)
         for b, fut in futures.items():
             blocks[b] = fut.result()
 
@@ -277,7 +299,43 @@ class Festivus:
             lo = offset - b * bb if b == first else 0
             hi = offset + length - b * bb if b == last else len(data)
             parts.append(data[lo:hi])
-        return b"".join(parts)
+        return parts
+
+    def read(self, path: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        """Random-access read; any range, assembled from aligned blocks.
+
+        Blocks beyond the first are fetched concurrently (the async engine),
+        which is what lets a single mount saturate a node NIC (Table III's
+        1 GB/s single-node row).
+        """
+        return b"".join(self._gather_parts(path, offset, length))
+
+    def read_view(self, path: str, offset: int = 0,
+                  length: Optional[int] = None) -> memoryview:
+        """Zero-copy read: same block fetches, cache traffic, and (under
+        the DES) modeled service time as :meth:`read`, but the result is a
+        read-only buffer view instead of assembled bytes.
+
+        When every covering block is a view into one underlying stored
+        object (the :class:`InMemoryObjectStore` fast path), the result is
+        a single contiguous view of that object — no bytes are copied no
+        matter how many blocks the range spans.  Otherwise the parts are
+        joined once.  Scan-style handlers and the chunk decoder use this;
+        anything that wants an owned ``bytes`` keeps calling :meth:`read`.
+        """
+        parts = self._gather_parts(path, offset, length)
+        if not parts:
+            return memoryview(b"")
+        if len(parts) == 1:
+            p = parts[0]
+            return p if isinstance(p, memoryview) else memoryview(p)
+        base = parts[0].obj if isinstance(parts[0], memoryview) else None
+        if base is not None and all(
+                isinstance(p, memoryview) and p.obj is base for p in parts):
+            # all blocks slice one immutable object: the requested range is
+            # itself a contiguous slice of it (blocks are offset-aligned)
+            return memoryview(base)[offset:offset + sum(len(p) for p in parts)]
+        return memoryview(b"".join(parts))
 
     def open(self, path: str) -> "FestivusFile":
         self.stat(path)  # raises if unknown

@@ -162,6 +162,15 @@ def water_fill(demands, capacity: float):
     demand if the sum fits, otherwise the capacity is shared fairly —
     small flows are satisfied first, the rest split what remains evenly
     (the classic water-filling progression).
+
+    The fair share is computed *once*, when the water level freezes (the
+    first flow, in ascending-demand order, whose demand exceeds
+    ``remaining / left``): every unsatisfied flow is granted that same
+    float.  Mathematically this equals the per-flow ``remaining / left``
+    progression, but bit-exactly so — which matters upstream: equal
+    demands get *identical* rates, so a synchronized wave of identical
+    flows finishes at one simulated instant instead of smearing across
+    ulp-separated timestamps and triggering a reallocation cascade.
     """
     demands = list(demands)
     if not demands:
@@ -173,11 +182,17 @@ def water_fill(demands, capacity: float):
     alloc = [0.0] * len(demands)
     remaining = capacity
     left = len(demands)
+    share = None
     for i in sorted(range(len(demands)), key=demands.__getitem__):
-        grant = min(demands[i], remaining / left)
-        alloc[i] = grant
-        remaining -= grant
-        left -= 1
+        if share is None:
+            level = remaining / left
+            if demands[i] <= level:
+                alloc[i] = demands[i]
+                remaining -= demands[i]
+                left -= 1
+                continue
+            share = level  # the water level: demands only grow from here
+        alloc[i] = share
     return alloc
 
 
@@ -186,11 +201,20 @@ class SharedFabric:
 
     Each concurrently-reading mount registers a flow (its uncontended
     bandwidth demand, i.e. min of its stream parallelism and node cap);
-    :meth:`allocations` water-fills the per-zone capacity — which itself
-    depends on how many readers that zone currently has — across them.
-    The cluster DES re-queries this whenever the reader set changes, which
-    is exactly what makes the 512-node curve sub-linear *inside* the
-    simulation (Table III) instead of via a post-hoc cap.
+    the per-zone capacity — which itself depends on how many readers that
+    zone currently has — is water-filled across them.  The cluster DES
+    re-queries this whenever the reader set changes, which is exactly what
+    makes the 512-node curve sub-linear *inside* the simulation
+    (Table III) instead of via a post-hoc cap.
+
+    Water-filling is **incremental**: membership changes only mark the
+    affected zone dirty, and :meth:`reflow` re-water-fills dirty zones
+    alone, reporting exactly the flows whose granted rate changed — the
+    contract that lets the DES re-predict I/O completions for those flows
+    only instead of re-pushing every in-flight prediction.  A per-zone
+    epoch counts that zone's reallocation generations.  :meth:`allocations`
+    (a full rate dict) is kept for callers and tests that want the
+    from-scratch view; it is served from the same cache.
     """
 
     def __init__(self, model: Optional[FabricModel] = None, zones: int = 1):
@@ -200,32 +224,64 @@ class SharedFabric:
         self.zones = zones
         #: flow key -> (zone, demand bytes/s)
         self._flows: Dict[Any, Tuple[int, float]] = {}
+        #: zone -> {flow key -> demand}, insertion-ordered per zone (the
+        #: order water_fill sees, so incremental == from-scratch exactly)
+        self._zone_flows: Dict[int, Dict[Any, float]] = {}
+        #: cached granted rate per flow (valid for non-dirty zones)
+        self._rates: Dict[Any, float] = {}
+        self._dirty_zones: set = set()
+        self._zone_epochs: Dict[int, int] = {}
 
     def add_flow(self, key, zone: int, demand_bytes_per_s: float) -> None:
         if key in self._flows:
             raise ValueError(f"duplicate fabric flow {key!r}")
-        self._flows[key] = (zone % self.zones, float(demand_bytes_per_s))
+        z = zone % self.zones
+        self._flows[key] = (z, float(demand_bytes_per_s))
+        self._zone_flows.setdefault(z, {})[key] = float(demand_bytes_per_s)
+        self._dirty_zones.add(z)
 
     def remove_flow(self, key) -> None:
-        del self._flows[key]
+        z, _ = self._flows.pop(key)
+        del self._zone_flows[z][key]
+        self._rates.pop(key, None)
+        self._dirty_zones.add(z)
 
     def readers(self, zone: Optional[int] = None) -> int:
         if zone is None:
             return len(self._flows)
-        return sum(1 for z, _ in self._flows.values() if z == zone)
+        return len(self._zone_flows.get(zone, ()))
+
+    def zone_epoch(self, zone: int) -> int:
+        """How many times `zone` has been re-water-filled (diagnostic)."""
+        return self._zone_epochs.get(zone % self.zones, 0)
+
+    def _reflow_zone(self, z: int, changed: Dict[Any, float]) -> None:
+        flows = self._zone_flows.get(z, {})
+        self._zone_epochs[z] = self._zone_epochs.get(z, 0) + 1
+        if not flows:
+            return
+        cap = self.model.zone_capacity_bytes_per_s(len(flows))
+        granted = water_fill(list(flows.values()), cap)
+        for key, rate in zip(flows, granted):
+            if self._rates.get(key) != rate:
+                self._rates[key] = rate
+                changed[key] = rate
+
+    def reflow(self) -> Dict[Any, float]:
+        """Re-water-fill the zones whose membership changed since the last
+        call; returns ``{flow key: new rate}`` for exactly the flows whose
+        granted rate actually changed (a satisfied small flow that keeps
+        its full demand through a membership change is *not* reported)."""
+        changed: Dict[Any, float] = {}
+        for z in sorted(self._dirty_zones):
+            self._reflow_zone(z, changed)
+        self._dirty_zones.clear()
+        return changed
 
     def allocations(self) -> Dict[Any, float]:
         """Water-filled rate (bytes/s) for every registered flow."""
-        by_zone: Dict[int, List] = {}
-        for key, (zone, demand) in self._flows.items():
-            by_zone.setdefault(zone, []).append((key, demand))
-        rates: Dict[Any, float] = {}
-        for zone, flows in by_zone.items():
-            cap = self.model.zone_capacity_bytes_per_s(len(flows))
-            granted = water_fill([d for _, d in flows], cap)
-            for (key, _), rate in zip(flows, granted):
-                rates[key] = rate
-        return rates
+        self.reflow()
+        return dict(self._rates)
 
 
 @dataclasses.dataclass(frozen=True)

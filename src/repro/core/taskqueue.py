@@ -19,13 +19,21 @@ needs:
 
 All timing is injected (``clock``), so fault-tolerance tests run
 deterministically in virtual time.
+
+The queue is built to sit on a simulator hot path: every per-event
+operation is O(log n) or better.  State counts are maintained at each
+transition (``counts``/``done``/``pending`` never scan the task table),
+lease expiry pops a deadline-ordered heap with lazy invalidation instead
+of sweeping every task per claim, and straggler selection pops a per-pool
+running-task heap against an incrementally-maintained median — the
+coordination layer stays cheap relative to the (simulated) I/O it
+schedules.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-import statistics
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -63,6 +71,41 @@ class Task:
     pool: Optional[str] = None
 
 
+class _RunningMedian:
+    """Median of an append-only float stream: O(log n) add, O(1) median.
+
+    Two balanced heaps (classic running median); matches
+    ``statistics.median`` exactly, including the mean-of-middle-two rule
+    for even counts — the straggler threshold must not drift by a ulp
+    when the scan-based implementation is replaced."""
+
+    __slots__ = ("_lo", "_hi")
+
+    def __init__(self):
+        self._lo: List[float] = []  # max-heap (negated): lower half
+        self._hi: List[float] = []  # min-heap: upper half
+
+    def add(self, x: float) -> None:
+        if self._lo and x > -self._lo[0]:
+            heapq.heappush(self._hi, x)
+        else:
+            heapq.heappush(self._lo, -x)
+        if len(self._lo) > len(self._hi) + 1:
+            heapq.heappush(self._hi, -heapq.heappop(self._lo))
+        elif len(self._hi) > len(self._lo):
+            heapq.heappush(self._lo, -heapq.heappop(self._hi))
+
+    def __len__(self) -> int:
+        return len(self._lo) + len(self._hi)
+
+    def median(self) -> float:
+        if not self._lo:
+            raise ValueError("median of empty stream")
+        if len(self._lo) > len(self._hi):
+            return -self._lo[0]
+        return (-self._lo[0] + self._hi[0]) / 2
+
+
 class TaskQueue:
     """Worker-pull task queue with leases, retries, and speculation."""
 
@@ -84,12 +127,29 @@ class TaskQueue:
         #: an autoscaler polls this every tick, so it must not cost a
         #: full-task scan (the heaps can't be used: they hold stale entries)
         self._pending_counts: Dict[Optional[str], int] = {}
+        #: per-state totals, maintained at every transition: counts()/done()
+        #: are polled per simulated event and must not scan the task table
+        self._state_counts: Dict[str, int] = {PENDING: 0, RUNNING: 0,
+                                              DONE: 0, DEAD: 0}
+        #: (lease_deadline, seq, task_id) of RUNNING tasks; entries whose
+        #: deadline no longer matches the task are discarded lazily on pop
+        self._lease_heap: List = []
+        #: per-pool (started_at, seq, task_id) of RUNNING tasks — the
+        #: straggler candidates, oldest first; lazily invalidated like the
+        #: lease heap (a re-claim changes started_at)
+        self._running_heaps: Dict[Optional[str], List] = {}
         self._seq = 0
         self._lock = threading.RLock()
-        self._durations: List[float] = []
+        #: completed-duration median, maintained incrementally (the
+        #: straggler threshold's input; no duration list is retained)
+        self._median = _RunningMedian()
         self.stats = {"submitted": 0, "completed": 0, "retried": 0,
                       "expired": 0, "speculated": 0, "dead": 0,
                       "duplicate_completions": 0}
+
+    def _transition(self, old: str, new: str) -> None:
+        self._state_counts[old] -= 1
+        self._state_counts[new] += 1
 
     # -- producer side --------------------------------------------------------
     def submit(self, task_id: str, payload: Any, priority: int = 0,
@@ -100,6 +160,7 @@ class TaskQueue:
             task = Task(task_id=task_id, payload=payload, priority=priority,
                         max_retries=max_retries, pool=pool)
             self._tasks[task_id] = task
+            self._state_counts[PENDING] += 1
             self._push_ready(task)
             self.stats["submitted"] += 1
             return task
@@ -135,6 +196,7 @@ class TaskQueue:
                 if task.state != PENDING:
                     continue  # stale heap entry
                 self._pending_counts[task.pool] -= 1
+                self._transition(PENDING, RUNNING)
                 task.state = RUNNING
                 task.worker = worker
                 task.attempt += 1
@@ -142,6 +204,7 @@ class TaskQueue:
                 task.active_claims = 1
                 task.started_at = now
                 task.lease_deadline = now + lease
+                self._track_running(task)
                 return task
             # nothing pending: speculate on a straggler (same pool only)
             straggler = self._pick_straggler(now, exclude_worker=worker,
@@ -151,9 +214,25 @@ class TaskQueue:
                 straggler.active_claims = len(straggler.claimants)
                 straggler.lease_deadline = max(straggler.lease_deadline,
                                                now + lease)
+                self._track_lease(straggler)
                 self.stats["speculated"] += 1
                 return straggler
             return None
+
+    def _track_running(self, task: Task) -> None:
+        """Index a fresh RUNNING claim for O(log n) expiry + speculation."""
+        self._seq += 1
+        heapq.heappush(self._lease_heap,
+                       (task.lease_deadline, self._seq, task.task_id))
+        heapq.heappush(self._running_heaps.setdefault(task.pool, []),
+                       (task.started_at, self._seq, task.task_id))
+
+    def _track_lease(self, task: Task) -> None:
+        """Re-index a moved lease deadline (heartbeat, speculative claim);
+        the superseded heap entry is discarded lazily on pop."""
+        self._seq += 1
+        heapq.heappush(self._lease_heap,
+                       (task.lease_deadline, self._seq, task.task_id))
 
     def heartbeat(self, task_id: str, worker: str,
                   lease_s: Optional[float] = None) -> bool:
@@ -164,6 +243,7 @@ class TaskQueue:
                     or worker not in task.claimants:
                 return False
             task.lease_deadline = self.clock() + lease
+            self._track_lease(task)
             return True
 
     def complete(self, task_id: str, worker: str, result: Any = None) -> bool:
@@ -182,6 +262,7 @@ class TaskQueue:
                 # a zombie's completion landing after lease expiry
                 # re-queued the task: it leaves PENDING without a claim
                 self._pending_counts[task.pool] -= 1
+            self._transition(task.state, DONE)
             task.state = DONE
             task.worker = worker
             task.result = result
@@ -189,7 +270,7 @@ class TaskQueue:
             task.active_claims = 0
             task.claimants = set()
             if task.attempt > 0:  # ever claimed (started_at==0.0 is valid)
-                self._durations.append(task.completed_at - task.started_at)
+                self._median.add(task.completed_at - task.started_at)
             self.stats["completed"] += 1
             return True
 
@@ -206,53 +287,83 @@ class TaskQueue:
                 return  # a speculative twin is still running
             task.error = error
             if task.attempt > task.max_retries:
+                self._transition(RUNNING, DEAD)
                 task.state = DEAD
                 self.stats["dead"] += 1
             else:
+                self._transition(RUNNING, PENDING)
                 task.state = PENDING
                 self.stats["retried"] += 1
                 self._push_ready(task)
 
     # -- maintenance -----------------------------------------------------------
     def _reap_expired(self, now: float) -> None:
-        for task in self._tasks.values():
-            if task.state == RUNNING and now >= task.lease_deadline:
-                task.active_claims = 0
-                task.claimants.clear()
-                self.stats["expired"] += 1
-                if task.attempt > task.max_retries:
-                    task.state = DEAD
-                    task.error = "lease expired (max retries)"
-                    self.stats["dead"] += 1
-                else:
-                    task.state = PENDING
-                    self._push_ready(task)
+        """Expire overdue leases by popping the deadline heap — O(log n)
+        per expiry, O(1) when nothing is due (the per-claim fast path).
+        Entries whose deadline no longer matches the live task (heartbeat
+        extension, completion, re-claim) are discarded lazily."""
+        heap = self._lease_heap
+        while heap and heap[0][0] <= now:
+            deadline, _, tid = heapq.heappop(heap)
+            task = self._tasks.get(tid)
+            if task is None or task.state != RUNNING \
+                    or task.lease_deadline != deadline:
+                continue  # superseded entry
+            task.active_claims = 0
+            task.claimants.clear()
+            self.stats["expired"] += 1
+            if task.attempt > task.max_retries:
+                self._transition(RUNNING, DEAD)
+                task.state = DEAD
+                task.error = "lease expired (max retries)"
+                self.stats["dead"] += 1
+            else:
+                self._transition(RUNNING, PENDING)
+                task.state = PENDING
+                self._push_ready(task)
 
     def _pick_straggler(self, now: float, exclude_worker: str,
                         pool: Optional[str] = None) -> Optional[Task]:
-        if len(self._durations) < self.min_completions:
+        """Oldest singly-claimed RUNNING task of `pool` beyond the
+        speculation threshold, from the per-pool running heap (oldest
+        started_at == maximum age, so the heap top is the best candidate);
+        the median over completed durations is maintained incrementally."""
+        if len(self._median) < self.min_completions:
             return None
-        median = statistics.median(self._durations)
-        threshold = self.speculation_factor * max(median, 1e-9)
-        candidates = [t for t in self._tasks.values()
-                      if t.state == RUNNING and t.active_claims == 1
-                      and t.pool == pool
-                      and t.worker != exclude_worker
-                      and (now - t.started_at) > threshold]
-        if not candidates:
+        threshold = self.speculation_factor * max(self._median.median(), 1e-9)
+        heap = self._running_heaps.get(pool)
+        if not heap:
             return None
-        return max(candidates, key=lambda t: now - t.started_at)
+        skipped = []
+        found = None
+        while heap:
+            started_at, seq, tid = heap[0]
+            task = self._tasks.get(tid)
+            if task is None or task.state != RUNNING \
+                    or task.started_at != started_at:
+                heapq.heappop(heap)  # dead entry: drop for good
+                continue
+            if now - started_at <= threshold:
+                break  # the oldest candidate is not old enough: nobody is
+            if task.active_claims != 1 or task.worker == exclude_worker:
+                # still RUNNING, just not speculatable right now (already
+                # speculated, or it's the asker's own task): keep the entry
+                skipped.append(heapq.heappop(heap))
+                continue
+            found = task
+            break
+        for entry in skipped:
+            heapq.heappush(heap, entry)
+        return found
 
     # -- introspection ----------------------------------------------------------
     def counts(self) -> Dict[str, int]:
         with self._lock:
-            out = {PENDING: 0, RUNNING: 0, DONE: 0, DEAD: 0}
-            for t in self._tasks.values():
-                out[t.state] += 1
-            return out
+            return dict(self._state_counts)
 
     def pending(self) -> int:
-        return self.counts()[PENDING]
+        with self._lock:
+            return self._state_counts[PENDING]
 
     def pending_by_pool(self) -> Dict[Optional[str], int]:
         """PENDING depth per routing pool (None = the default shared pool).
@@ -266,8 +377,9 @@ class TaskQueue:
                     if n > 0}
 
     def done(self) -> bool:
-        c = self.counts()
-        return c[PENDING] == 0 and c[RUNNING] == 0
+        with self._lock:
+            return (self._state_counts[PENDING] == 0
+                    and self._state_counts[RUNNING] == 0)
 
     def results(self) -> Dict[str, Any]:
         with self._lock:

@@ -9,7 +9,10 @@ wrapper in ops.py:
     ssd_scan         Mamba-2 SSD chunked scan (mamba2/jamba archs)
 
 Validated in interpret=True mode on CPU (tests/test_kernels.py sweeps
-shapes and dtypes against the oracles).
+shapes and dtypes against the oracles).  Backend dispatch lives in
+backend.py: every kernel entry point defaults to ``interpret=None``,
+meaning "detect once per process" — compiled on TPU, interpreted
+elsewhere — with an explicit bool always winning.
 """
 
 from repro.kernels import ops, ref

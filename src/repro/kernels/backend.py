@@ -1,0 +1,32 @@
+"""Backend dispatch for the Pallas kernels: compiled on TPU, interpreted
+elsewhere, detected once per process.
+
+The kernel entry points (``composite_fwd``, ``grad_mag_fwd``,
+``flash_attention_fwd``, ``ssd_scan_fwd``) historically defaulted to
+``interpret=True`` unconditionally — correct everywhere, but it silently
+pays the Pallas interpreter cost on real TPU hardware (the §V.C kernels
+exist precisely to be fast there).  :func:`resolve_interpret` is the one
+place that decision lives now: ``interpret=None`` (the new default) means
+"detect the backend"; an explicit ``True``/``False`` always wins (tests
+pin ``True`` for the CPU correctness sweeps; a TPU debugging session can
+force ``True`` to use the interpreter, cf. ``pltpu.force_tpu_interpret_mode``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU (cached: backend choice
+    is fixed for the life of the process)."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Map the tri-state ``interpret`` argument to a concrete mode:
+    None -> compiled on TPU / interpreted elsewhere; bool -> as given."""
+    return (not on_tpu()) if interpret is None else interpret

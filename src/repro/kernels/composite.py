@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _composite_kernel(img_ref, w_ref, o_ref, num_scratch, den_scratch, *,
                       eps: float):
@@ -50,8 +52,13 @@ def _composite_kernel(img_ref, w_ref, o_ref, num_scratch, den_scratch, *,
 
 def composite_fwd(images: jax.Array, weights: jax.Array, *,
                   block_h: int = 8, eps: float = 1e-6,
-                  interpret: bool = True) -> jax.Array:
-    """images: [T, H, W, C]; weights: [T, H, W] -> [H, W, C]."""
+                  interpret: bool | None = None) -> jax.Array:
+    """images: [T, H, W, C]; weights: [T, H, W] -> [H, W, C].
+
+    ``interpret=None`` detects the backend once (TPU -> compiled kernel,
+    anything else -> Pallas interpreter); pass a bool to override.
+    """
+    interpret = resolve_interpret(interpret)
     T, H, W, C = images.shape
     if weights.shape != (T, H, W):
         raise ValueError(f"weights {weights.shape} != {(T, H, W)}")

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 _LANES = 128
 
@@ -91,8 +93,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch, acc_scratch,
 def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, scale: float | None = None,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = True) -> jax.Array:
-    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+                        interpret: bool | None = None) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D].
+
+    ``interpret=None`` detects the backend once (TPU -> compiled, else
+    interpreter)."""
+    interpret = resolve_interpret(interpret)
     B, Hq, Sq, D = q.shape
     _, Hkv, Sk, _ = k.shape
     if Hq % Hkv:

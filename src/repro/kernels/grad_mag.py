@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _grad_kernel(x_ref, xe_ref, xs_ref, v_ref, ve_ref, vs_ref,
                  g_ref, c_ref, gs, cs, *, eps: float):
@@ -59,12 +61,14 @@ def _grad_kernel(x_ref, xe_ref, xs_ref, v_ref, ve_ref, vs_ref,
 
 
 def grad_mag_fwd(images: jax.Array, valid: jax.Array, *, block_h: int = 8,
-                 eps: float = 1e-6, interpret: bool = True):
+                 eps: float = 1e-6, interpret: bool | None = None):
     """images: [T, H, W, C]; valid: [T, H, W] -> (grad_sum, count) [H, W].
 
     Matches kernels.ref.grad_mag exactly (same forward-difference, same
-    both-pixels-valid gating, same sqrt(.+eps)).
+    both-pixels-valid gating, same sqrt(.+eps)).  ``interpret=None``
+    detects the backend once (TPU -> compiled, else interpreter).
     """
+    interpret = resolve_interpret(interpret)
     T, H, W, C = images.shape
     if valid.shape != (T, H, W):
         raise ValueError(f"valid {valid.shape} != {(T, H, W)}")

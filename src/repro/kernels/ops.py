@@ -15,18 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backend import on_tpu as _on_tpu
+from repro.kernels.backend import resolve_interpret as _auto_interpret
 from repro.kernels.composite import composite_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.grad_mag import grad_mag_fwd
 from repro.kernels.ssd_scan import ssd_scan_fwd
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _auto_interpret(interpret):
-    return (not _on_tpu()) if interpret is None else interpret
 
 
 def _divisor_block(n: int, preferred: int) -> int:

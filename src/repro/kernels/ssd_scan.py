@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state, *,
                 chunk: int):
@@ -73,11 +75,13 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state, *,
 def ssd_scan_fwd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                  c: jax.Array, *, chunk: int = 128,
                  d_skip: jax.Array | None = None,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """x: [B,L,H,P]; dt: [B,L,H]; a: [H]; b, c: [B,L,H,N] -> y: [B,L,H,P].
 
     Semantics identical to kernels.ref.ssd_scan (sequential recurrence).
-    """
+    ``interpret=None`` detects the backend once (TPU -> compiled, else
+    interpreter)."""
+    interpret = resolve_interpret(interpret)
     B, L, H, P = x.shape
     N = b.shape[-1]
     chunk = min(chunk, L)

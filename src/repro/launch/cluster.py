@@ -30,9 +30,11 @@ Two execution modes share one worker contract:
   demand, then across *all concurrently-reading mounts* against the zone
   fabric's capacity (:class:`perfmodel.SharedFabric`, the Table III
   contention curve).  Whenever the reader set changes — a task starts or
-  finishes its I/O, a node joins or is pre-empted — every in-flight flow's
-  rate is recomputed, so per-node bandwidth degrades *inside* the
-  simulation exactly as the paper measured, with no post-hoc cap.
+  finishes its I/O, a node joins or is pre-empted — the affected zone is
+  re-water-filled *incrementally* and exactly the flows whose granted rate
+  changed get fresh I/O-completion predictions, so per-node bandwidth
+  degrades *inside* the simulation exactly as the paper measured, with no
+  post-hoc cap and no O(flows) work per reader-set change.
   Metadata-KV ops (stat/sync_metadata against the shared Redis-role store)
   and virtual compute (:meth:`Worker.charge_compute`) are charged to the
   worker clock after the I/O phase.  Handler side effects apply eagerly
@@ -72,7 +74,6 @@ import dataclasses
 import heapq
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import perfmodel
@@ -116,6 +117,17 @@ class MountStore(ObjectStore):
 
     def get_range(self, key, offset, length):
         data = self.inner.get_range(key, offset, length)
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+            self._account(len(data))
+        return data
+
+    def get_range_view(self, key, offset, length):
+        # the zero-copy fast path festivus block fetches take; accounted
+        # identically to get_range (same request count, bytes, and modeled
+        # service time — only the memcpy is gone)
+        data = self.inner.get_range_view(key, offset, length)
         with self._lock:
             self.stats.gets += 1
             self.stats.bytes_read += len(data)
@@ -310,13 +322,22 @@ class FleetController:
 
 class _Flow:
     """One task's in-flight I/O phase: bytes draining at a fabric-granted
-    rate, followed by a fixed tail (metadata round-trips + compute)."""
+    rate, followed by a fixed tail (metadata round-trips + compute).
+
+    ``bytes_left`` is lazily accounted: it is exact as of ``updated_at``
+    and drains at ``rate`` since then, so a reallocation that does not
+    change this flow's rate touches nothing — the flow's outstanding
+    ``_IO_DONE`` prediction stays valid.  ``epoch`` is the engine-unique
+    token stamped on that prediction (a fresh token per push, so a stale
+    prediction can never collide with a later flow on the same worker);
+    ``has_pred`` says whether a live prediction is in the heap (the
+    lazy-deletion accounting behind heap compaction)."""
 
     __slots__ = ("task", "result", "error", "bytes_left", "demand",
-                 "tail_s", "rate", "epoch")
+                 "tail_s", "rate", "epoch", "updated_at", "has_pred")
 
     def __init__(self, task, result, error, bytes_left: float,
-                 demand: float, tail_s: float):
+                 demand: float, tail_s: float, now: float):
         self.task = task
         self.result = result
         self.error = error
@@ -325,6 +346,8 @@ class _Flow:
         self.tail_s = tail_s
         self.rate = 0.0
         self.epoch = 0
+        self.updated_at = now
+        self.has_pred = False
 
 
 class Worker:
@@ -369,6 +392,8 @@ class Worker:
         #: backoff-poll chain event is dropped instead of forking a second
         #: poll chain (same stale-event pattern as _Flow.epoch)
         self._dispatch_epoch = 0
+        #: True while counted in the engine's warming-by-pool view counter
+        self._view_warming = False
         self._pending_compute_s = 0.0
         #: the task id currently being executed (heartbeat chain target)
         self._current: Optional[str] = None
@@ -492,6 +517,14 @@ class ClusterReport:
     #: offsets in thread mode).  With run()'s `arrivals` this is what a
     #: serving tier turns into per-request latency.
     completion_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: DES cost accounting (virtual-time runs only): wall_s (real seconds
+    #: the event loop took), events (events processed), events_per_s,
+    #: io_pushes (_IO_DONE predictions pushed), reflows (fabric
+    #: water-filling passes), heap_peak (max event-heap length),
+    #: stale_peak (max superseded predictions resident in the heap) and
+    #: heap_compactions — the "how much did simulating this cost" figures
+    #: the scaling benchmark reports per sweep point.
+    simulator: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def all_done(self) -> bool:
@@ -537,24 +570,22 @@ class ClusterEngine:
         #: everything the fleet writes (and vice versa)
         self.meta = meta if meta is not None else MetadataStore()
         fest_cfg = self.config.festivus or FestivusConfig()
-        if self.config.virtual_time and fest_cfg.readahead_blocks:
+        if self.config.virtual_time:
             # readahead pool threads would accrue service time asynchronously
             # across task boundaries, making the DES nondeterministic; its
             # latency-hiding effect is already modeled by water-filling the
-            # drained service time over the mount's in-flight streams
-            fest_cfg = dataclasses.replace(fest_cfg, readahead_blocks=0)
+            # drained service time over the mount's in-flight streams.
+            # inline_fetch: the DES runs one handler at a time, so a
+            # thread-pool round-trip per block fetch is pure overhead —
+            # blocks are fetched synchronously (as zero-copy views) and the
+            # whole simulation stays on one thread
+            fest_cfg = dataclasses.replace(fest_cfg, readahead_blocks=0,
+                                           inline_fetch=True)
         self._fest_cfg = fest_cfg
         self._store_model = (self.config.store_model
                              if self.config.virtual_time else None)
         self._meta_latency = (self.config.meta_op_latency_s
                               if self.config.virtual_time else 0.0)
-        # the DES runs one handler at a time, so all mounts can share one
-        # block-engine pool; per-mount pools would pin nodes x max_inflight
-        # idle OS threads at 512 simulated nodes
-        self._shared_pool = (
-            ThreadPoolExecutor(max_workers=fest_cfg.max_inflight,
-                               thread_name_prefix="cluster-io")
-            if self.config.virtual_time else None)
         if self.config.worker_pools is not None:
             total = sum(n for _, n in self.config.worker_pools)
             if total != self.config.nodes:
@@ -570,6 +601,8 @@ class ClusterEngine:
         self._node_cap = perfmodel.node_cap_bytes_per_s(self.config.vcpus)
         self._joined = 0
         self._left = 0
+        #: DES cost diagnostics, filled by _run_virtual (empty under threads)
+        self._sim: Dict[str, Any] = {}
 
     def _pool_of(self, index: int) -> Optional[str]:
         """Pool membership by worker index (elastic joiners beyond the
@@ -593,8 +626,7 @@ class ClusterEngine:
         shared pool)."""
         mount = MountStore(self.inner, model=self._store_model)
         mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
-        fs = Festivus(mount, meta=mmeta, config=self._fest_cfg,
-                      pool=self._shared_pool)
+        fs = Festivus(mount, meta=mmeta, config=self._fest_cfg)
         return Worker(index, mount, fs, perfmodel.WorkerClock(),
                       zone=index % self.config.zones, meta=mmeta,
                       pool=(pool_override if pool_override is not None
@@ -658,7 +690,12 @@ class ClusterEngine:
                              pool=pools.get(task_id))
         try:
             if self.config.virtual_time:
+                t0 = time.perf_counter()
                 makespan = self._run_virtual(queue, handler, deferred)
+                wall = time.perf_counter() - t0
+                self._sim["wall_s"] = wall
+                self._sim["events_per_s"] = (self._sim["events"] / wall
+                                             if wall > 0 else 0.0)
             else:
                 makespan = self._run_threads(queue, handler)
         finally:
@@ -668,8 +705,6 @@ class ClusterEngine:
     def close(self) -> None:
         for w in self.workers:
             w.fs.close()
-        if self._shared_pool is not None:
-            self._shared_pool.shutdown(wait=True)
 
     # -- shared plumbing ------------------------------------------------------
     def _make_queue(self) -> TaskQueue:
@@ -739,20 +774,32 @@ class ClusterEngine:
             t.join()
         return time.monotonic() - t0
 
+    def _promote_ready(self) -> None:
+        """Move joiners whose warm-up elapsed from the warming to the
+        active counter (lazily, off a ready-time heap): controller ticks
+        read maintained per-pool counts instead of scanning the fleet."""
+        heap = self._warming_heap
+        while heap and heap[0][0] <= self._now:
+            _, widx = heapq.heappop(heap)
+            w = self.workers[widx]
+            if w.active and w._view_warming:
+                w._view_warming = False
+                self._pool_warming[w.pool] -= 1
+                self._pool_active[w.pool] = \
+                    self._pool_active.get(w.pool, 0) + 1
+
     def _fleet_view(self, queue: TaskQueue) -> FleetView:
-        """Snapshot the campaign for a FleetController tick."""
-        active: Dict[Optional[str], int] = {}
-        warming: Dict[Optional[str], int] = {}
-        for w in self.workers:
-            if not w.active:
-                continue
-            bucket = warming if self._now < w.ready_t else active
-            bucket[w.pool] = bucket.get(w.pool, 0) + 1
-        return FleetView(now=self._now,
-                         pending_by_pool=queue.pending_by_pool(),
-                         completion_times=self._completions,
-                         completion_log=self._completion_log,
-                         active_by_pool=active, warming_by_pool=warming)
+        """Snapshot the campaign for a FleetController tick (O(pools), not
+        O(workers): the active/warming counts are event-maintained)."""
+        self._promote_ready()
+        return FleetView(
+            now=self._now, pending_by_pool=queue.pending_by_pool(),
+            completion_times=self._completions,
+            completion_log=self._completion_log,
+            active_by_pool={p: n for p, n in self._pool_active.items()
+                            if n > 0},
+            warming_by_pool={p: n for p, n in self._pool_warming.items()
+                             if n > 0})
 
     # -- virtual-time mode: deterministic discrete-event simulation -----------
     def _run_virtual(self, queue: TaskQueue, handler: Handler,
@@ -760,12 +807,26 @@ class ClusterEngine:
         """Global event loop: dispatch, fabric-contended I/O flows, elastic
         join/leave, timed request arrivals.
 
-        The fabric is reallocated lazily: membership changes (flow start,
-        flow end, pre-emption) mark it dirty, and one water-filling pass
-        runs when simulated time is about to advance — so a 512-node wave
-        starting at the same instant costs one reallocation, not 512.
-        Every reallocation bumps each flow's epoch and pushes a fresh
-        predicted ``_IO_DONE``; stale predictions are dropped by epoch.
+        The hot path is indexed so event cost stays O(log n), not
+        O(workers) or O(flows):
+
+        * The fabric is reallocated lazily *and incrementally*: membership
+          changes mark only the affected zone dirty, one water-filling
+          pass runs when simulated time is about to advance (a 512-node
+          wave starting at the same instant costs one reallocation, not
+          512), and :meth:`perfmodel.SharedFabric.reflow` reports exactly
+          the flows whose granted rate changed — only those get their
+          ``_IO_DONE`` prediction invalidated and re-pushed.  A flow's
+          ``bytes_left`` is accounted lazily (exact as of its own
+          ``updated_at``), so untouched flows are literally untouched.
+        * Prediction tokens (``_Flow.epoch``) are engine-unique, so a
+          superseded prediction can never collide with a later flow on the
+          same worker.  Superseded predictions are counted and, past a
+          bound, compacted out of the heap — heap size stays O(live flows
+          + timers) no matter how churn-heavy the run.
+        * Arrival wake-ups consult a per-pool idle-worker index instead of
+          scanning the fleet; queue drain checks (``queue.done()``) are
+          counter-based in :class:`TaskQueue`.
         """
         heap: List = []
         seq = 0
@@ -775,30 +836,75 @@ class ClusterEngine:
                                          zones=self.config.zones)
                   if self.config.fabric is not None else None)
         dirty = False
-        last_alloc = 0.0
+        pred_seq = 0     # engine-unique _IO_DONE tokens (never reused)
+        stale_io = 0     # superseded predictions still resident in the heap
+        io_pushes = 0
+        reflows = 0
+        heap_peak = 0
+        stale_peak = 0
+        compactions = 0
+        #: per-pool index of idle workers (active, past warm-up, polling an
+        #: empty queue) — what an arrival wake-up touches instead of
+        #: scanning self.workers
+        self._idle_by_pool: Dict[Optional[str], set] = {}
+        #: per-pool active/warming counters for FleetView (plus the
+        #: ready-time heap that promotes warming -> active lazily)
+        self._pool_active: Dict[Optional[str], int] = {}
+        self._pool_warming: Dict[Optional[str], int] = {}
+        self._warming_heap: List[Tuple[float, int]] = []
+        for w in self.workers:
+            self._pool_active[w.pool] = self._pool_active.get(w.pool, 0) + 1
 
         def push(t: float, kind: int, widx: int, data=None):
-            nonlocal seq
+            nonlocal seq, heap_peak
             seq += 1
             heapq.heappush(heap, (t, seq, kind, widx, data))
+            if len(heap) > heap_peak:
+                heap_peak = len(heap)
 
         def reallocate():
-            """Advance every flow to now at its old rate, then water-fill
-            the new rates and re-predict each flow's I/O completion."""
-            nonlocal dirty, last_alloc
-            dt = self._now - last_alloc
-            if dt > 0:
-                for fl in flows.values():
+            """Incremental water-filling: reflow only the dirty zones and
+            re-predict I/O completion only for flows whose rate changed."""
+            nonlocal dirty, pred_seq, stale_io, io_pushes, reflows, stale_peak
+            reflows += 1
+            for widx, rate in fabric.reflow().items():
+                fl = flows[widx]
+                dt = self._now - fl.updated_at
+                if dt > 0:
                     fl.bytes_left = max(0.0, fl.bytes_left - fl.rate * dt)
-            last_alloc = self._now
-            rates = fabric.allocations()
-            for widx, fl in flows.items():
-                fl.rate = rates[widx]
-                fl.epoch += 1
-                if fl.rate > 0:
-                    push(self._now + fl.bytes_left / fl.rate, _IO_DONE,
+                fl.updated_at = self._now
+                fl.rate = rate
+                if fl.has_pred:
+                    stale_io += 1  # the outstanding prediction just died
+                    if stale_io > stale_peak:
+                        stale_peak = stale_io
+                pred_seq += 1
+                fl.epoch = pred_seq
+                if rate > 0:
+                    push(self._now + fl.bytes_left / rate, _IO_DONE,
                          widx, fl.epoch)
+                    io_pushes += 1
+                    fl.has_pred = True
+                else:
+                    fl.has_pred = False
             dirty = False
+
+        def compact():
+            """Drop superseded _IO_DONE entries once they outnumber the
+            live event population (lazy deletion with a bound: the fix for
+            the stale-prediction heap leak)."""
+            nonlocal stale_io, compactions
+
+            def live(e):
+                if e[2] != _IO_DONE:
+                    return True
+                fl = flows.get(e[3])
+                return fl is not None and fl.epoch == e[4]
+
+            heap[:] = [e for e in heap if live(e)]
+            heapq.heapify(heap)
+            stale_io = 0
+            compactions += 1
 
         for ev in (self.config.elastic.events if self.config.elastic else ()):
             push(ev.t, _JOIN if ev.delta > 0 else _LEAVE, -1, ev)
@@ -819,6 +925,8 @@ class ClusterEngine:
             if dirty and (not heap or heap[0][0] > self._now):
                 reallocate()
                 continue
+            if stale_io > 64 and stale_io > len(flows) + len(self.workers):
+                compact()
             events += 1
             if events > 2_000_000:
                 raise RuntimeError(
@@ -835,22 +943,24 @@ class ClusterEngine:
                 pending_arrivals -= 1
                 # wake idle workers of this pool (the request-socket model:
                 # a server parked on an empty queue reacts immediately, not
-                # after its exponential idle backoff elapses)
-                for w in self.workers:
-                    # a warming joiner (now < ready_t) keeps its scheduled
-                    # ready-time dispatch instead — capacity the autoscaler
-                    # added must not take traffic before its warm-up ends
-                    if (w.active and not w._inflight and w.pool == pool
-                            and self._now >= w.ready_t):
+                # after its exponential idle backoff elapses).  The idle
+                # index holds only active, post-warm-up workers — a warming
+                # joiner is not in it yet (its first dispatch fires at
+                # ready_t), so autoscaler-added capacity still cannot take
+                # traffic before its warm-up ends.  sorted(): worker-index
+                # order, as the fleet scan this replaces produced.
+                idle = self._idle_by_pool.get(pool)
+                if idle:
+                    for w_idx in sorted(idle):
+                        w = self.workers[w_idx]
                         w._idle_backoff = 0.0
                         w._dispatch_epoch += 1  # supersede the backoff poll
-                        push(self._now, _DISPATCH, w.index, w._dispatch_epoch)
+                        push(self._now, _DISPATCH, w_idx, w._dispatch_epoch)
                 continue
 
             if kind == _CONTROL:
                 # ordered cheapest-first: pending_arrivals/busy are plain
-                # counters and non-zero for nearly every tick of a live
-                # campaign, so the O(tasks) done() scan almost never runs
+                # counters (and queue.done() is itself counter-based now)
                 if pending_arrivals == 0 and busy == 0 and queue.done():
                     continue  # campaign drained: let the tick chain die
                 for ev in (controller.tick(self._now,
@@ -869,11 +979,21 @@ class ClusterEngine:
                     w.ready_t = self._now + ev.warmup_s
                     self.workers.append(w)
                     self._joined += 1
+                    if self._now < w.ready_t:
+                        w._view_warming = True
+                        self._pool_warming[w.pool] = \
+                            self._pool_warming.get(w.pool, 0) + 1
+                        heapq.heappush(self._warming_heap,
+                                       (w.ready_t, w.index))
+                    else:
+                        self._pool_active[w.pool] = \
+                            self._pool_active.get(w.pool, 0) + 1
                     push(w.ready_t, _DISPATCH, w.index)
                 continue
 
             if kind == _LEAVE:
                 ev = data
+                self._promote_ready()  # settle warming/active at this instant
                 candidates = [w for w in self.workers if w.active
                               and (ev.pool is None or w.pool == ev.pool)]
                 if ev.prefer_idle:
@@ -907,10 +1027,22 @@ class ClusterEngine:
                     w.active = False
                     w.left_t = self._now
                     self._left += 1
+                    if w._view_warming:
+                        w._view_warming = False
+                        self._pool_warming[w.pool] -= 1
+                    else:
+                        self._pool_active[w.pool] -= 1
+                    idle = self._idle_by_pool.get(w.pool)
+                    if idle:
+                        idle.discard(w.index)
                     fl = flows.pop(w.index, None)
                     if fl is not None:
                         fabric.remove_flow(w.index)
                         dirty = True
+                        if fl.has_pred:
+                            stale_io += 1  # its prediction is now orphaned
+                            if stale_io > stale_peak:
+                                stale_peak = stale_io
                     if w._inflight:
                         # vanish without fail(): the claimed task stays
                         # RUNNING until its lease expires or a surviving
@@ -934,7 +1066,8 @@ class ClusterEngine:
             if kind == _IO_DONE:
                 fl = flows.get(widx)
                 if fl is None or fl.epoch != data:
-                    continue  # superseded by a newer allocation
+                    stale_io -= 1  # a superseded prediction left the heap
+                    continue
                 flows.pop(widx)
                 fabric.remove_flow(widx)
                 dirty = True  # departing reader frees bandwidth for the rest
@@ -973,14 +1106,20 @@ class ClusterEngine:
             task = queue.claim(worker.name, lease_s=self.config.lease_s,
                                pool=worker.pool)
             if task is None:
+                idle = self._idle_by_pool.setdefault(worker.pool, set())
                 if queue.done() and busy == 0 and pending_arrivals == 0:
+                    idle.discard(widx)
                     continue  # retire this worker (no reschedule)
+                idle.add(widx)  # an arrival can short-circuit the backoff
                 worker._idle_backoff = min(
                     max(worker._idle_backoff * 2, self.config.idle_poll_s),
                     self.config.max_idle_backoff_s)
                 push(self._now + worker._idle_backoff, _DISPATCH, worker.index,
                      worker._dispatch_epoch)
                 continue
+            idle = self._idle_by_pool.get(worker.pool)
+            if idle:
+                idle.discard(widx)
             worker._idle_backoff = 0.0
             worker._current = task.task_id
             worker._inflight = True
@@ -996,13 +1135,19 @@ class ClusterEngine:
                      widx, task.task_id)
             if fabric is not None and nbytes > 0 and io_s > 0:
                 fl = _Flow(task, result, error, bytes_left=float(nbytes),
-                           demand=nbytes / io_s, tail_s=tail_s)
+                           demand=nbytes / io_s, tail_s=tail_s,
+                           now=self._now)
                 flows[widx] = fl
                 fabric.add_flow(widx, worker.zone, fl.demand)
                 dirty = True
             else:
                 push(self._now + io_s + tail_s, _FINISH, widx,
                      (task, result, error))
+        self._sim = {
+            "events": events, "io_pushes": io_pushes, "reflows": reflows,
+            "heap_peak": heap_peak, "stale_peak": stale_peak,
+            "heap_compactions": compactions,
+        }
         return makespan
 
     # -- gather ----------------------------------------------------------------
@@ -1033,7 +1178,8 @@ class ClusterEngine:
             results=queue.results(), per_worker=per_worker,
             meta_ops=sum(r.meta_ops for r in per_worker),
             joined=self._joined, left=self._left,
-            completion_times=queue.completion_times())
+            completion_times=queue.completion_times(),
+            simulator=dict(self._sim))
 
 
 def scatter_gather(store: ObjectStore, tasks: Dict[str, Any], handler: Handler,

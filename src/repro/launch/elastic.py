@@ -20,6 +20,10 @@ The *simulated* counterpart lives in :mod:`repro.launch.cluster`
 join/leave timetable — or an SLO autoscaler extending it mid-run
 (:mod:`repro.serve.autoscale`) — drives virtual-time workers through the
 same lease-expiry handoff this trainer relies on for real pre-emption.
+Both sides lean on the queue's indexed hot path: lease expiry is a
+deadline-heap pop and ``done()`` a counter read, so a trainer (or a
+thousand simulated workers) polling between ranges costs O(log n), not a
+task-table scan per claim.
 """
 
 from __future__ import annotations

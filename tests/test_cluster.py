@@ -426,3 +426,103 @@ def test_shrink_only_fleet_still_completes():
     assert report.all_done
     assert report.left == 3
     assert report.queue_stats["completed"] == report.tasks
+
+
+# ---------------------------------------------------------------------------
+# hot-path refactor guards: pinned aggregates, determinism, heap bounds
+# ---------------------------------------------------------------------------
+def _table_iii_64_report():
+    """The scaling benchmark's 64-node sweep point, replicated exactly
+    (benchmarks/cluster_scaling.py defaults: 8 MiB tasks, 4 MiB blocks,
+    2 tasks/node, 64 MiB bucket)."""
+    task_bytes = 8 * MiB
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("bucket/scan", b"\x5a" * (8 * task_bytes))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=64, vcpus=16, virtual_time=True, lease_s=3600.0,
+        fabric=perfmodel.FABRIC_MODEL,
+        festivus=FestivusConfig(block_bytes=4 * MiB, readahead_blocks=0,
+                                cache_bytes=0, max_inflight=2)))
+
+    def handler(worker, offset):
+        return len(worker.fs.read_view("bucket/scan", offset, task_bytes))
+
+    tasks = {f"scan{i}": (i % 8) * task_bytes for i in range(64 * 2)}
+    return engine.run(tasks, handler)
+
+
+def test_64_node_aggregates_pinned_across_engine_refactors():
+    """Behavior-preservation pin: the 64-node Table III sweep point must
+    keep the aggregates measured on the pre-incremental-reflow engine
+    (same seed/params -> same simulation).  Integer aggregates are exact;
+    the makespan is pinned to the pre-refactor float (1e-9 relative
+    headroom for ulp-level arithmetic reassociation only)."""
+    report = _table_iii_64_report()
+    assert report.all_done
+    assert report.tasks == 128
+    assert report.bytes_read == 128 * 8 * MiB == 1073741824
+    assert report.bytes_written == 0
+    assert report.meta_ops == 128
+    assert report.queue_stats["completed"] == 128
+    assert report.queue_stats["expired"] == 0
+    assert report.queue_stats["speculated"] == 0
+    # measured on the pre-refactor engine (PR 5), virtual seconds
+    assert report.makespan_s == pytest.approx(0.029659664573002766, rel=1e-9)
+    # and the Table III row itself stays within the paper tolerance
+    assert report.read_bandwidth_bytes_per_s == pytest.approx(36.3e9,
+                                                              rel=0.005)
+
+
+def test_virtual_engine_is_deterministic_run_to_run():
+    """Same inputs -> bit-identical simulation, including the makespan and
+    every completion timestamp (the DES has no hidden real-time state)."""
+    a = _table_iii_64_report()
+    b = _table_iii_64_report()
+    assert a.makespan_s == b.makespan_s
+    assert a.completion_times == b.completion_times
+    assert a.simulator["events"] == b.simulator["events"]
+    assert a.simulator["io_pushes"] == b.simulator["io_pushes"]
+
+
+def test_simulator_diagnostics_reported():
+    report, _ = _heavy_scan(4, tasks_per_node=2)
+    sim = report.simulator
+    assert sim["events"] > 0 and sim["wall_s"] > 0
+    assert sim["events_per_s"] > 0
+    assert sim["io_pushes"] >= 0 and sim["reflows"] >= 1
+    # thread mode has no event loop: no simulator section
+    engine = ClusterEngine(InMemoryObjectStore(),
+                           config=ClusterConfig(nodes=2))
+    rep = engine.run({"t0": 0, "t1": 1}, lambda w, p: p)
+    assert rep.simulator == {}
+
+
+def test_event_heap_stays_bounded_on_churn_heavy_elastic_run():
+    """The stale-prediction fix: superseded _IO_DONE entries are counted
+    and compacted, so the event heap stays O(live flows + timers) — not
+    O(all predictions ever made) — through a churn-heavy campaign with
+    repeated joins, leaves, lease expiries, and speculation."""
+    static, _ = _heavy_scan(8, tasks_per_node=6)
+    ms = static.makespan_s
+    schedule = ElasticSchedule(tuple(
+        [ElasticEvent(ms * f, -2) for f in (0.15, 0.45, 0.7)]
+        + [ElasticEvent(ms * f, +2) for f in (0.3, 0.6, 0.85)]))
+    churn, _ = _heavy_scan(8, tasks_per_node=6, elastic=schedule,
+                           lease_s=0.6 * ms, spec=5)
+    assert churn.all_done
+    assert churn.left == 6 and churn.joined == 6
+    sim = churn.simulator
+    workers = len(churn.per_worker)
+    # live flows <= workers; timers (polls, heartbeats, elastic events,
+    # finish tails) are O(workers + schedule): 4x workers + schedule + a
+    # small constant is a generous O(live) envelope, and far below the
+    # O(events) growth a leak would produce
+    bound = 4 * workers + len(schedule.events) + 16
+    assert sim["heap_peak"] <= bound, sim
+    assert sim["heap_peak"] < sim["events"]
+    # superseded predictions never exceed the compaction threshold
+    assert sim["stale_peak"] <= 64 + workers + len(schedule.events), sim

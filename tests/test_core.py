@@ -91,6 +91,70 @@ def test_festivus_read_equals_written(size, offset, length, block):
     assert fs.read("obj", offset, length) == data[offset:offset + length]
 
 
+@pytest.mark.parametrize("size,offset,length,block", [
+    (1, 0, 1, 64),
+    (5000, 0, 5000, 256),
+    (4097, 1023, 2050, 1024),
+    (300, 295, 100, 256),
+    (2048, 2048, 10, 1024),
+    (777, 0, 0, 64),
+])
+def test_festivus_read_view_equals_read(size, offset, length, block):
+    """read_view returns the same bytes as read, for any range shape."""
+    store = InMemoryObjectStore()
+    fs = Festivus(store, config=FestivusConfig(block_bytes=block,
+                                               readahead_blocks=0))
+    data = bytes(i % 251 for i in range(size))
+    fs.write("obj", data)
+    offset = min(offset, size)
+    view = fs.read_view("obj", offset, length)
+    assert isinstance(view, memoryview)
+    assert bytes(view) == data[offset:offset + length]
+
+
+def test_festivus_read_view_is_zero_copy_and_accounted_like_read():
+    """On an in-memory store a multi-block read_view is a single view of
+    the stored object (no byte is copied), and its block/stat accounting
+    is identical to read()'s — the DES models both the same."""
+    store = InMemoryObjectStore()
+    fs = Festivus(store, config=FestivusConfig(block_bytes=1024,
+                                               readahead_blocks=0,
+                                               cache_bytes=0))
+    data = bytes(i % 251 for i in range(8192))
+    fs.write("obj", data)
+    view = fs.read_view("obj", 1024, 4096)  # spans 4 blocks
+    assert bytes(view) == data[1024:5120]
+    # zero-copy: the view's base buffer IS the stored object
+    assert view.obj is store._objects["obj"]
+    stats_after_view = (fs.stats.cache_misses, fs.stats.blocks_fetched,
+                        store.stats.gets)
+    fs2 = Festivus(InMemoryObjectStore(), config=fs.config)
+    fs2.write("obj", data)
+    fs2.read("obj", 1024, 4096)
+    assert (fs2.stats.cache_misses, fs2.stats.blocks_fetched,
+            fs2.store.stats.gets - 1) == (stats_after_view[0],
+                                          stats_after_view[1],
+                                          stats_after_view[2] - 1)
+
+
+def test_festivus_inline_fetch_mode_reads_without_pool():
+    """inline_fetch=True (the cluster DES setting): no block-engine pool
+    exists, reads and readahead fetch on the caller's thread, results and
+    stats match the async engine's."""
+    store = InMemoryObjectStore()
+    fs = Festivus(store, config=FestivusConfig(block_bytes=512,
+                                               readahead_blocks=2,
+                                               inline_fetch=True))
+    assert fs._pool is None
+    data = bytes(i % 199 for i in range(4096))
+    fs.write("obj", data)
+    assert fs.read("obj", 0, 512) == data[:512]
+    fs.read("obj", 512, 512)   # sequential: readahead fires inline
+    assert fs.stats.readahead_issued > 0
+    assert bytes(fs.read_view("obj", 100, 700)) == data[100:800]
+    fs.close()  # no pool to shut down; must be a no-op
+
+
 def test_festivus_metadata_never_hits_store(fs, store):
     fs.write("a/file", b"x" * 100)
     heads_before = store.stats.heads

@@ -8,13 +8,38 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import backend, ops, ref
 from repro.kernels.composite import composite_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.grad_mag import grad_mag_fwd
 from repro.kernels.ssd_scan import ssd_scan_fwd
 
 KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch (kernels/backend.py)
+# ---------------------------------------------------------------------------
+def test_interpret_default_detects_backend_once():
+    """interpret=None resolves per the detected backend (interpreted off
+    TPU, compiled on it); an explicit bool always wins."""
+    expected_auto = not backend.on_tpu()
+    assert backend.resolve_interpret(None) is expected_auto
+    assert backend.resolve_interpret(True) is True
+    assert backend.resolve_interpret(False) is False
+    # detection is cached: same answer, no re-probe
+    assert backend.on_tpu() is backend.on_tpu()
+
+
+def test_kernel_entry_points_run_with_auto_interpret():
+    """The raw kernel entry points must work with the new interpret=None
+    default (off-TPU this takes the interpreter path) and match the
+    explicit interpret=True result exactly."""
+    imgs = jax.random.uniform(KEY, (3, 8, 16, 2), jnp.float32)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (3, 8, 16), jnp.float32)
+    auto = composite_fwd(imgs, w)
+    pinned = composite_fwd(imgs, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(pinned))
 
 
 def tol(dtype):

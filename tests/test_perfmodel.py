@@ -178,6 +178,87 @@ def test_water_fill_max_min_no_flow_gains_without_smaller_losing():
             assert all(b <= share + 1e-9 for b in alloc)
 
 
+def _scratch_allocations(fabric):
+    """From-scratch reference for the incremental fabric: water-fill each
+    zone's current flows in per-zone insertion order."""
+    rates = {}
+    for flows in fabric._zone_flows.values():
+        granted = pm.water_fill(
+            list(flows.values()),
+            fabric.model.zone_capacity_bytes_per_s(len(flows)))
+        for key, rate in zip(flows, granted):
+            rates[key] = rate
+    return rates
+
+
+def test_incremental_fabric_matches_from_scratch_after_any_sequence():
+    """The deterministic face of the hypothesis property in
+    tests/test_properties.py: incremental add/remove + reflow must equal a
+    from-scratch water_fill exactly (==), over a churny scripted sequence
+    that crosses the contention onset in both directions."""
+    fabric = pm.SharedFabric(zones=2)
+    key = 0
+    live = []
+    rng_demands = [0.6e9, 1.1e9, 2.0e9, 0.3e9, 1.13e9]
+    for step in range(120):
+        if step % 5 == 4 and live:  # periodic removals, oldest first
+            fabric.remove_flow(live.pop(0))
+        else:
+            fabric.add_flow(key, key % 2, rng_demands[key % 5])
+            live.append(key)
+            key += 1
+        got = fabric.allocations()
+        assert got == _scratch_allocations(fabric)
+        assert set(got) == set(live)
+
+
+def test_incremental_fabric_reports_only_changed_rates():
+    """reflow() must name exactly the flows whose granted rate changed:
+    a small satisfied flow keeps its grant (and is not reported) while
+    the contended heavyweights are re-leveled; an uncontended zone's
+    membership change reports only the new flow."""
+    fabric = pm.SharedFabric(zones=2)
+    # zone 0: far under capacity — adds change nobody else
+    fabric.add_flow("a", 0, 0.1e9)
+    assert set(fabric.reflow()) == {"a"}
+    fabric.add_flow("b", 0, 0.2e9)
+    assert set(fabric.reflow()) == {"b"}  # "a" kept its grant: unreported
+    # zone 1: a tiny satisfied flow + heavyweights over capacity
+    fabric.add_flow("tiny", 1, 1e3)
+    fabric.add_flow("h1", 1, 5e9)
+    fabric.add_flow("h2", 1, 5e9)
+    first = fabric.reflow()
+    assert set(first) == {"tiny", "h1", "h2"}
+    assert first["h1"] == first["h2"] < 5e9  # equal shares, contended
+    # another heavyweight re-levels the heavies but not the satisfied tiny
+    fabric.add_flow("h3", 1, 5e9)
+    second = fabric.reflow()
+    assert set(second) == {"h1", "h2", "h3"}
+    assert "tiny" not in second and "a" not in second and "b" not in second
+    assert second["h1"] == second["h2"] == second["h3"]
+    # per-zone epochs: zone 1 reflowed twice, zone 0 twice, independently
+    assert fabric.zone_epoch(0) == 2
+    assert fabric.zone_epoch(1) == 2
+    # removals of a contended flow re-level the zone's survivors only
+    fabric.remove_flow("h1")
+    third = fabric.reflow()
+    assert set(third) == {"h2", "h3"}
+    assert fabric.zone_epoch(1) == 3 and fabric.zone_epoch(0) == 2
+
+
+def test_water_fill_equal_demands_get_identical_rates():
+    """Bit-equal grants for equal demands (the wave-synchronization
+    contract the DES depends on: ulp-smeared rates would cascade into
+    per-flow reallocations)."""
+    alloc = pm.water_fill([1.13e9] * 511, 230e9)
+    assert len(set(alloc)) == 1  # one distinct float, all flows
+    # mixed case: the satisfied small flow keeps its demand, every
+    # unsatisfied flow holds exactly the same share
+    alloc = pm.water_fill([0.5, 8.0, 8.0, 8.0, 8.0], 6.0)
+    assert alloc[0] == 0.5
+    assert len({a for a in alloc[1:]}) == 1
+
+
 def test_tile_serving_model_costs():
     m = pm.TILE_SERVING_MODEL
     tile = 3 * 1024 * 1024

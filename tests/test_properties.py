@@ -137,6 +137,53 @@ def test_quantize_roundtrip_error_bounded(rows, cols, scale):
 _demand = st.floats(0.0, 1e9, allow_nan=False, allow_infinity=False)
 
 
+def _scratch_allocations(fabric):
+    """From-scratch reference: water-fill each zone's current flows in
+    their per-zone insertion order, independent of reflow history."""
+    from repro.core import perfmodel as pm
+
+    rates = {}
+    for flows in fabric._zone_flows.values():
+        granted = pm.water_fill(list(flows.values()),
+                                fabric.model.zone_capacity_bytes_per_s(
+                                    len(flows)))
+        for key, rate in zip(flows, granted):
+            rates[key] = rate
+    return rates
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.booleans(),            # True = add, False = remove
+              st.integers(0, 3),        # zone
+              st.floats(1e3, 5e9)),     # demand (adds only)
+    min_size=1, max_size=40),
+    zones=st.integers(1, 3))
+def test_incremental_fabric_equals_from_scratch_water_fill(ops, zones):
+    """INVARIANT: after ANY add/remove sequence, the incrementally
+    maintained SharedFabric allocations are element-wise equal (==, not
+    approx) to a from-scratch water_fill of the surviving flows — the
+    contract the DES's changed-flows-only reprediction rests on."""
+    from repro.core import perfmodel as pm
+
+    fabric = pm.SharedFabric(zones=zones)
+    live = []
+    next_key = 0
+    for is_add, zone, demand in ops:
+        if is_add or not live:
+            fabric.add_flow(next_key, zone, demand)
+            live.append(next_key)
+            next_key += 1
+        else:
+            victim = live.pop(zone % len(live))
+            fabric.remove_flow(victim)
+        got = fabric.allocations()
+        expect = _scratch_allocations(fabric)
+        assert got == expect  # exact float equality, every flow
+        # and the reported rates cover exactly the live flows
+        assert set(got) == set(live)
+
+
 @settings(max_examples=100, deadline=None)
 @given(demands=st.lists(_demand, min_size=0, max_size=32),
        capacity=st.floats(0.0, 1e9, allow_nan=False, allow_infinity=False))

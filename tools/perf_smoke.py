@@ -1,0 +1,80 @@
+"""Non-blocking simulator-performance smoke (CI's perf canary).
+
+    PYTHONPATH=src python tools/perf_smoke.py
+
+Re-runs the 512-node cluster-scaling sweep point with the committed
+BENCH_cluster_scaling.json's parameters and compares its wall-clock
+(best of ``--repeats``, after a warm-up run) against the committed row's
+own ``simulator.wall_s``.  Exits non-zero (LOUDLY) when the point runs
+more than ``--factor`` (default 2x) slower than the committed baseline —
+the tripwire for accidentally re-introducing an O(workers)/O(flows) scan
+into the DES hot path.  The 512-node point is the default because its
+~0.1 s baseline sits well above timer/scheduler noise; the smaller
+points finish in milliseconds and false-positive under load.
+
+Wall-clock comparisons across machines are noisy, which is why CI runs
+this as a *non-blocking* step: a failure is a flag for a human, not a
+merge gate.  The committed baseline is regenerated (with the record)
+whenever the engine legitimately changes speed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))  # for the benchmarks package
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--nodes", type=int, default=512,
+                   help="sweep point to re-run (must be in the record)")
+    p.add_argument("--factor", type=float, default=2.0,
+                   help="fail when wall-clock exceeds baseline x factor")
+    p.add_argument("--repeats", type=int, default=3,
+                   help="measured runs (best is compared; 1 warm-up first)")
+    p.add_argument("--record", default=str(ROOT / "BENCH_cluster_scaling.json"))
+    args = p.parse_args(argv)
+
+    with open(args.record) as f:
+        record = json.load(f)
+    row = next((r for r in record["rows"] if r["nodes"] == args.nodes), None)
+    if row is None or "simulator" not in row:
+        print(f"perf-smoke: no committed {args.nodes}-node simulator "
+              f"baseline in {args.record}; nothing to compare", flush=True)
+        return 0
+    baseline = row["simulator"]["wall_s"]
+
+    from benchmarks.cluster_scaling import _run_nodes
+    task_bytes = record["task_bytes"]
+    tasks_per_node = record["tasks_per_node"]
+    # warm-up run first (interpreter/allocator warm-up), then best-of-N:
+    # the canary compares the machine's best case against the committed
+    # best case, not one scheduler hiccup against it
+    _run_nodes(args.nodes, tasks_per_node, task_bytes, 8 * task_bytes)
+    walls, events_per_s = [], 0.0
+    for _ in range(max(1, args.repeats)):
+        report = _run_nodes(args.nodes, tasks_per_node, task_bytes,
+                            8 * task_bytes)
+        walls.append(report.simulator["wall_s"])
+        events_per_s = max(events_per_s, report.simulator["events_per_s"])
+    wall = min(walls)
+    print(f"perf-smoke: {args.nodes}-node sweep point wall {wall:.3f}s "
+          f"best-of-{len(walls)} ({events_per_s:.0f} events/s) vs "
+          f"committed baseline {baseline:.3f}s", flush=True)
+    if baseline > 0 and wall > args.factor * baseline:
+        print(f"perf-smoke: REGRESSION — {wall / baseline:.1f}x slower than "
+              f"the committed baseline (limit {args.factor}x).  The DES hot "
+              f"path has regressed; profile _run_virtual before merging.",
+              file=sys.stderr, flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
