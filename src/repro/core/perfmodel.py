@@ -320,6 +320,57 @@ class TileServingModel:
     def edge_hit_cost_s(self) -> float:
         return self.edge_hit_s
 
+    def encode_cost_s(self, nbytes: int, fmt: str = "raw") -> float:
+        """CPU bill for encoding `nbytes` raw tile bytes to `fmt` (0.0 for
+        raw: the default format changes nothing, bit-for-bit)."""
+        return tile_format(fmt).encode_s_per_byte * nbytes
+
+    def wire_bytes(self, nbytes: int, fmt: str = "raw") -> int:
+        """Bytes actually sent (and edge-cached) for `nbytes` raw tile
+        bytes encoded as `fmt` — the honest response size."""
+        return tile_format(fmt).wire_bytes(nbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileFormat:
+    """One wire encoding for served tiles: compression ratio + encode cost.
+
+    ``bytes_per_raw_byte`` is the response-size ratio on natural imagery
+    (PNG lossless ~2.6x on composite reflectance tiles; JPEG q~80 ~15x);
+    ``encode_s_per_byte`` bills the encoder per *raw* byte (libpng-class
+    ~150 MB/s, libjpeg-turbo-class ~220 MB/s).  The "raw" format is the
+    identity: ratio 1.0, zero cost — the pre-encode-model behaviour.
+    """
+
+    name: str
+    bytes_per_raw_byte: float
+    encode_s_per_byte: float
+
+    def __post_init__(self):
+        if not 0.0 < self.bytes_per_raw_byte <= 1.0:
+            raise ValueError(f"bytes_per_raw_byte must be in (0, 1]: {self}")
+        if self.encode_s_per_byte < 0:
+            raise ValueError(f"negative encode cost: {self}")
+
+    def wire_bytes(self, nbytes: int) -> int:
+        return int(nbytes * self.bytes_per_raw_byte)
+
+
+#: the formats a tile request may name (TileRequest.fmt)
+TILE_FORMATS = {
+    "raw": TileFormat("raw", 1.0, 0.0),
+    "png": TileFormat("png", 0.38, 1.0 / 150e6),
+    "jpeg": TileFormat("jpeg", 0.065, 1.0 / 220e6),
+}
+
+
+def tile_format(fmt: str) -> TileFormat:
+    try:
+        return TILE_FORMATS[fmt]
+    except KeyError:
+        raise ValueError(f"unknown tile format {fmt!r} "
+                         f"(known: {sorted(TILE_FORMATS)})") from None
+
 
 TILE_SERVING_MODEL = TileServingModel()
 
@@ -348,7 +399,13 @@ def worker_seconds_cost(worker_seconds: float) -> float:
 def percentile(values, q: float) -> float:
     """Linear-interpolated percentile (numpy's default method), for
     virtual-time latency distributions.  `q` in [0, 100]."""
-    vals = sorted(values)
+    return percentile_sorted(sorted(values), q)
+
+
+def percentile_sorted(vals, q: float) -> float:
+    """:func:`percentile` over an already-ascending sequence — the O(1)
+    variant for callers that maintain a sorted window incrementally (the
+    autoscaler's per-tick path) instead of re-sorting per query."""
     if not vals:
         raise ValueError("percentile of empty sequence")
     if not 0.0 <= q <= 100.0:

@@ -466,6 +466,14 @@ class ClusterConfig:
     #: batch+interactive shape where both tiers still share one fabric.
     #: None = every worker in the default shared pool.
     worker_pools: Optional[Tuple[Tuple[str, int], ...]] = None
+    #: virtual mode: ingest timed arrivals from a pre-sorted stream merged
+    #: against the event heap (zero heap ops per request) and wake exactly
+    #: one idle worker per submitted request off a per-pool idle min-heap,
+    #: instead of one _ARRIVE heap event per request plus an O(idle)
+    #: wake-all fan-out.  Claim outcomes are bit-identical (the lowest-
+    #: index idle worker wins under both schemes — pinned by tests);
+    #: False keeps the per-event path for twin comparisons.
+    arrival_batching: bool = True
 
 
 @dataclasses.dataclass
@@ -691,7 +699,8 @@ class ClusterEngine:
         try:
             if self.config.virtual_time:
                 t0 = time.perf_counter()
-                makespan = self._run_virtual(queue, handler, deferred)
+                makespan = self._run_virtual(queue, handler, deferred,
+                                             ntasks=len(tasks))
                 wall = time.perf_counter() - t0
                 self._sim["wall_s"] = wall
                 self._sim["events_per_s"] = (self._sim["events"] / wall
@@ -803,7 +812,8 @@ class ClusterEngine:
 
     # -- virtual-time mode: deterministic discrete-event simulation -----------
     def _run_virtual(self, queue: TaskQueue, handler: Handler,
-                     deferred: Optional[List[Tuple]] = None) -> float:
+                     deferred: Optional[List[Tuple]] = None,
+                     ntasks: int = 0) -> float:
         """Global event loop: dispatch, fabric-contended I/O flows, elastic
         join/leave, timed request arrivals.
 
@@ -827,6 +837,17 @@ class ClusterEngine:
         * Arrival wake-ups consult a per-pool idle-worker index instead of
           scanning the fleet; queue drain checks (``queue.done()``) are
           counter-based in :class:`TaskQueue`.
+        * With :attr:`ClusterConfig.arrival_batching` (the default), timed
+          arrivals never enter the heap at all: they are pre-sorted once
+          into a stream carrying the same (t, seq) keys the per-event path
+          would have stamped on its ``_ARRIVE`` entries, and the loop
+          merges stream-vs-heap on that key — so ingestion order is
+          bit-identical to the per-event path at zero heap ops per
+          request.  Each submitted request wakes exactly one idle worker
+          (the lowest-index one, popped from a per-pool idle min-heap
+          with lazy deletion) instead of epoch-bumping every idle worker;
+          the claim winner is the same worker under both schemes because
+          same-instant wake-all dispatches pop in worker-index order.
         """
         heap: List = []
         seq = 0
@@ -847,6 +868,11 @@ class ClusterEngine:
         #: empty queue) — what an arrival wake-up touches instead of
         #: scanning self.workers
         self._idle_by_pool: Dict[Optional[str], set] = {}
+        #: per-pool min-heap of possibly-idle worker indices (lazy
+        #: deletion: the set above is the truth; stale entries are skipped
+        #: on pop) — lets a batched arrival wake the lowest-index idle
+        #: worker in O(log idle) instead of sorting the whole idle set
+        self._idle_heap: Dict[Optional[str], List[int]] = {}
         #: per-pool active/warming counters for FleetView (plus the
         #: ready-time heap that promotes warming -> active lazily)
         self._pool_active: Dict[Optional[str], int] = {}
@@ -914,25 +940,81 @@ class ClusterEngine:
         #: requests not yet arrived: workers must not retire while these are
         #: pending even though the queue looks drained
         pending_arrivals = len(deferred or ())
-        for t, task_id, payload, pool in (deferred or ()):
-            push(t, _ARRIVE, -1, (task_id, payload, pool))
+        #: batched ingestion: arrivals live in a sorted stream, not the
+        #: heap.  Each consumes a seq *as if* it had been pushed (so every
+        #: later heap entry gets the same seq as on the per-event path)
+        #: and the stream is stable-sorted on the exact (t, seq) key the
+        #: heap would have ordered it by — merge order is bit-identical.
+        arrival_stream: List[Tuple[float, int, Tuple]] = []
+        if self.config.arrival_batching:
+            for t, task_id, payload, pool in (deferred or ()):
+                seq += 1
+                arrival_stream.append((t, seq, (task_id, payload, pool)))
+            arrival_stream.sort(key=lambda e: (e[0], e[1]))
+        else:
+            for t, task_id, payload, pool in (deferred or ()):
+                push(t, _ARRIVE, -1, (task_id, payload, pool))
+        arr_ix = 0
+        n_arr = len(arrival_stream)
         for w in self.workers:
             push(0.0, _DISPATCH, w.index)
         busy = 0
         makespan = 0.0
         events = 0
-        while heap or dirty:
-            if dirty and (not heap or heap[0][0] > self._now):
+        #: runaway guard scaled to the campaign (a million-request trace
+        #: legitimately needs tens of millions of events; the guard exists
+        #: to catch infinite poll loops, not honest scale)
+        event_limit = max(2_000_000,
+                          30 * ntasks + 400 * len(self.workers))
+        while heap or dirty or arr_ix < n_arr:
+            if arr_ix < n_arr:
+                a_t, a_seq, _ = arrival_stream[arr_ix]
+                take_arrival = (not heap
+                                or (a_t, a_seq) < (heap[0][0], heap[0][1]))
+                next_t = a_t if take_arrival else heap[0][0]
+            else:
+                take_arrival = False
+                next_t = heap[0][0] if heap else None
+            if dirty and (next_t is None or next_t > self._now):
                 reallocate()
                 continue
             if stale_io > 64 and stale_io > len(flows) + len(self.workers):
                 compact()
             events += 1
-            if events > 2_000_000:
+            if events > event_limit:
                 raise RuntimeError(
                     "cluster DES runaway — check task/handler wiring (an "
                     "abandoned task with a huge lease and speculation "
                     "disabled polls forever)")
+
+            if take_arrival:
+                t, _, (task_id, payload, pool) = arrival_stream[arr_ix]
+                arr_ix += 1
+                self._now = max(self._now, t)
+                queue.submit(task_id, payload,
+                             max_retries=self.config.max_retries, pool=pool)
+                pending_arrivals -= 1
+                # wake exactly one idle worker — the lowest-index one, the
+                # same worker that wins the claim race under the per-event
+                # wake-all (same-instant dispatches pop in index order).
+                # Removing it from the idle set here is what dedupes
+                # wake-ups across a same-instant batch: the next arrival
+                # wakes the *next* idle worker, never this one twice.
+                idle = self._idle_by_pool.get(pool)
+                if idle:
+                    iheap = self._idle_heap[pool]
+                    while iheap:
+                        w_idx = heapq.heappop(iheap)
+                        if w_idx in idle:  # lazy deletion: skip stale
+                            idle.discard(w_idx)
+                            w = self.workers[w_idx]
+                            w._idle_backoff = 0.0
+                            w._dispatch_epoch += 1  # supersede backoff poll
+                            push(self._now, _DISPATCH, w_idx,
+                                 w._dispatch_epoch)
+                            break
+                continue
+
             t, _, kind, widx, data = heapq.heappop(heap)
             self._now = max(self._now, t)
 
@@ -1110,7 +1192,10 @@ class ClusterEngine:
                 if queue.done() and busy == 0 and pending_arrivals == 0:
                     idle.discard(widx)
                     continue  # retire this worker (no reschedule)
-                idle.add(widx)  # an arrival can short-circuit the backoff
+                if widx not in idle:
+                    idle.add(widx)  # an arrival can short-circuit the backoff
+                    heapq.heappush(
+                        self._idle_heap.setdefault(worker.pool, []), widx)
                 worker._idle_backoff = min(
                     max(worker._idle_backoff * 2, self.config.idle_poll_s),
                     self.config.max_idle_backoff_s)

@@ -32,12 +32,20 @@ from repro.serve.tileserver import (
     tile_bounds,
     tile_grid,
 )
-from repro.serve.trace import Spike, rate_at, tile_universe, zipf_spike_trace
+from repro.serve.trace import (
+    Spike,
+    diurnal_spikes,
+    flash_crowd_spikes,
+    rate_at,
+    tile_universe,
+    zipf_spike_trace,
+)
 
 __all__ = [
     "AutoscaleAction", "AutoscalePolicy", "AutoscaleReport", "EdgeCache",
     "EdgeCacheStats", "ServeAutoscaler", "ServingReport", "Spike",
     "TileCache", "TileCacheStats", "TileFleet", "TileRequest",
-    "TileResponse", "TileServer", "TileServerStats", "rate_at",
-    "tile_bounds", "tile_grid", "tile_universe", "zipf_spike_trace",
+    "TileResponse", "TileServer", "TileServerStats", "diurnal_spikes",
+    "flash_crowd_spikes", "rate_at", "tile_bounds", "tile_grid",
+    "tile_universe", "zipf_spike_trace",
 ]

@@ -32,7 +32,8 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core import perfmodel
 from repro.launch.cluster import ElasticEvent, FleetController, FleetView
@@ -83,6 +84,18 @@ class AutoscalePolicy:
     drain_headroom: float = 2.0
     lease_s: float = 0.5
     pool: str = DEFAULT_POOL
+    #: predictive scale-out (default off): join on the arrival-rate
+    #: *trend* — the last window's arrivals vs the window before it —
+    #: instead of waiting for the trailing latency window to breach.  The
+    #: latency signal lags a spike by up to ``window_s`` plus a service
+    #: time; the arrival ramp is visible the instant it happens (the same
+    #: counters a front-end load balancer already keeps).
+    predictive: bool = False
+    #: recent-rate / previous-rate ratio that counts as a surge
+    predict_rate_ratio: float = 2.0
+    #: ignore trends built on fewer recent arrivals than this (a handful
+    #: of early requests must not read as a ramp)
+    predict_min_arrivals: int = 20
 
     def __post_init__(self):
         if self.min_servers < 1:
@@ -104,6 +117,12 @@ class AutoscalePolicy:
         if self.drain_headroom < 1.0:
             raise ValueError(f"drain_headroom must be >= 1, got "
                              f"{self.drain_headroom}")
+        if self.predict_rate_ratio <= 1.0:
+            raise ValueError(f"predict_rate_ratio must exceed 1, got "
+                             f"{self.predict_rate_ratio}")
+        if self.predict_min_arrivals < 1:
+            raise ValueError(f"predict_min_arrivals must be >= 1, got "
+                             f"{self.predict_min_arrivals}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,30 +182,64 @@ class ServeAutoscaler(FleetController):
         self._last_out_t = float("-inf")
         self._last_in_t = float("-inf")
         self._calm_ticks = 0
+        # The trailing latency window, maintained incrementally.  The old
+        # scheme re-collected and re-sorted the whole window every tick
+        # (O(W log W) — quadratic in aggregate over a million-request
+        # run); instead, _log_ix marks how much of the engine's
+        # append-only completion log has been consumed, _win_order holds
+        # (done_t, latency) in completion order (expiry and the demand
+        # floor's mean walk it front to back, preserving the old
+        # summation order bit for bit), and _win_sorted keeps the same
+        # latencies sorted via bisect insert/remove so the percentile
+        # never sorts.
+        self._log_ix = 0
+        self._win_order: Deque[Tuple[float, float]] = deque()
+        self._win_sorted: List[float] = []
+        self._last_now = float("-inf")
 
     # -- signal extraction ----------------------------------------------------
-    def _window_latencies(self, now: float, view: FleetView) -> List[float]:
-        """completion - arrival for requests completed in the last window
-        (a bisect on the engine's time-ordered completion log, so a tick
-        costs the window's completions, not the campaign's)."""
-        horizon = now - self.policy.window_s
+    def _advance(self, now: float, view: FleetView) -> None:
+        """Fold new completions into the window; expire the stale edge."""
         log = view.completion_log
-        lats = []
-        for done, tid in log[bisect.bisect_left(log, (horizon,)):]:
-            t0 = self.arrivals.get(tid)
-            if t0 is not None:
-                lats.append(done - t0)
-        return lats
+        if now < self._last_now or self._log_ix > len(log):
+            # a rewound clock or a replaced log (unit tests drive ticks
+            # with synthetic views): rebuild from scratch
+            self._log_ix = 0
+            self._win_order.clear()
+            self._win_sorted = []
+        self._last_now = now
+        if self._log_ix < len(log):
+            for done, tid in log[self._log_ix:]:
+                t0 = self.arrivals.get(tid)
+                if t0 is not None:
+                    lat = done - t0
+                    self._win_order.append((done, lat))
+                    bisect.insort(self._win_sorted, lat)
+            self._log_ix = len(log)
+        horizon = now - self.policy.window_s
+        order, ws = self._win_order, self._win_sorted
+        while order and order[0][0] < horizon:
+            _, lat = order.popleft()
+            del ws[bisect.bisect_left(ws, lat)]
 
-    @staticmethod
-    def _p99(lats: List[float]) -> float:
-        """The empty-window convention lives here and only here: no
-        completions yet means no evidence of a breach, not a breach."""
-        return perfmodel.percentile(lats, 99) if lats else 0.0
+    def _window_latencies(self, now: float, view: FleetView) -> List[float]:
+        """completion - arrival for requests completed in the last window,
+        in completion order (a read of the incrementally-maintained
+        window, so a tick costs its *new* completions, not the window's)."""
+        self._advance(now, view)
+        return [lat for _, lat in self._win_order]
+
+    def _window_p99(self) -> float:
+        """p99 straight off the sorted window.  The empty-window
+        convention lives here and only here: no completions yet means no
+        evidence of a breach, not a breach."""
+        ws = self._win_sorted
+        return perfmodel.percentile_sorted(ws, 99) if ws else 0.0
 
     def window_p99_s(self, now: float, view: FleetView) -> float:
         """Windowed latency p99 (0.0 while nothing has completed yet)."""
-        return self._p99(self._window_latencies(now, view))
+        self._advance(now, view)
+        return self._window_p99()
 
     def _window_offered_rps(self, now: float) -> float:
         """Requests that *arrived* in the last window, as a rate."""
@@ -197,6 +250,22 @@ class ServeAutoscaler(FleetController):
         n = (bisect.bisect_right(times, now)
              - bisect.bisect_right(times, horizon))
         return n / self.policy.window_s
+
+    def _arrival_surge(self, now: float) -> bool:
+        """True when the last window's arrivals outnumber the previous
+        window's by the policy ratio — the leading edge of a spike, read
+        off the arrival counters alone (no completions involved)."""
+        w = self.policy.window_s
+        if w <= 0:
+            return False
+        times = self._arrival_times
+        hi = bisect.bisect_right(times, now)
+        mid = bisect.bisect_right(times, now - w)
+        lo = bisect.bisect_right(times, now - 2.0 * w)
+        recent = hi - mid
+        if recent < self.policy.predict_min_arrivals:
+            return False
+        return recent >= self.policy.predict_rate_ratio * max(mid - lo, 1)
 
     def _demand_floor(self, now: float, lats: List[float]) -> int:
         """Servers the current offered load needs (a Little's-law estimate:
@@ -215,7 +284,7 @@ class ServeAutoscaler(FleetController):
     def tick(self, now: float, view: FleetView) -> List[ElasticEvent]:
         p = self.policy
         lats = self._window_latencies(now, view)
-        p99 = self._p99(lats)
+        p99 = self._window_p99()
         depth = view.pending_by_pool.get(p.pool, 0)
         active = view.active_by_pool.get(p.pool, 0)
         warming = view.warming_by_pool.get(p.pool, 0)
@@ -239,6 +308,17 @@ class ServeAutoscaler(FleetController):
             reason = ("p99_breach" if p99 > p.target_p99_s
                       else "queue_depth")
             self._record(now, +n, reason, p99, depth, servers)
+            return [ElasticEvent(now, +n, pool=p.pool, warmup_s=p.warmup_s)]
+
+        if p.predictive and self._arrival_surge(now):
+            # the leading signal: arrivals are ramping even though neither
+            # trailing signal has breached yet — join *now* so the warm-up
+            # is paid before the backlog forms, and hold off any drain
+            self._calm_ticks = 0
+            if servers >= p.max_servers or not out_cooled:
+                return []
+            n = min(p.scale_out_step, p.max_servers - servers)
+            self._record(now, +n, "predicted_demand", p99, depth, servers)
             return [ElasticEvent(now, +n, pool=p.pool, warmup_s=p.warmup_s)]
 
         calm = p99 < p.scale_in_p99_s and depth == 0

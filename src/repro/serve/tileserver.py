@@ -43,13 +43,17 @@ BATCH_POOL = "batch"
 # ---------------------------------------------------------------------------
 # requests and the XYZ -> pyramid-region mapping
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class TileRequest:
     """One XYZ-style request: array + pyramid level + tile column/row.
 
     `t` is the virtual arrival instant (seconds into the trace); `level`
     counts like the pyramid (0 = full resolution, higher = coarser), so a
-    web map's zoom z maps to ``pyramid_levels - z``.
+    web map's zoom z maps to ``pyramid_levels - z``.  `fmt` names the
+    wire encoding (:data:`repro.core.perfmodel.TILE_FORMATS`): response
+    bytes and a per-request encode CPU bill follow the format; the
+    default "raw" is the identity (ratio 1.0, zero cost).  ``slots``
+    because a million-request trace holds a million of these.
     """
 
     t: float
@@ -57,6 +61,7 @@ class TileRequest:
     x: int
     y: int
     array: str = "composite"
+    fmt: str = "raw"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,26 +269,37 @@ class TileServer:
         return arr
 
     def serve(self, req: TileRequest) -> TileResponse:
-        """Serve one tile: cache, else pyramid region read + decode bill."""
+        """Serve one tile: cache, else pyramid region read + decode bill.
+
+        The response carries *wire* bytes — raw tile bytes through the
+        request's encode format — and every non-raw response bills the
+        encoder on top of the hit/miss cost (the tile cache stores
+        decoded pixels, so a hit still encodes).
+        """
         self.stats.requests += 1
         key = (req.array, req.level, req.x, req.y)
+        fmt = req.fmt
         tile = self.cache.get(key)
         if tile is not None:
+            wire = self.model.wire_bytes(tile.nbytes, fmt)
             self.stats.cache_hits += 1
-            self.stats.bytes_served += tile.nbytes
+            self.stats.bytes_served += wire
             if self._charge is not None:
-                self._charge(self.model.hit_cost_s())
-            return TileResponse(tile, tile.nbytes, True, req.level, req.x, req.y)
+                self._charge(self.model.hit_cost_s()
+                             + self.model.encode_cost_s(tile.nbytes, fmt))
+            return TileResponse(tile, wire, True, req.level, req.x, req.y)
         self.stats.cache_misses += 1
         arr = self._array(req.array)
         start, stop = tile_bounds(arr.level_shape(req.level), self.tile_px,
                                   req.x, req.y)
         tile = arr.read(start, stop, level=req.level)
         self.cache.put(key, tile)
-        self.stats.bytes_served += tile.nbytes
+        wire = self.model.wire_bytes(tile.nbytes, fmt)
+        self.stats.bytes_served += wire
         if self._charge is not None:
-            self._charge(self.model.miss_cost_s(tile.nbytes))
-        return TileResponse(tile, tile.nbytes, False, req.level, req.x, req.y)
+            self._charge(self.model.miss_cost_s(tile.nbytes)
+                         + self.model.encode_cost_s(tile.nbytes, fmt))
+        return TileResponse(tile, wire, False, req.level, req.x, req.y)
 
 
 # ---------------------------------------------------------------------------
@@ -342,9 +358,16 @@ class ServingReport:
 
     def window_percentile(self, q: float, t0: float = 0.0,
                           t1: float = float("inf")) -> float:
-        """Latency percentile over requests arriving in [t0, t1)."""
-        return perfmodel.percentile(
-            [lat for t, lat in self.samples if t0 <= t < t1], q)
+        """Latency percentile over requests arriving in [t0, t1).
+
+        An empty window (no arrivals in [t0, t1)) has no defined
+        percentile — returns NaN rather than raising, so benchmark row
+        writers can record "no traffic" honestly.
+        """
+        lats = [lat for t, lat in self.samples if t0 <= t < t1]
+        if not lats:
+            return float("nan")
+        return perfmodel.percentile(lats, q)
 
     @property
     def all_served(self) -> bool:
@@ -461,9 +484,15 @@ class TileFleet:
                     arr = arrays[req.array] = cs.open(req.array)
                 start, stop = tile_bounds(arr.level_shape(req.level),
                                           self.tile_px, req.x, req.y)
-                nbytes = int(np.prod([b - a for a, b in zip(start, stop)])
-                             * np.dtype(arr.spec.dtype).itemsize)
-                key = (req.array, req.level, req.x, req.y)
+                raw = int(np.prod([b - a for a, b in zip(start, stop)])
+                          * np.dtype(arr.spec.dtype).itemsize)
+                # the edge caches *responses*: entry sizes are wire bytes
+                # through the request's encode format, and the format is
+                # part of the key (a PNG response cannot answer a JPEG
+                # request) — with everything on "raw" this is the legacy
+                # keying and sizing, bit-for-bit
+                nbytes = self.serving_model.wire_bytes(raw, req.fmt)
+                key = (req.array, req.level, req.x, req.y, req.fmt)
                 leader = edge.get(key)
                 if leader is not None:
                     followers.append((req.t, nbytes, leader))

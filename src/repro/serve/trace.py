@@ -8,8 +8,14 @@ with both properties:
 * **Zipf popularity** — tile k (in a seeded random popularity order) is
   requested with probability proportional to ``1 / rank^alpha``.
 * **Spikes** — piecewise-constant rate multipliers over time windows
-  (:class:`Spike`), driving a Poisson arrival process whose rate is
-  re-evaluated per inter-arrival draw.
+  (:class:`Spike`), driving an inhomogeneous Poisson arrival process.
+  :func:`diurnal_spikes` and :func:`flash_crowd_spikes` build the two
+  canonical web-traffic shapes out of spike windows.
+
+Generation is numpy-bulk end to end (the time-rescaling construction:
+draw unit-exponential arrival levels in bulk, invert the piecewise-linear
+cumulative hazard with one ``np.interp``), so a million-request trace
+costs a few bulk draws, not a million scalar RNG round-trips.
 
 Everything is seeded, so a trace is a pure function of its parameters —
 the serving benchmark's runs are reproducible records.
@@ -18,7 +24,8 @@ the serving benchmark's runs are reproducible records.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+import math
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,6 +62,68 @@ def rate_at(t: float, base_rps: float, spikes: Sequence[Spike]) -> float:
     return rate
 
 
+def diurnal_spikes(duration_s: float, period_s: float,
+                   peak_multiplier: float, steps: int = 8) -> Tuple[Spike, ...]:
+    """A diurnal load cycle as non-overlapping spike windows.
+
+    Each period is cut into `steps` equal windows whose multipliers trace
+    a raised cosine from trough (1.0, "night") to `peak_multiplier`
+    ("evening peak") and back — the piecewise-constant stand-in for the
+    day/night traffic swing a global map tier sees.
+    """
+    if period_s <= 0 or duration_s <= 0:
+        raise ValueError(f"need positive duration/period, got "
+                         f"{duration_s}/{period_s}")
+    if peak_multiplier <= 1.0:
+        raise ValueError(f"peak_multiplier must exceed 1, got "
+                         f"{peak_multiplier}")
+    if steps < 2:
+        raise ValueError(f"need >= 2 steps per period, got {steps}")
+    out: List[Spike] = []
+    step = period_s / steps
+    t = 0.0
+    while t < duration_s:
+        j = round(t / step) % steps
+        mult = 1.0 + (peak_multiplier - 1.0) * 0.5 * (
+            1.0 - math.cos(2.0 * math.pi * (j + 0.5) / steps))
+        t1 = min(t + step, duration_s)
+        if mult > 1.0 + 1e-9:
+            out.append(Spike(t, t1, mult))
+        t += step
+    return tuple(out)
+
+
+def flash_crowd_spikes(t0: float, peak_multiplier: float, *,
+                       peak_s: float, decay_s: float,
+                       decay_steps: int = 5,
+                       decay: float = 0.5) -> Tuple[Spike, ...]:
+    """A flash crowd: instant onset at `t0`, geometric cool-down after.
+
+    The peak multiplier holds for `peak_s`, then each of `decay_steps`
+    windows of `decay_s` multiplies the *excess* over base by `decay` —
+    the "everyone loads the event map at once, then drifts away" shape
+    that stresses predictive scale-out harder than a symmetric spike.
+    """
+    if t0 < 0 or peak_s <= 0 or decay_s <= 0:
+        raise ValueError(f"need t0 >= 0 and positive peak_s/decay_s, got "
+                         f"{t0}/{peak_s}/{decay_s}")
+    if peak_multiplier <= 1.0:
+        raise ValueError(f"peak_multiplier must exceed 1, got "
+                         f"{peak_multiplier}")
+    if not 0.0 < decay < 1.0:
+        raise ValueError(f"decay must be in (0, 1), got {decay}")
+    out = [Spike(t0, t0 + peak_s, peak_multiplier)]
+    t = t0 + peak_s
+    excess = peak_multiplier - 1.0
+    for _ in range(decay_steps):
+        excess *= decay
+        if excess < 0.05:
+            break
+        out.append(Spike(t, t + decay_s, 1.0 + excess))
+        t += decay_s
+    return tuple(out)
+
+
 def tile_universe(shape: Sequence[int], pyramid_levels: int, tile_px: int,
                   array: str = "composite") -> List[Tuple[str, int, int, int]]:
     """Every addressable (array, level, x, y) across the pyramid (level
@@ -69,17 +138,42 @@ def tile_universe(shape: Sequence[int], pyramid_levels: int, tile_px: int,
     return out
 
 
+def _hazard_knots(duration_s: float, base_rps: float,
+                  spikes: Sequence[Spike]):
+    """(time knots, cumulative-hazard knots) of the piecewise-constant
+    rate function over [0, duration_s] — the inversion table for the
+    time-rescaling construction."""
+    edges = {0.0, duration_s}
+    for s in spikes:
+        if s.t0 < duration_s and s.t1 > 0.0:
+            edges.add(max(0.0, s.t0))
+            edges.add(min(duration_s, s.t1))
+    t_knots = np.array(sorted(edges))
+    rates = np.array([rate_at(t, base_rps, spikes) for t in t_knots[:-1]])
+    lam_knots = np.concatenate(([0.0], np.cumsum(rates * np.diff(t_knots))))
+    return t_knots, lam_knots
+
+
 def zipf_spike_trace(universe: Sequence[Tuple[str, int, int, int]],
                      duration_s: float, base_rps: float,
                      alpha: float = 1.1, spikes: Sequence[Spike] = (),
-                     seed: int = 0) -> List[TileRequest]:
+                     seed: int = 0,
+                     formats: Optional[Sequence[Tuple[str, float]]] = None,
+                     ) -> List[TileRequest]:
     """Deterministic Zipf-popularity trace with spike windows.
 
     Tiles are ranked by a seeded shuffle of `universe`; request k picks a
-    tile with probability ∝ ``1 / rank^alpha``.  Arrivals follow a
-    piecewise-homogeneous Poisson process: each inter-arrival gap is drawn
-    at the rate in force at the previous arrival (spike edges blur by one
-    gap — fine for benchmark purposes, and keeps generation one-pass).
+    tile with probability ∝ ``1 / rank^alpha``.  Arrivals follow the
+    exact inhomogeneous Poisson process of the piecewise-constant rate
+    (base × compounded spike multipliers), via time rescaling: bulk
+    unit-exponential levels are inverted through the cumulative hazard
+    in one vectorized pass — no per-request RNG round-trips, so a
+    million-request trace generates in bulk-numpy time.
+
+    `formats` optionally assigns each request an encode format, as
+    ``(name, weight)`` pairs (e.g. ``(("png", 0.3), ("jpeg", 0.7))``);
+    None leaves every request on the default raw format and draws no
+    extra random numbers.
     """
     if not universe:
         raise ValueError("empty tile universe")
@@ -91,15 +185,43 @@ def zipf_spike_trace(universe: Sequence[Tuple[str, int, int, int]],
     ranks = np.arange(1, len(universe) + 1, dtype=np.float64)
     probs = ranks ** -alpha
     probs /= probs.sum()
-    trace: List[TileRequest] = []
-    t = 0.0
-    while True:
-        t += float(rng.exponential(1.0 / rate_at(t, base_rps, spikes)))
-        if t >= duration_s:
-            break
-        array, level, x, y = universe[order[rng.choice(len(universe),
-                                                       p=probs)]]
-        trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array))
-    if not trace:
+    t_knots, lam_knots = _hazard_knots(duration_s, base_rps, spikes)
+    total = float(lam_knots[-1])
+    # bulk unit-exponential levels until the hazard budget is exceeded
+    # (one draw almost always suffices: 10 sigma of headroom)
+    parts: List[np.ndarray] = []
+    acc = 0.0
+    block = int(total + 10.0 * math.sqrt(total) + 16.0)
+    while acc < total:
+        cum = np.cumsum(rng.exponential(1.0, size=block)) + acc
+        parts.append(cum)
+        acc = float(cum[-1])
+    levels = np.concatenate(parts)
+    levels = levels[levels < total]
+    ts = np.interp(levels, lam_knots, t_knots)
+    n = len(ts)
+    if n == 0:
         raise ValueError("trace came out empty; raise duration_s * base_rps")
+    picks = order[rng.choice(len(universe), size=n, p=probs)]
+    fmt_names: Optional[List[str]] = None
+    if formats is not None:
+        if not formats:
+            raise ValueError("empty formats sequence (pass None for raw)")
+        weights = np.array([w for _, w in formats], dtype=np.float64)
+        if (weights <= 0).any():
+            raise ValueError(f"format weights must be positive: {formats}")
+        fmt_idx = rng.choice(len(formats), size=n, p=weights / weights.sum())
+        names = [name for name, _ in formats]
+        fmt_names = [names[i] for i in fmt_idx]
+    trace: List[TileRequest] = []
+    uni = universe
+    if fmt_names is None:
+        for t, k in zip(ts.tolist(), picks.tolist()):
+            array, level, x, y = uni[k]
+            trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array))
+    else:
+        for t, k, fmt in zip(ts.tolist(), picks.tolist(), fmt_names):
+            array, level, x, y = uni[k]
+            trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array,
+                                     fmt=fmt))
     return trace

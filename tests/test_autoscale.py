@@ -462,3 +462,84 @@ def test_warmup_and_cost_constants():
     assert perfmodel.SERVE_WARMUP_S > 0
     assert perfmodel.worker_seconds_cost(3600.0) == pytest.approx(
         perfmodel.NODE_COST_PER_HR_USD)
+
+
+# ---------------------------------------------------------------------------
+# the incremental latency window + predictive scale-out
+# ---------------------------------------------------------------------------
+def test_incremental_window_matches_full_rebuild_bit_for_bit():
+    """The maintained window must equal a from-scratch rebuild at every
+    tick — completion order, sorted order, and the p99 read off it — so
+    autoscale decisions are bit-identical to the pre-incremental code."""
+    import bisect
+
+    pol = AutoscalePolicy(window_s=0.1, interval_s=0.02)
+    rng = np.random.default_rng(0)
+    done_times = np.sort(rng.uniform(0.0, 3.0, 400))
+    lats = rng.uniform(0.001, 0.2, 400)
+    arrivals = {f"r{i}": float(done_times[i] - lats[i]) for i in range(400)}
+    log = [(float(t), f"r{i}") for i, t in enumerate(done_times)]
+    scaler = ServeAutoscaler(pol, arrivals=arrivals)
+    for step in range(160):
+        now = 0.02 * (step + 1)
+        upto = log[:bisect.bisect_right(log, (now,))]
+        view = FleetView(now=now, pending_by_pool={},
+                         completion_times={}, completion_log=upto,
+                         active_by_pool={"serve": 2}, warming_by_pool={})
+        got = scaler.window_p99_s(now, view)
+        oracle = [d - arrivals[tid] for d, tid in upto
+                  if d >= now - pol.window_s]
+        assert [lat for _, lat in scaler._win_order] == oracle
+        assert scaler._win_sorted == sorted(oracle)
+        expected = perfmodel.percentile(oracle, 99) if oracle else 0.0
+        assert got == expected  # bit-identical, not approx
+
+
+def test_incremental_window_survives_a_rewound_clock():
+    """Unit-test drivers may call with an earlier `now` (or a replaced
+    log); the window falls back to a rebuild instead of going stale."""
+    pol = AutoscalePolicy(window_s=0.1)
+    scaler = ServeAutoscaler(pol, arrivals={"a": 0.0, "b": 0.8})
+    late = _view(1.0, completions={"a": 0.05, "b": 0.95})
+    assert scaler.window_p99_s(1.0, late) == pytest.approx(0.15)
+    # rewind: the expired-long-ago completion is visible again
+    early = _view(0.1, completions={"a": 0.05})
+    assert scaler.window_p99_s(0.1, early) == pytest.approx(0.05)
+
+
+def test_predictive_policy_validation_and_default_off():
+    assert AutoscalePolicy().predictive is False
+    with pytest.raises(ValueError):
+        AutoscalePolicy(predict_rate_ratio=1.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(predict_min_arrivals=0)
+
+
+def test_predictive_joins_on_arrival_trend_before_any_breach():
+    """5 arrivals in the previous window, 40 in the last one: the rate
+    quadrupled, nothing has breached — the predictive policy joins (with
+    warm-up), the reactive one does nothing on the identical view."""
+    arrivals = {f"p{i}": 0.02 * i for i in range(5)}            # [0, 0.1)
+    arrivals.update({f"r{i}": 0.1 + 0.0025 * i for i in range(40)})
+    kw = dict(min_servers=1, max_servers=8, window_s=0.1,
+              predict_rate_ratio=2.0, predict_min_arrivals=10)
+    view = _view(0.2, active=2)  # no completions, empty queue
+    reactive = ServeAutoscaler(AutoscalePolicy(**kw), arrivals=arrivals)
+    assert reactive.tick(0.2, view) == []
+    pred = ServeAutoscaler(AutoscalePolicy(predictive=True, **kw),
+                           arrivals=arrivals)
+    events = pred.tick(0.2, _view(0.2, active=2))
+    assert len(events) == 1 and events[0].delta > 0
+    assert events[0].warmup_s == pred.policy.warmup_s
+    assert pred.actions[-1].reason == "predicted_demand"
+    # too few arrivals to call it a trend: no join
+    sparse = ServeAutoscaler(
+        AutoscalePolicy(predictive=True, **{**kw,
+                                            "predict_min_arrivals": 50}),
+        arrivals=arrivals)
+    assert sparse.tick(0.2, _view(0.2, active=2)) == []
+    # a surge is not calm: the drain debounce resets while it lasts
+    at_max = ServeAutoscaler(AutoscalePolicy(predictive=True, **kw),
+                             arrivals=arrivals)
+    assert at_max.tick(0.2, _view(0.2, active=8)) == []
+    assert at_max._calm_ticks == 0

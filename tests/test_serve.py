@@ -3,6 +3,8 @@ edge tier in front of the fleet (two-level hit rate, request coalescing),
 the fleet on the cluster DES (arrivals, pools, latency accounting), and
 the engine-level request-shaped-task plumbing it rides on."""
 
+import math
+
 import numpy as np
 import pytest
 
@@ -22,6 +24,8 @@ from repro.serve import (
     TileFleet,
     TileRequest,
     TileServer,
+    diurnal_spikes,
+    flash_crowd_spikes,
     rate_at,
     tile_bounds,
     tile_grid,
@@ -443,3 +447,207 @@ def test_engine_rejects_unclaimable_pool_routing():
             nodes=2, virtual_time=True,
             worker_pools=(("serve", 1), ("batch", 1)))).run(
                 {"t": 0}, lambda w, p: p)
+
+
+# ---------------------------------------------------------------------------
+# trace shapes: diurnal cycle + flash crowd
+# ---------------------------------------------------------------------------
+def test_diurnal_spikes_shape():
+    spikes = diurnal_spikes(2.0, 2.0, 12.0, steps=8)
+    assert all(s.multiplier > 1.0 for s in spikes)
+    # raised cosine: multipliers rise to the peak, then fall back
+    mults = [s.multiplier for s in spikes]
+    peak = max(mults)
+    assert peak == pytest.approx(12.0, rel=0.1)
+    k = mults.index(peak)
+    assert mults[:k + 1] == sorted(mults[:k + 1])
+    assert mults[k:] == sorted(mults[k:], reverse=True)
+    # windows tile the duration without overlap, clipped at the end
+    for a, b in zip(spikes, spikes[1:]):
+        assert a.t1 <= b.t0 + 1e-12
+    assert spikes[-1].t1 <= 2.0 + 1e-12
+    # several periods fit a longer duration
+    assert len(diurnal_spikes(4.0, 2.0, 12.0, steps=8)) == 2 * len(spikes)
+    with pytest.raises(ValueError):
+        diurnal_spikes(1.0, 1.0, 1.0)  # peak must exceed base
+    with pytest.raises(ValueError):
+        diurnal_spikes(1.0, 0.0, 4.0)
+    with pytest.raises(ValueError):
+        diurnal_spikes(1.0, 1.0, 4.0, steps=1)
+
+
+def test_flash_crowd_spikes_shape():
+    spikes = flash_crowd_spikes(1.0, 16.0, peak_s=0.5, decay_s=0.25)
+    # instant onset at the peak multiplier
+    assert spikes[0].t0 == 1.0 and spikes[0].multiplier == 16.0
+    mults = [s.multiplier for s in spikes]
+    assert mults == sorted(mults, reverse=True)
+    # the excess over base halves each decay window (default decay=0.5)
+    assert spikes[1].multiplier == pytest.approx(1.0 + 7.5)
+    for a, b in zip(spikes, spikes[1:]):
+        assert b.t0 == pytest.approx(a.t1)
+    # the tail stops while still meaningfully above base
+    assert spikes[-1].multiplier > 1.05
+    with pytest.raises(ValueError):
+        flash_crowd_spikes(-1.0, 4.0, peak_s=0.1, decay_s=0.1)
+    with pytest.raises(ValueError):
+        flash_crowd_spikes(0.0, 1.0, peak_s=0.1, decay_s=0.1)
+    with pytest.raises(ValueError):
+        flash_crowd_spikes(0.0, 4.0, peak_s=0.1, decay_s=0.1, decay=1.5)
+
+
+def test_vectorized_trace_matches_golden():
+    """Determinism pin for the numpy-bulk generator: the exact request
+    stream of a fixed seed is committed behavior (the serving benchmark
+    records and the engine pin test both replay such traces)."""
+    uni = tile_universe((128, 128, 3), 1, 32)
+    trace = zipf_spike_trace(uni, 2.0, 40.0, alpha=1.1,
+                             spikes=(Spike(0.5, 1.0, 4.0),), seed=9)
+    assert len(trace) == 144
+    first = trace[0]
+    assert first.t == pytest.approx(0.0033900964775464824, rel=1e-12)
+    assert (first.level, first.x, first.y, first.array, first.fmt) == (
+        0, 2, 1, "composite", "raw")
+    second = trace[1]
+    assert second.t == pytest.approx(0.003702742091916765, rel=1e-12)
+    assert (second.level, second.x, second.y) == (0, 1, 3)
+    last = trace[-1]
+    assert last.t == pytest.approx(1.9896471460632816, rel=1e-12)
+    assert (last.level, last.x, last.y) == (0, 2, 3)
+    assert sum(r.t for r in trace) == pytest.approx(132.29740418729818,
+                                                    rel=1e-12)
+    assert sum(r.x + 10 * r.y + 100 * r.level for r in trace) == 4689
+
+
+def test_trace_formats_ride_after_timing_and_picks():
+    """The format draw happens after arrival times and tile picks, so an
+    encoded trace is the raw trace's exact twin on timing and tiles."""
+    uni = tile_universe((128, 128, 3), 1, 32)
+    kw = dict(duration_s=2.0, base_rps=40.0, alpha=1.1, seed=9)
+    raw = zipf_spike_trace(uni, **kw)
+    enc = zipf_spike_trace(uni, formats=(("png", 1.0),), **kw)
+    assert ([(r.t, r.level, r.x, r.y) for r in raw]
+            == [(r.t, r.level, r.x, r.y) for r in enc])
+    assert all(r.fmt == "raw" for r in raw)
+    assert all(r.fmt == "png" for r in enc)
+    mix = zipf_spike_trace(uni, formats=(("png", 0.5), ("jpeg", 0.5)), **kw)
+    assert {r.fmt for r in mix} == {"png", "jpeg"}
+    with pytest.raises(ValueError):
+        zipf_spike_trace(uni, formats=(), **kw)
+    with pytest.raises(ValueError):
+        zipf_spike_trace(uni, formats=(("png", 0.0),), **kw)
+
+
+# ---------------------------------------------------------------------------
+# per-format tile encoding: wire bytes + encode bill
+# ---------------------------------------------------------------------------
+def test_server_encodes_wire_bytes_and_bills_encode():
+    _, _, cs, _ = _world()
+    charges = []
+    srv = TileServer(cs, tile_px=32, cache_bytes=4 * MiB,
+                     charge=charges.append)
+    raw = srv.serve(TileRequest(0.0, 1, 0, 0))
+    png = srv.serve(TileRequest(1.0, 1, 0, 0, fmt="png"))  # hit, encoded
+    fmt = perfmodel.tile_format("png")
+    assert png.cache_hit
+    assert png.data.tobytes() == raw.data.tobytes()  # cache stores pixels
+    assert png.nbytes == int(raw.data.nbytes * fmt.bytes_per_raw_byte)
+    assert png.nbytes < raw.nbytes
+    model = perfmodel.TILE_SERVING_MODEL
+    # a hit on an encoded request still pays the encoder
+    assert charges[1] == pytest.approx(
+        model.hit_cost_s() + raw.data.nbytes * fmt.encode_s_per_byte)
+    assert charges[1] > model.hit_cost_s()
+    # bytes_served counts wire bytes, per request's own format
+    assert srv.stats.bytes_served == raw.nbytes + png.nbytes
+    with pytest.raises(ValueError):
+        srv.serve(TileRequest(2.0, 1, 0, 0, fmt="gif"))
+
+
+def test_edge_cache_keys_are_format_aware():
+    """The edge caches encoded responses: the same tile in two formats is
+    two edge entries (a PNG response cannot answer a JPEG request)."""
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=1)
+    trace = [TileRequest(0.001, 0, 0, 0, fmt="png"),
+             TileRequest(0.5, 0, 0, 0, fmt="jpeg"),
+             TileRequest(1.0, 0, 0, 0, fmt="png")]
+    fleet = TileFleet(inner, meta, root="bucket", servers=1, tile_px=32,
+                      cache_bytes=4 * MiB, edge_cache_bytes=1 * MiB)
+    rep = fleet.run(trace)
+    assert rep.all_served
+    # the jpeg request must NOT ride the png edge entry...
+    assert rep.forwarded == 2
+    assert rep.edge_hits == 1  # the second png request
+    # ...but it IS a server tile-cache hit: the server cache stores
+    # decoded pixels, which any format re-encodes from
+    assert rep.hit_rate == pytest.approx(1 / 2)
+    assert rep.combined_hit_rate == pytest.approx(2 / 3)
+
+
+def test_window_percentile_empty_window_is_nan():
+    inner, meta, _, _ = _world(hw=128, chunk=32, levels=1)
+    uni = tile_universe((128, 128, 3), 1, 32)
+    trace = zipf_spike_trace(uni, duration_s=1.0, base_rps=40.0, seed=2)
+    fleet = TileFleet(inner, meta, root="bucket", servers=2, tile_px=32,
+                      cache_bytes=4 * MiB)
+    rep = fleet.run(trace)
+    # a window with no arrivals has no percentile: NaN, not a crash
+    assert math.isnan(rep.window_percentile(99, 100.0, 200.0))
+    # the full-range window is the overall p99
+    assert rep.window_percentile(99) == rep.p99_s
+
+
+# ---------------------------------------------------------------------------
+# the engine pin: 64-server serving aggregates across engine refactors
+# ---------------------------------------------------------------------------
+def _pin_world():
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    cs = ChunkStore(Festivus(inner, meta=meta), "bucket")
+    rng = np.random.default_rng(0)
+    comp = rng.random((512, 512, 3), dtype=np.float32)
+    arr = cs.create("composite", comp.shape, np.float32, (128, 128, 3),
+                    pyramid_levels=2)
+    arr.write_region((0, 0, 0), comp)
+    arr.build_pyramid()
+    cs.fs.close()
+    return inner, meta
+
+
+def _pin_trace(n=1500):
+    """Arithmetic (RNG-free) trace: bursts of 120 same-instant arrivals
+    against 64 servers, so same-t ordering, the idle-wake race, and real
+    queueing are all exercised — and independent of any RNG stream."""
+    universe = tile_universe((512, 512, 3), 2, 128)
+    return [TileRequest(t=0.001 + (i // 120) * 0.017,
+                        level=universe[(i * 7) % len(universe)][1],
+                        x=universe[(i * 7) % len(universe)][2],
+                        y=universe[(i * 7) % len(universe)][3])
+            for i in range(n)]
+
+
+def test_64_server_serving_aggregates_pinned_across_engine_refactors():
+    """Every pinned value below was produced by the pre-batching
+    per-event arrival engine.  A future engine change that shifts any of
+    them has changed serving behavior, not just serving speed."""
+    inner, meta = _pin_world()
+    fleet = TileFleet(inner, meta, root="bucket", servers=64, tile_px=128,
+                      cache_bytes=256 * KiB)
+    rep = fleet.run(_pin_trace())
+    assert rep.completed == 1500 and rep.all_served
+    assert rep.cluster.makespan_s == pytest.approx(0.20646503258536586,
+                                                   rel=1e-9)
+    assert rep.p50_s == pytest.approx(0.0016159772494450143, rel=1e-9)
+    assert rep.p90_s == pytest.approx(0.0016759772494450154, rel=1e-9)
+    assert rep.p99_s == pytest.approx(0.003258902369447851, rel=1e-9)
+    assert rep.mean_s == pytest.approx(0.001302464524767393, rel=1e-9)
+    assert rep.max_s == pytest.approx(0.003258902369447851, rel=1e-9)
+    assert rep.hit_rate == 0.448
+    assert rep.bytes_served == 294912000
+    assert rep.cache_evictions == 764
+    assert rep.serve_bytes_read == 162803824
+    assert sum(rep.cluster.completion_times.values()) == pytest.approx(
+        150.33369678715047, rel=1e-9)
+    assert rep.cluster.queue_stats == {
+        "submitted": 1500, "completed": 1500, "retried": 0, "expired": 0,
+        "speculated": 0, "dead": 0, "duplicate_completions": 0}

@@ -2,15 +2,21 @@
 
     PYTHONPATH=src python tools/perf_smoke.py
 
-Re-runs the 512-node cluster-scaling sweep point with the committed
-BENCH_cluster_scaling.json's parameters and compares its wall-clock
-(best of ``--repeats``, after a warm-up run) against the committed row's
-own ``simulator.wall_s``.  Exits non-zero (LOUDLY) when the point runs
-more than ``--factor`` (default 2x) slower than the committed baseline —
-the tripwire for accidentally re-introducing an O(workers)/O(flows) scan
-into the DES hot path.  The 512-node point is the default because its
-~0.1 s baseline sits well above timer/scheduler noise; the smaller
-points finish in milliseconds and false-positive under load.
+Two tripwires, both compared against the committed records' own
+``wall_s`` and both failing only past ``--factor`` (default 2x):
+
+* the 512-node cluster-scaling sweep point (BENCH_cluster_scaling.json),
+  best of ``--repeats`` after a warm-up run — the canary for accidentally
+  re-introducing an O(workers)/O(flows) scan into the DES hot path.  The
+  512-node point is the default because its ~0.1 s baseline sits well
+  above timer/scheduler noise; the smaller points finish in milliseconds
+  and false-positive under load.
+* the serving million-sweep smoke point (10^5 requests through
+  ``benchmarks.serving.million_point``, vs BENCH_serving.json's
+  ``million_sweep`` smoke row) — the canary for the batched arrival
+  front end: a per-request heap op or wake-all regression multiplies
+  this point's wall-clock long before any test notices.  Single run (no
+  repeats): at ~10 s the baseline is far above scheduler noise.
 
 Wall-clock comparisons across machines are noisy, which is why CI runs
 this as a *non-blocking* step: a failure is a flag for a human, not a
@@ -39,8 +45,12 @@ def main(argv=None) -> int:
     p.add_argument("--repeats", type=int, default=3,
                    help="measured runs (best is compared; 1 warm-up first)")
     p.add_argument("--record", default=str(ROOT / "BENCH_cluster_scaling.json"))
+    p.add_argument("--serving-record", default=str(ROOT / "BENCH_serving.json"))
+    p.add_argument("--skip-serving", action="store_true",
+                   help="cluster-scaling tripwire only")
     args = p.parse_args(argv)
 
+    failed = False
     with open(args.record) as f:
         record = json.load(f)
     row = next((r for r in record["rows"] if r["nodes"] == args.nodes), None)
@@ -72,8 +82,38 @@ def main(argv=None) -> int:
               f"the committed baseline (limit {args.factor}x).  The DES hot "
               f"path has regressed; profile _run_virtual before merging.",
               file=sys.stderr, flush=True)
-        return 1
-    return 0
+        failed = True
+
+    if not args.skip_serving:
+        failed |= _serving_tripwire(args.serving_record, args.factor)
+    return 1 if failed else 0
+
+
+def _serving_tripwire(record_path: str, factor: float) -> bool:
+    """Re-run the serving million-sweep smoke point; True on regression."""
+    try:
+        with open(record_path) as f:
+            serving = json.load(f)
+        srow = serving["million_sweep"]["rows"][0]
+    except (OSError, KeyError, IndexError):
+        print("perf-smoke: no committed serving million-sweep baseline; "
+              "skipping the serving tripwire", flush=True)
+        return False
+    from benchmarks.serving import million_point
+    point = million_point(srow.get("nominal_requests", srow["requests"]),
+                          srow["servers"])
+    wall, sbase = point["wall_s"], srow["wall_s"]
+    print(f"perf-smoke: serving {point['requests']}-request "
+          f"{point['servers']}-server point wall {wall:.3f}s "
+          f"({point['requests_per_wall_s']} req/s) vs committed baseline "
+          f"{sbase:.3f}s", flush=True)
+    if sbase > 0 and wall > factor * sbase:
+        print(f"perf-smoke: REGRESSION — serving point {wall / sbase:.1f}x "
+              f"slower than the committed baseline (limit {factor}x).  The "
+              f"arrival front end has regressed; profile the batched "
+              f"ingestion path before merging.", file=sys.stderr, flush=True)
+        return True
+    return False
 
 
 if __name__ == "__main__":
