@@ -46,10 +46,13 @@ import math
 
 import numpy as np
 
+from repro.configs import regions as geo_regions
 from repro.core import ChunkStore, Festivus, InMemoryObjectStore, MetadataStore
 from repro.core import perfmodel as pm
-from repro.serve import (AutoscalePolicy, Spike, TileFleet, diurnal_spikes,
-                         flash_crowd_spikes, tile_universe, zipf_spike_trace)
+from repro.serve import (AutoscalePolicy, GeoTileFleet, Spike, TileFleet,
+                         continental_universes, diurnal_spikes,
+                         flash_crowd_spikes, geo_trace, tile_universe,
+                         zipf_spike_trace)
 
 ROOT = "bucket"
 #: serving SLOs the rows are scored against (benchmark-level targets, not
@@ -72,6 +75,58 @@ class WorldSpec:
     #: the CDN-role tier for the edge_cache section (per-edge, in front
     #: of the whole fleet; ~1/3 of the pyramid's total tile bytes)
     edge_cache_bytes: int = 24 * pm.MiB
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeScenario:
+    """One serving scenario: a world plus the trace family drawn over it.
+
+    Every section that serves a given world derives its universe, its
+    durations, and its traces from one of these — the spike sections, the
+    million sweep, the geo sweep, and the perf-smoke tripwires all call
+    the same builder, so their world/trace configs cannot silently drift
+    apart (they used to be re-derived per section, by hand).
+    """
+
+    world: WorldSpec
+    base_rps: float
+    alpha: float = 1.1
+    seed: int = 0
+    #: headroom so a drawn trace never lands under a nominal count
+    headroom: float = 1.004
+
+    @property
+    def shape(self):
+        return (self.world.composite_hw, self.world.composite_hw,
+                self.world.bands)
+
+    def universe(self):
+        return tile_universe(self.shape, self.world.pyramid_levels,
+                             self.world.tile_px)
+
+    def duration_for(self, requests: int) -> float:
+        """Trace duration whose expected draw covers `requests` arrivals."""
+        return requests * self.headroom / self.base_rps
+
+    def trace(self, duration_s: float, *, spikes=(), formats=None,
+              base_rps: float = None):
+        return zipf_spike_trace(
+            self.universe(), duration_s,
+            self.base_rps if base_rps is None else base_rps,
+            alpha=self.alpha, spikes=spikes, seed=self.seed, formats=formats)
+
+    def geo_universes(self, regions=geo_regions.REGIONS):
+        """Per-continent tile views (shared overview, split lower levels)."""
+        return continental_universes(self.shape, self.world.pyramid_levels,
+                                     self.world.tile_px, regions)
+
+    def multi_continent_trace(self, duration_s: float,
+                              regions=geo_regions.REGIONS):
+        """The geo twin of :meth:`trace`: `base_rps` total offered load,
+        split evenly across the continents' own universes."""
+        return geo_trace(self.geo_universes(regions), duration_s,
+                         self.base_rps / len(regions), alpha=self.alpha,
+                         seed=self.seed)
 
 
 def _build_world(spec: WorldSpec, seed: int = 0):
@@ -140,6 +195,10 @@ MILLION_WORLD = WorldSpec(composite_hw=256, chunk_px=64, bands=1,
                           cache_bytes=128 * 1024, edge_cache_bytes=0)
 MILLION_BASE_RPS = 20000.0
 MILLION_SEED = 5
+#: the one scenario behind the million sweep, the geo sweep, and both of
+#: their perf-smoke tripwires
+MILLION_SCENARIO = ServeScenario(MILLION_WORLD, base_rps=MILLION_BASE_RPS,
+                                 seed=MILLION_SEED)
 
 
 def million_point(requests: int, servers: int, *, _serve_fn=None) -> dict:
@@ -151,13 +210,10 @@ def million_point(requests: int, servers: int, *, _serve_fn=None) -> dict:
     smoke-sized point through this same function and compares its
     ``wall_s`` against the committed record — keep it deterministic.
     """
-    spec = MILLION_WORLD
-    universe = tile_universe(
-        (spec.composite_hw, spec.composite_hw, spec.bands),
-        spec.pyramid_levels, spec.tile_px)
-    duration = requests * 1.004 / MILLION_BASE_RPS
-    trace = zipf_spike_trace(universe, duration, MILLION_BASE_RPS,
-                             alpha=1.1, seed=MILLION_SEED)
+    sc = MILLION_SCENARIO
+    spec = sc.world
+    duration = sc.duration_for(requests)
+    trace = sc.trace(duration)
     rep = (_serve_fn or _serve)(spec, trace, servers, seed=MILLION_SEED)
     sim = rep.cluster.simulator
     wall = sim.get("wall_s", 0.0)
@@ -177,6 +233,163 @@ def million_point(requests: int, servers: int, *, _serve_fn=None) -> dict:
         "wall_s": round(wall, 3),
         "requests_per_wall_s": (round(len(trace) / wall, 1)
                                 if wall > 0 else None),
+    }
+
+
+#: geo sweep shape: every continent of the calibration table, primary
+#: holding the authoritative bucket, and the four placement treatments
+#: at equal total fleet size (the §IV.A cost-parity condition)
+GEO_PRIMARY = "usa"
+GEO_POLICIES = (("single", "pin_primary"), ("geo", "pin_primary"),
+                ("geo", "full_mirror"), ("geo", "demand_k"))
+GEO_K = 3
+GEO_PROMOTE_AFTER = 3
+#: per-region edge tier: 2 tiles' worth — small enough to keep churning
+#: on a continent's working set, so repeats still reach the fleet and
+#: the placement policies stay observable behind the edges
+GEO_EDGE_CACHE_BYTES = 2 * 64 * 64 * 4
+
+
+def _geo_policy_name(routing: str, placement: str) -> str:
+    return "single_region" if routing == "single" else f"geo_{placement}"
+
+
+def geo_point(requests: int, servers_per_region: int, *,
+              routing: str = "geo", placement: str = "demand_k",
+              _world=None, _trace=None):
+    """One geo-serving run on the million scenario's world: ~`requests`
+    arrivals from all continents (MILLION_BASE_RPS total, split evenly)
+    against per-region fleets — or, for ``routing="single"``, the same
+    total fleet concentrated in the primary region.
+
+    Returns ``(report, row)``.  `tools/perf_smoke.py` re-runs the
+    smoke-sized demand_k point through this same function and compares
+    its ``wall_s`` against the committed record — keep it deterministic.
+    """
+    sc = MILLION_SCENARIO
+    regions = geo_regions.REGIONS
+    duration = sc.duration_for(requests)
+    trace = (_trace if _trace is not None
+             else sc.multi_continent_trace(duration))
+    inner, meta = (_world if _world is not None
+                   else _build_world(sc.world, seed=sc.seed))
+    if routing == "single":
+        servers = {GEO_PRIMARY: servers_per_region * len(regions)}
+    else:
+        servers = {r: servers_per_region for r in regions}
+    fleet = GeoTileFleet(inner, meta, root=ROOT, servers_by_region=servers,
+                         regions=regions, primary=GEO_PRIMARY,
+                         routing=routing, placement=placement,
+                         k=GEO_K, promote_after=GEO_PROMOTE_AFTER,
+                         tile_px=sc.world.tile_px,
+                         cache_bytes=sc.world.cache_bytes,
+                         edge_cache_bytes=GEO_EDGE_CACHE_BYTES)
+    rep = fleet.run(trace)
+    sim = rep.cluster.simulator
+    # same-simulation proof: one queue completed every region's forwarded
+    # requests, and (with >1 fleet) the regional pools' completion windows
+    # overlap in virtual time — the policies were compared inside one DES
+    # per run, not stitched across runs
+    windows = {}
+    for tid, t in rep.cluster.completion_times.items():
+        region = tid.split(":")[1]
+        lo, hi = windows.get(region, (t, t))
+        windows[region] = (min(lo, t), max(hi, t))
+    overlap = (len(windows) < 2 or
+               max(lo for lo, _ in windows.values())
+               < min(hi for _, hi in windows.values()))
+    forwarded = rep.cluster.queue_stats["completed"]
+    row = {
+        "policy": _geo_policy_name(routing, placement),
+        "routing": routing,
+        "placement": placement,
+        "servers_total": rep.servers_total,
+        "servers_by_region": rep.servers_by_region,
+        "requests": rep.requests,
+        "nominal_requests": requests,
+        "completed": rep.completed,
+        "all_served": rep.all_served,
+        "p50_ms": _ms(rep.p50_s),
+        "p99_ms": _ms(rep.p99_s),
+        "mean_ms": _ms(rep.mean_s),
+        "max_ms": _ms(rep.max_s),
+        "per_continent": {
+            creg: {"requests": d["requests"],
+                   "serving_region": d["serving_region"],
+                   "p50_ms": _ms(d["p50_s"]),
+                   "p99_ms": _ms(d["p99_s"])}
+            for creg, d in rep.per_region.items()},
+        "hit_rate": round(rep.hit_rate, 4),
+        "edge_hit_rate": round(rep.edge_hit_rate, 4),
+        "remote_reads": rep.remote_reads,
+        "promotions": rep.promotions,
+        "egress_GB": round(rep.egress_bytes / 1e9, 6),
+        "read_egress_usd": round(rep.read_egress_usd, 9),
+        "replication_GB": round(rep.replication_bytes / 1e9, 6),
+        "replication_usd": round(rep.replication_usd, 9),
+        "node_cost_usd": round(rep.node_cost_usd, 9),
+        "cost_usd": round(rep.cost_usd, 9),
+        "same_simulation": {
+            "queue_completed": forwarded,
+            "edge_absorbed": rep.requests - forwarded,
+            "accounted": (forwarded + (rep.requests - forwarded)
+                          == rep.completed),
+            "region_windows_overlap": overlap,
+        },
+        "events": sim["events"],
+        "wall_s": round(sim.get("wall_s", 0.0), 3),
+    }
+    return rep, row
+
+
+def _geo_sweep(requests: int, servers_per_region: int, sim_totals=None):
+    """The placement-policy sweep at one trace size: same world, same
+    multi-continent trace, equal total servers across every policy."""
+    sc = MILLION_SCENARIO
+    duration = sc.duration_for(requests)
+    trace = sc.multi_continent_trace(duration)
+    world = _build_world(sc.world, seed=sc.seed)
+    rows = []
+    for routing, placement in GEO_POLICIES:
+        rep, row = geo_point(requests, servers_per_region, routing=routing,
+                             placement=placement, _world=world, _trace=trace)
+        if sim_totals is not None:
+            des = rep.cluster.simulator
+            sim_totals["wall_s"] += des.get("wall_s", 0.0)
+            sim_totals["events"] += des.get("events", 0)
+            sim_totals["runs"] += 1
+        rows.append(row)
+    single = rows[0]
+    geo_rows = rows[1:]
+    for row in geo_rows:
+        row["beats_single_p99"] = row["p99_ms"] < single["p99_ms"]
+        row["beats_single_per_continent"] = all(
+            d["p99_ms"] < single["per_continent"][creg]["p99_ms"]
+            for creg, d in row["per_continent"].items())
+        row["cost_vs_single_x"] = round(
+            row["cost_usd"] / single["cost_usd"], 4)
+    best = min(geo_rows, key=lambda r: r["p99_ms"])
+    # the acceptance verdict: at least one replica placement beats the
+    # single-region baseline's global p99 (and every continent's p99) at
+    # egress-inclusive cost within the parity band
+    verdict = {
+        "winner": best["policy"],
+        "single_region_p99_ms": single["p99_ms"],
+        "winner_p99_ms": best["p99_ms"],
+        "p99_speedup_x": round(single["p99_ms"] / best["p99_ms"], 3),
+        "winner_cost_vs_single_x": best["cost_vs_single_x"],
+        "beats_single_p99": best["beats_single_p99"],
+        "beats_single_per_continent": best["beats_single_per_continent"],
+        "cost_within_1_2x": best["cost_vs_single_x"] <= 1.2,
+    }
+    return {
+        "nominal_requests": requests,
+        "requests": rows[0]["requests"],
+        "servers_per_region": servers_per_region,
+        "servers_total": rows[0]["servers_total"],
+        "duration_s": round(duration, 3),
+        "rows": rows,
+        "verdict": verdict,
     }
 
 
@@ -276,12 +489,9 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         million_full: bool = True,
         out_path: str = "BENCH_serving.json") -> dict:
     spec = WorldSpec()
+    scenario = ServeScenario(spec, base_rps=base_rps, alpha=alpha, seed=seed)
     spike = Spike(duration_s / 3.0, duration_s / 2.0, max(spike_mults))
-    universe = tile_universe(
-        (spec.composite_hw, spec.composite_hw, spec.bands),
-        spec.pyramid_levels, spec.tile_px)
-    trace = zipf_spike_trace(universe, duration_s, base_rps, alpha=alpha,
-                             spikes=(spike,), seed=seed)
+    trace = scenario.trace(duration_s, spikes=(spike,))
 
     #: DES cost across every simulation this benchmark runs (each report
     #: carries its engine's wall-clock/event accounting)
@@ -313,9 +523,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
             # trace, same fleet, deterministic DES) — don't pay it twice
             m_trace, rep = trace, fleet_reps[mid_fleet]
         else:
-            m_trace = zipf_spike_trace(universe, duration_s, base_rps,
-                                       alpha=alpha, spikes=(m_spike,),
-                                       seed=seed)
+            m_trace = scenario.trace(duration_s, spikes=(m_spike,))
             rep = serve(spec, m_trace, mid_fleet)
         fixed_by_mult[mult] = (m_spike, m_trace, rep)
         rows.append(_row(rep, servers=mid_fleet, spike_mult=mult,
@@ -439,16 +647,35 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "rows": mrows,
     }
 
+    # -- geo serving: multi-continent traffic vs replica placement ----------
+    # same scenario as the million sweep (one builder, no drift); the
+    # smoke-sized sweep always runs — its demand_k row is the perf-smoke
+    # geo tripwire's baseline; the 10^6-request sweep (the headline) runs
+    # on full regenerations only
+    geo_sweeps = [_geo_sweep(100_000, 64, sim_totals=sim_totals)]
+    if million_full:
+        geo_sweeps.append(_geo_sweep(1_000_000, 64, sim_totals=sim_totals))
+    geo_serving = {
+        "scenario": {"world": dataclasses.asdict(MILLION_WORLD),
+                     "base_rps_total": MILLION_BASE_RPS,
+                     "alpha": 1.1, "seed": MILLION_SEED},
+        "regions": geo_regions.region_table(),
+        "primary": GEO_PRIMARY,
+        "k": GEO_K,
+        "promote_after": GEO_PROMOTE_AFTER,
+        "edge_cache_bytes": GEO_EDGE_CACHE_BYTES,
+        "node_cost_per_hr_usd": pm.NODE_COST_PER_HR_USD,
+        "smoke_only": not million_full,
+        "sweeps": geo_sweeps,
+    }
+
     # -- trace shapes: diurnal cycle + flash crowd at the mid fleet ---------
     ramp_spikes = diurnal_spikes(duration_s, duration_s, 12.0, steps=8)
-    ramp_trace = zipf_spike_trace(universe, duration_s, base_rps,
-                                  alpha=alpha, spikes=ramp_spikes, seed=seed)
+    ramp_trace = scenario.trace(duration_s, spikes=ramp_spikes)
     crowd_spikes = flash_crowd_spikes(duration_s / 3.0, 16.0,
                                       peak_s=duration_s / 6.0,
                                       decay_s=duration_s / 12.0)
-    crowd_trace = zipf_spike_trace(universe, duration_s, base_rps,
-                                   alpha=alpha, spikes=crowd_spikes,
-                                   seed=seed)
+    crowd_trace = scenario.trace(duration_s, spikes=crowd_spikes)
     shape_rows = []
     shape_reps = {}
     for name, shape, s_trace in (("diurnal", ramp_spikes, ramp_trace),
@@ -481,11 +708,9 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
     # trace has the exact timing/tile sequence of its raw twin — the only
     # delta is what goes on the wire and the encode bill
     fmt_mix = (("png", 0.35), ("jpeg", 0.65))
-    calm_trace = zipf_spike_trace(universe, duration_s, base_rps,
-                                  alpha=alpha, seed=seed)
+    calm_trace = scenario.trace(duration_s)
     raw_rep = serve(spec, calm_trace, mid_fleet)
-    enc_trace = zipf_spike_trace(universe, duration_s, base_rps, alpha=alpha,
-                                 seed=seed, formats=fmt_mix)
+    enc_trace = scenario.trace(duration_s, formats=fmt_mix)
     enc_rep = serve(spec, enc_trace, mid_fleet)
     encode_model = {
         "formats": {name: {"bytes_per_raw_byte": f.bytes_per_raw_byte,
@@ -570,6 +795,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "autoscaling": autoscaling,
         "edge_cache": edge_cache,
         "million_sweep": million_sweep,
+        "geo_serving": geo_serving,
         "trace_shapes": trace_shapes,
         "encode_model": encode_model,
         "predictive_scaling": predictive_scaling,
@@ -633,6 +859,23 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
                   f"({r['events_per_request']}/req) in {r['wall_s']}s "
                   f"({r['requests_per_wall_s']} req/s), hit "
                   f"{r['hit_rate']:.1%}, p99 {r['p99_ms']} ms")
+        for sweep in geo_sweeps:
+            print(f"geo serving: {sweep['requests']} reqs, "
+                  f"{sweep['servers_total']} servers")
+            for r in sweep["rows"]:
+                vs = ("" if r["routing"] == "single" else
+                      f" ({r['cost_vs_single_x']}x cost, beats "
+                      f"p99={r['beats_single_p99']})")
+                print(f"  {r['policy']:>16}: p99 {r['p99_ms']} ms, "
+                      f"remote {r['remote_reads']}, "
+                      f"egress ${r['read_egress_usd']:.4f}, "
+                      f"cost ${r['cost_usd']:.4f}{vs}")
+            v = sweep["verdict"]
+            print(f"  verdict: {v['winner']} p99 "
+                  f"{v['single_region_p99_ms']} -> {v['winner_p99_ms']} ms "
+                  f"({v['p99_speedup_x']}x) at "
+                  f"{v['winner_cost_vs_single_x']}x cost "
+                  f"(within 1.2x: {v['cost_within_1_2x']})")
         for r in shape_rows:
             print(f"trace shape {r['shape']}: {r['requests']} reqs, "
                   f"x{r['peak_multiplier']:.1f} peak over {r['windows']} "

@@ -21,7 +21,7 @@ import random
 import tempfile
 import threading
 import time
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core import perfmodel
 
@@ -399,3 +399,111 @@ class VirtualTimeStore(ObjectStore):
     def bandwidth_bytes_per_s(self, concurrency: Optional[int] = None) -> float:
         t = self.elapsed_virtual_s(concurrency)
         return self.bytes_served / t if t > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Replica placement (multi-region object layout)
+# ---------------------------------------------------------------------------
+
+class ReplicaMap:
+    """Which regions hold a copy of each object, and where a reader pulls.
+
+    Key-generic: works over chunkstore chunk keys, manifest keys, or whole
+    objects — the map never touches the data, it only answers
+    :meth:`locate`.  Three placement policies (the classic trio):
+
+    * ``pin_primary`` — every object lives only in the primary region;
+      every remote read crosses a WAN link (the single-region layout,
+      made explicit).
+    * ``full_mirror`` — every object is replicated to every region;
+      every read is local, at maximal replication cost.
+    * ``demand_k`` — objects start at the primary; a region that reads an
+      object `promote_after` times earns a local replica, up to `k`
+      copies per object (demand-driven placement off observed per-region
+      read heat).
+
+    ``locate(key, reader_region)`` returns the replica region a reader in
+    `reader_region` should pull from — the nearest-by-RTT holder, via the
+    ``nearest`` callable (defaults to :func:`repro.configs.regions.nearest_region`)
+    — and records read heat.  Promotion is returned (not silently
+    applied) as the second element so the caller can bill the replication
+    copy: ``locate_and_promote`` folds both.
+    """
+
+    POLICIES = ("pin_primary", "full_mirror", "demand_k")
+
+    def __init__(self, regions, primary: str, *, policy: str = "pin_primary",
+                 k: int = 2, promote_after: int = 3, nearest=None):
+        self.regions = tuple(regions)
+        if primary not in self.regions:
+            raise ValueError(f"primary {primary!r} not in regions "
+                             f"{self.regions}")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r} "
+                             f"(known: {self.POLICIES})")
+        if not 1 <= k <= len(self.regions):
+            raise ValueError(f"k={k} outside [1, {len(self.regions)}]")
+        self.primary = primary
+        self.policy = policy
+        self.k = k
+        self.promote_after = promote_after
+        if nearest is None:
+            from repro.configs.regions import nearest_region
+            nearest = nearest_region
+        self._nearest = nearest
+        #: key -> set of regions holding a replica (lazily populated;
+        #: absent key == primary only / all, per policy)
+        self._replicas: Dict[str, set] = {}
+        #: (key, region) -> reads observed (demand_k heat)
+        self._heat: Dict[Tuple[str, str], int] = {}
+        self.promotions = 0
+
+    def holders(self, key: str):
+        """Regions currently holding a replica of `key` (sorted)."""
+        if self.policy == "full_mirror":
+            return sorted(self.regions)
+        extra = self._replicas.get(key)
+        if not extra:
+            return [self.primary]
+        return sorted(extra | {self.primary})
+
+    def read_heat(self, key: str, region: str) -> int:
+        return self._heat.get((key, region), 0)
+
+    def locate(self, key: str, reader_region: str):
+        """(source region, promote?) for a read of `key` from
+        `reader_region`.  Records heat; ``promote`` is True when this
+        read crosses demand_k's threshold and earns `reader_region` a
+        local replica — the *caller* applies it via :meth:`promote` so it
+        can bill the copy bytes."""
+        if reader_region not in self.regions:
+            raise ValueError(f"reader region {reader_region!r} not in "
+                             f"{self.regions}")
+        holders = self.holders(key)
+        src = (reader_region if reader_region in holders
+               else self._nearest(reader_region, holders))
+        if self.policy != "demand_k" or src == reader_region:
+            return src, False
+        hk = (key, reader_region)
+        heat = self._heat.get(hk, 0) + 1
+        self._heat[hk] = heat
+        promote = heat >= self.promote_after and len(holders) < self.k
+        return src, promote
+
+    def promote(self, key: str, region: str) -> None:
+        """Grant `region` a replica of `key` (the demand_k copy)."""
+        self._replicas.setdefault(key, set()).add(region)
+        self.promotions += 1
+
+    def locate_and_promote(self, key: str, reader_region: str):
+        """(source region, promoted?) — locate, applying any earned
+        promotion immediately.  The returned source is still the
+        *pre-promotion* holder: this read's bytes cross the WAN; the
+        replica serves the next one."""
+        src, promote = self.locate(key, reader_region)
+        if promote:
+            self.promote(key, reader_region)
+        return src, promote
+
+    def replica_count(self, key: str) -> int:
+        return len(self.holders(key))

@@ -215,6 +215,17 @@ class SharedFabric:
     epoch counts that zone's reallocation generations.  :meth:`allocations`
     (a full rate dict) is kept for callers and tests that want the
     from-scratch view; it is served from the same cache.
+
+    **Link domains.**  Beyond the integer zones, :meth:`add_link`
+    registers named *fixed-capacity* domains — the inter-region WAN links
+    of the multi-region topology.  A link domain water-fills exactly like
+    a zone (same incremental dirty-set discipline, same changed-rate
+    contract) but its capacity is the provisioned link bandwidth rather
+    than the Table III reader-count curve: a WAN pipe does not get faster
+    when more readers pile on.  Cross-region reads route their flows to
+    the link domain of the (reader region, data region) pair, so WAN
+    contention emerges from the same water-filling the intra-zone fabric
+    uses — no global recomputation, no second allocator.
     """
 
     def __init__(self, model: Optional[FabricModel] = None, zones: int = 1):
@@ -222,20 +233,49 @@ class SharedFabric:
             raise ValueError(f"zones must be >= 1, got {zones}")
         self.model = model if model is not None else FABRIC_MODEL
         self.zones = zones
-        #: flow key -> (zone, demand bytes/s)
-        self._flows: Dict[Any, Tuple[int, float]] = {}
-        #: zone -> {flow key -> demand}, insertion-ordered per zone (the
+        #: flow key -> (domain, demand bytes/s); domain is an int zone or a
+        #: registered link key
+        self._flows: Dict[Any, Tuple[Any, float]] = {}
+        #: domain -> {flow key -> demand}, insertion-ordered per domain (the
         #: order water_fill sees, so incremental == from-scratch exactly)
-        self._zone_flows: Dict[int, Dict[Any, float]] = {}
-        #: cached granted rate per flow (valid for non-dirty zones)
+        self._zone_flows: Dict[Any, Dict[Any, float]] = {}
+        #: cached granted rate per flow (valid for non-dirty domains)
         self._rates: Dict[Any, float] = {}
         self._dirty_zones: set = set()
-        self._zone_epochs: Dict[int, int] = {}
+        self._zone_epochs: Dict[Any, int] = {}
+        #: link key -> fixed capacity bytes/s (domains water-filled against
+        #: a provisioned cap instead of the Table III curve)
+        self._link_caps: Dict[Any, float] = {}
 
-    def add_flow(self, key, zone: int, demand_bytes_per_s: float) -> None:
+    def add_link(self, key, capacity_bytes_per_s: float) -> None:
+        """Register fixed-capacity domain `key` (an inter-region link).
+
+        Flows added with this key as their zone water-fill against
+        `capacity_bytes_per_s` instead of the reader-count curve.
+        Idempotent for an identical capacity; re-registering a link with a
+        different capacity is an error (it would silently re-price
+        in-flight transfers)."""
+        if isinstance(key, int):
+            raise TypeError(f"link keys must not be ints (zone ids): {key!r}")
+        cap = float(capacity_bytes_per_s)
+        if cap <= 0:
+            raise ValueError(f"link {key!r} capacity must be > 0, got {cap}")
+        prev = self._link_caps.get(key)
+        if prev is not None and prev != cap:
+            raise ValueError(f"link {key!r} already registered at {prev} B/s")
+        self._link_caps[key] = cap
+
+    def _domain(self, zone) -> Any:
+        if isinstance(zone, int):
+            return zone % self.zones
+        if zone not in self._link_caps:
+            raise KeyError(f"unregistered link domain {zone!r}")
+        return zone
+
+    def add_flow(self, key, zone, demand_bytes_per_s: float) -> None:
         if key in self._flows:
             raise ValueError(f"duplicate fabric flow {key!r}")
-        z = zone % self.zones
+        z = self._domain(zone)
         self._flows[key] = (z, float(demand_bytes_per_s))
         self._zone_flows.setdefault(z, {})[key] = float(demand_bytes_per_s)
         self._dirty_zones.add(z)
@@ -246,21 +286,24 @@ class SharedFabric:
         self._rates.pop(key, None)
         self._dirty_zones.add(z)
 
-    def readers(self, zone: Optional[int] = None) -> int:
+    def readers(self, zone=None) -> int:
         if zone is None:
             return len(self._flows)
         return len(self._zone_flows.get(zone, ()))
 
-    def zone_epoch(self, zone: int) -> int:
+    def zone_epoch(self, zone) -> int:
         """How many times `zone` has been re-water-filled (diagnostic)."""
-        return self._zone_epochs.get(zone % self.zones, 0)
+        z = zone % self.zones if isinstance(zone, int) else zone
+        return self._zone_epochs.get(z, 0)
 
-    def _reflow_zone(self, z: int, changed: Dict[Any, float]) -> None:
+    def _reflow_zone(self, z, changed: Dict[Any, float]) -> None:
         flows = self._zone_flows.get(z, {})
         self._zone_epochs[z] = self._zone_epochs.get(z, 0) + 1
         if not flows:
             return
-        cap = self.model.zone_capacity_bytes_per_s(len(flows))
+        cap = self._link_caps.get(z)
+        if cap is None:
+            cap = self.model.zone_capacity_bytes_per_s(len(flows))
         granted = water_fill(list(flows.values()), cap)
         for key, rate in zip(flows, granted):
             if self._rates.get(key) != rate:
@@ -268,12 +311,19 @@ class SharedFabric:
                 changed[key] = rate
 
     def reflow(self) -> Dict[Any, float]:
-        """Re-water-fill the zones whose membership changed since the last
-        call; returns ``{flow key: new rate}`` for exactly the flows whose
-        granted rate actually changed (a satisfied small flow that keeps
-        its full demand through a membership change is *not* reported)."""
+        """Re-water-fill the domains whose membership changed since the
+        last call; returns ``{flow key: new rate}`` for exactly the flows
+        whose granted rate actually changed (a satisfied small flow that
+        keeps its full demand through a membership change is *not*
+        reported).  Zones reflow before link domains, each group in
+        deterministic order — with no links registered the iteration is
+        exactly the pre-link ``sorted(int zones)``, preserving
+        single-region event order bit-for-bit."""
         changed: Dict[Any, float] = {}
-        for z in sorted(self._dirty_zones):
+        order = sorted(self._dirty_zones,
+                       key=lambda d: (1, str(d)) if not isinstance(d, int)
+                       else (0, d))
+        for z in order:
             self._reflow_zone(z, changed)
         self._dirty_zones.clear()
         return changed

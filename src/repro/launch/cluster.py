@@ -395,6 +395,8 @@ class Worker:
         #: True while counted in the engine's warming-by-pool view counter
         self._view_warming = False
         self._pending_compute_s = 0.0
+        #: (link domain, extra tail s, $/GB) the current task's I/O rides
+        self._pending_route: Optional[Tuple[Any, float, float]] = None
         #: the task id currently being executed (heartbeat chain target)
         self._current: Optional[str] = None
         #: True while a claimed task's FINISH is outstanding
@@ -410,6 +412,23 @@ class Worker:
     def charge_compute(self, seconds: float) -> None:
         """Bill virtual per-task compute time (no-op in real-time mode)."""
         self._pending_compute_s += float(seconds)
+
+    def route_io(self, domain, extra_tail_s: float = 0.0,
+                 egress_usd_per_gb: float = 0.0) -> None:
+        """Route this task's I/O over fabric link `domain` (a key
+        registered via :attr:`ClusterConfig.fabric_links`) instead of the
+        worker's home zone — the cross-region read path.  The transfer
+        then water-fills against the link's fixed capacity, pays
+        `extra_tail_s` once (the link RTT as first-byte tail), and bills
+        `egress_usd_per_gb` on its drained bytes into the report's egress
+        accounting.  Scoped to the current task; a task that drains no
+        bytes (cache hit) pays nothing."""
+        self._pending_route = (domain, float(extra_tail_s),
+                               float(egress_usd_per_gb))
+
+    def _drain_route(self) -> Optional[Tuple[Any, float, float]]:
+        r, self._pending_route = self._pending_route, None
+        return r
 
     def _drain_compute(self) -> float:
         s, self._pending_compute_s = self._pending_compute_s, 0.0
@@ -451,6 +470,15 @@ class ClusterConfig:
     #: number of fabric zones; workers are assigned round-robin and each
     #: zone's capacity is shared only by its own readers
     zones: int = 1
+    #: pool name -> fabric zone: pin every worker of a pool into one zone
+    #: (a per-region pool living in its region's fabric) instead of the
+    #: round-robin `index % zones` interleave.  Pools absent from the map
+    #: — and all workers when None — keep the legacy assignment.
+    pool_zones: Optional[Dict[str, int]] = None
+    #: named fixed-capacity fabric domains (inter-region WAN links):
+    #: {link key: capacity bytes/s}, registered on the SharedFabric so
+    #: handlers can route cross-region reads via Worker.route_io
+    fabric_links: Optional[Dict[Any, float]] = None
     #: virtual seconds charged per metadata-KV op (stat/dirent/manifest
     #: against the shared store) to the issuing worker's clock
     meta_op_latency_s: float = perfmodel.METADATA_OP_LATENCY_S
@@ -525,6 +553,11 @@ class ClusterReport:
     #: offsets in thread mode).  With run()'s `arrivals` this is what a
     #: serving tier turns into per-request latency.
     completion_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: cross-region reads' WAN egress: bytes routed over inter-region
+    #: links (Worker.route_io) and their Table I dollar bill — folded
+    #: into a serving sweep's egress-inclusive cost_usd
+    egress_bytes: int = 0
+    egress_usd: float = 0.0
     #: DES cost accounting (virtual-time runs only): wall_s (real seconds
     #: the event loop took), events (events processed), events_per_s,
     #: io_pushes (_IO_DONE predictions pushed), reflows (fabric
@@ -609,6 +642,9 @@ class ClusterEngine:
         self._node_cap = perfmodel.node_cap_bytes_per_s(self.config.vcpus)
         self._joined = 0
         self._left = 0
+        #: cross-region egress accounting (Worker.route_io drains)
+        self._egress_bytes = 0
+        self._egress_usd = 0.0
         #: DES cost diagnostics, filled by _run_virtual (empty under threads)
         self._sim: Dict[str, Any] = {}
 
@@ -635,10 +671,13 @@ class ClusterEngine:
         mount = MountStore(self.inner, model=self._store_model)
         mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
         fs = Festivus(mount, meta=mmeta, config=self._fest_cfg)
+        pool = (pool_override if pool_override is not None
+                else self._pool_of(index))
+        zone = index % self.config.zones
+        if self.config.pool_zones is not None and pool in self.config.pool_zones:
+            zone = self.config.pool_zones[pool] % self.config.zones
         return Worker(index, mount, fs, perfmodel.WorkerClock(),
-                      zone=index % self.config.zones, meta=mmeta,
-                      pool=(pool_override if pool_override is not None
-                            else self._pool_of(index)))
+                      zone=zone, meta=mmeta, pool=pool)
 
     # -- public API -----------------------------------------------------------
     def run(self, tasks: Dict[str, Any], handler: Handler,
@@ -856,6 +895,9 @@ class ClusterEngine:
         fabric = (perfmodel.SharedFabric(self.config.fabric,
                                          zones=self.config.zones)
                   if self.config.fabric is not None else None)
+        if fabric is not None and self.config.fabric_links:
+            for link, cap in self.config.fabric_links.items():
+                fabric.add_link(link, cap)
         dirty = False
         pred_seq = 0     # engine-unique _IO_DONE tokens (never reused)
         stale_io = 0     # superseded predictions still resident in the heap
@@ -1215,6 +1257,18 @@ class ClusterEngine:
             except Exception as e:  # noqa: BLE001 — a worker never dies
                 error = f"{type(e).__name__}: {e}"
             io_s, nbytes, tail_s = self._drain_task(worker)
+            route = worker._drain_route()
+            domain = worker.zone
+            if route is not None and nbytes > 0:
+                # cross-region read: the transfer contends on the named
+                # WAN link instead of the home zone, pays the link RTT
+                # once as first-byte tail, and bills egress on its bytes.
+                # A routed task that drained no bytes (cache hit) pays
+                # nothing — route dropped above.
+                domain, extra_tail_s, usd_per_gb = route
+                tail_s += extra_tail_s
+                self._egress_bytes += nbytes
+                self._egress_usd += usd_per_gb * (nbytes / 1e9)
             if self.config.heartbeat_s:
                 push(self._now + self.config.heartbeat_s, _HEARTBEAT,
                      widx, task.task_id)
@@ -1223,7 +1277,7 @@ class ClusterEngine:
                            demand=nbytes / io_s, tail_s=tail_s,
                            now=self._now)
                 flows[widx] = fl
-                fabric.add_flow(widx, worker.zone, fl.demand)
+                fabric.add_flow(widx, domain, fl.demand)
                 dirty = True
             else:
                 push(self._now + io_s + tail_s, _FINISH, widx,
@@ -1263,6 +1317,7 @@ class ClusterEngine:
             results=queue.results(), per_worker=per_worker,
             meta_ops=sum(r.meta_ops for r in per_worker),
             joined=self._joined, left=self._left,
+            egress_bytes=self._egress_bytes, egress_usd=self._egress_usd,
             completion_times=queue.completion_times(),
             simulator=dict(self._sim))
 

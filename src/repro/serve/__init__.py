@@ -18,6 +18,12 @@ from repro.serve.autoscale import (
     AutoscaleReport,
     ServeAutoscaler,
 )
+from repro.serve.geo import (
+    GeoServingReport,
+    GeoTileFleet,
+    RegionalAutoscalers,
+    serve_pool,
+)
 from repro.serve.tileserver import (
     EdgeCache,
     EdgeCacheStats,
@@ -34,8 +40,10 @@ from repro.serve.tileserver import (
 )
 from repro.serve.trace import (
     Spike,
+    continental_universes,
     diurnal_spikes,
     flash_crowd_spikes,
+    geo_trace,
     rate_at,
     tile_universe,
     zipf_spike_trace,
@@ -43,9 +51,11 @@ from repro.serve.trace import (
 
 __all__ = [
     "AutoscaleAction", "AutoscalePolicy", "AutoscaleReport", "EdgeCache",
-    "EdgeCacheStats", "ServeAutoscaler", "ServingReport", "Spike",
+    "EdgeCacheStats", "GeoServingReport", "GeoTileFleet",
+    "RegionalAutoscalers", "ServeAutoscaler", "ServingReport", "Spike",
     "TileCache", "TileCacheStats", "TileFleet", "TileRequest",
-    "TileResponse", "TileServer", "TileServerStats", "diurnal_spikes",
-    "flash_crowd_spikes", "rate_at", "tile_bounds", "tile_grid",
+    "TileResponse", "TileServer", "TileServerStats",
+    "continental_universes", "diurnal_spikes", "flash_crowd_spikes",
+    "geo_trace", "rate_at", "serve_pool", "tile_bounds", "tile_grid",
     "tile_universe", "zipf_spike_trace",
 ]

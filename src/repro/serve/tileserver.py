@@ -52,8 +52,11 @@ class TileRequest:
     web map's zoom z maps to ``pyramid_levels - z``.  `fmt` names the
     wire encoding (:data:`repro.core.perfmodel.TILE_FORMATS`): response
     bytes and a per-request encode CPU bill follow the format; the
-    default "raw" is the identity (ratio 1.0, zero cost).  ``slots``
-    because a million-request trace holds a million of these.
+    default "raw" is the identity (ratio 1.0, zero cost).  `region` tags
+    the client's source region/continent (see
+    :data:`repro.configs.regions.REGIONS`) — what a geo-aware fleet
+    routes on; the default "" is untagged (single-region traffic).
+    ``slots`` because a million-request trace holds a million of these.
     """
 
     t: float
@@ -62,6 +65,7 @@ class TileRequest:
     y: int
     array: str = "composite"
     fmt: str = "raw"
+    region: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +163,12 @@ class _ByteBoundedLRU:
 
     def __len__(self) -> int:
         return len(self._data)
+
+    def contains(self, key: Tuple) -> bool:
+        """Membership peek with no stats or recency side effects — for a
+        caller that must know *before* serving whether a request will
+        reach the backing store (the geo tier's replica routing)."""
+        return key in self._data
 
     @property
     def bytes_used(self) -> int:

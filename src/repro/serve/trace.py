@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -159,6 +159,7 @@ def zipf_spike_trace(universe: Sequence[Tuple[str, int, int, int]],
                      alpha: float = 1.1, spikes: Sequence[Spike] = (),
                      seed: int = 0,
                      formats: Optional[Sequence[Tuple[str, float]]] = None,
+                     region: str = "",
                      ) -> List[TileRequest]:
     """Deterministic Zipf-popularity trace with spike windows.
 
@@ -173,7 +174,8 @@ def zipf_spike_trace(universe: Sequence[Tuple[str, int, int, int]],
     `formats` optionally assigns each request an encode format, as
     ``(name, weight)`` pairs (e.g. ``(("png", 0.3), ("jpeg", 0.7))``);
     None leaves every request on the default raw format and draws no
-    extra random numbers.
+    extra random numbers.  `region` stamps every request with a client
+    source region (no extra draws; "" keeps the untagged legacy shape).
     """
     if not universe:
         raise ValueError("empty tile universe")
@@ -218,10 +220,75 @@ def zipf_spike_trace(universe: Sequence[Tuple[str, int, int, int]],
     if fmt_names is None:
         for t, k in zip(ts.tolist(), picks.tolist()):
             array, level, x, y = uni[k]
-            trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array))
+            trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array,
+                                     region=region))
     else:
         for t, k, fmt in zip(ts.tolist(), picks.tolist(), fmt_names):
             array, level, x, y = uni[k]
             trace.append(TileRequest(t=t, level=level, x=x, y=y, array=array,
-                                     fmt=fmt))
+                                     fmt=fmt, region=region))
     return trace
+
+
+def continental_universes(shape: Sequence[int], pyramid_levels: int,
+                          tile_px: int, regions: Sequence[str],
+                          array: str = "composite",
+                          ) -> Dict[str, List[Tuple[str, int, int, int]]]:
+    """Partition the tile universe into per-region (continental) views.
+
+    Clients on each continent browse *their own* part of the world: every
+    level below the coarsest is split into longitude bands — tile column
+    x belongs to ``regions[x * len(regions) // nx]`` — while the coarsest
+    level (the world overview every map session opens on) is shared by
+    all regions.  The per-region universes are what give per-region edge
+    caches genuinely distinct working sets: a Europe edge full of Europe
+    tiles cannot answer Asia's traffic.
+    """
+    if not regions:
+        raise ValueError("need at least one region")
+    if len(set(regions)) != len(regions):
+        raise ValueError(f"duplicate regions in {regions}")
+    out: Dict[str, List[Tuple[str, int, int, int]]] = {r: [] for r in regions}
+    nreg = len(regions)
+    for level in range(pyramid_levels + 1):
+        ny, nx = tile_grid(pyramid_level_shape(shape, level), tile_px)
+        for y in range(ny):
+            for x in range(nx):
+                tile = (array, level, x, y)
+                if level == pyramid_levels:
+                    for r in regions:
+                        out[r].append(tile)
+                else:
+                    out[regions[x * nreg // nx]].append(tile)
+    return out
+
+
+def geo_trace(universes: Dict[str, Sequence[Tuple[str, int, int, int]]],
+              duration_s: float, base_rps,
+              alpha: float = 1.1, spikes=None, seed: int = 0,
+              formats: Optional[Sequence[Tuple[str, float]]] = None,
+              ) -> List[TileRequest]:
+    """A multi-continent trace: one Zipf/spike trace per region, merged.
+
+    `universes` maps each client region to its tile universe (see
+    :func:`continental_universes`); `base_rps` is one rate for all
+    regions or a ``{region: rps}`` dict (continents differ in traffic);
+    `spikes` likewise one spike sequence for all or a per-region dict.
+    Each region draws an independent seeded trace over *its* universe
+    (own popularity permutation, own arrival process) and the results
+    merge by arrival time — so the blend is deterministic, and any
+    region's sub-trace is recoverable by filtering on ``req.region``.
+    """
+    traces: List[List[TileRequest]] = []
+    for i, region in enumerate(sorted(universes)):
+        rps = base_rps[region] if isinstance(base_rps, dict) else base_rps
+        if isinstance(spikes, dict):
+            sp = spikes.get(region, ())
+        else:
+            sp = spikes if spikes is not None else ()
+        traces.append(zipf_spike_trace(
+            universes[region], duration_s, rps, alpha=alpha, spikes=sp,
+            seed=seed + 7919 * (i + 1), formats=formats, region=region))
+    merged = [r for tr in traces for r in tr]
+    merged.sort(key=lambda r: r.t)
+    return merged

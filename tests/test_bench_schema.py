@@ -27,9 +27,9 @@ SCHEMAS = {
     },
     "BENCH_serving.json": {
         "top": ["bench", "world", "trace", "slo", "rows", "mixed_workload",
-                "million_sweep", "trace_shapes", "encode_model",
-                "predictive_scaling", "autoscaling", "edge_cache",
-                "simulator", "headline_p99_ms"],
+                "million_sweep", "geo_serving", "trace_shapes",
+                "encode_model", "predictive_scaling", "autoscaling",
+                "edge_cache", "simulator", "headline_p99_ms"],
         "row": ["servers", "requests", "spike_multiplier", "mixed",
                 "offered_rps", "hit_rate", "cache_evictions", "p50_ms",
                 "p90_ms", "p99_ms", "max_ms", "spike_p99_ms",
@@ -204,6 +204,93 @@ def test_serving_million_sweep_reaches_issue_scale():
     # per-event front end spent ~2 extra heap events per request on
     # arrival + wake-all alone
     assert full["events_per_request"] < 10.0
+
+
+#: every proof field the geo-serving writer emits per policy row —
+#: schema-guarded so writer drift fails CI
+GEO_ROW_KEYS = [
+    "policy", "routing", "placement", "servers_total", "servers_by_region",
+    "requests", "nominal_requests", "completed", "all_served", "p50_ms",
+    "p99_ms", "mean_ms", "max_ms", "per_continent", "hit_rate",
+    "edge_hit_rate", "remote_reads", "promotions", "egress_GB",
+    "read_egress_usd", "replication_GB", "replication_usd",
+    "node_cost_usd", "cost_usd", "same_simulation", "events", "wall_s",
+]
+
+GEO_CONTINENT_KEYS = ["requests", "serving_region", "p50_ms", "p99_ms"]
+
+GEO_VERDICT_KEYS = [
+    "winner", "single_region_p99_ms", "winner_p99_ms", "p99_speedup_x",
+    "winner_cost_vs_single_x", "beats_single_p99",
+    "beats_single_per_continent", "cost_within_1_2x",
+]
+
+
+def test_serving_geo_section_proves_issue_acceptance():
+    """Issue 7 acceptance: a multi-continent ~10^6-request sweep where at
+    least one replica placement beats the single-region baseline's global
+    p99 (and every continent's p99) at egress-inclusive cost within 1.2x,
+    with the per-continent breakdown and same-simulation proof fields —
+    plus the smoke-size sweep perf-smoke compares wall-clock against."""
+    with open(ROOT / "BENCH_serving.json") as f:
+        record = json.load(f)
+    section = record["geo_serving"]
+    assert section["smoke_only"] is False  # committed record is a full run
+    # the calibration table rides in the record: every benchmark number is
+    # reproducible from the record alone, no magic constants in the writer
+    table = section["regions"]
+    assert len(table["regions"]) >= 4
+    assert len(table["links"]) == (len(table["regions"])
+                                   * (len(table["regions"]) - 1)) // 2
+    for link in table["links"]:
+        assert link["rtt_s"] > 0 and link["bandwidth_bytes_per_s"] > 0
+        assert link["egress_usd_per_gb"] > 0
+    sweeps = section["sweeps"]
+    assert len(sweeps) >= 2  # smoke-size + headline
+    for sweep in sweeps:
+        rows = sweep["rows"]
+        assert rows[0]["routing"] == "single"
+        # cost parity by construction: every policy fields the same fleet
+        assert len({r["servers_total"] for r in rows}) == 1
+        for i, row in enumerate(rows):
+            missing = [k for k in GEO_ROW_KEYS if k not in row]
+            assert not missing, f"geo row {i} missing {missing}"
+            assert row["all_served"] is True
+            # per-continent breakdown covers every client continent
+            assert set(row["per_continent"]) == set(table["regions"])
+            for creg, d in row["per_continent"].items():
+                cmissing = [k for k in GEO_CONTINENT_KEYS if k not in d]
+                assert not cmissing, f"continent {creg} missing {cmissing}"
+            # the bill is egress-inclusive: nodes + WAN reads + replication
+            assert row["cost_usd"] == pytest.approx(
+                row["node_cost_usd"] + row["read_egress_usd"]
+                + row["replication_usd"], rel=1e-6, abs=1e-9)
+            proof = row["same_simulation"]
+            assert proof["accounted"] is True
+            assert proof["region_windows_overlap"] is True
+            assert (proof["queue_completed"] + proof["edge_absorbed"]
+                    == row["completed"])
+        verdict = sweep["verdict"]
+        missing = [k for k in GEO_VERDICT_KEYS if k not in verdict]
+        assert not missing, f"geo verdict missing {missing}"
+        assert verdict["beats_single_p99"] is True
+        assert verdict["beats_single_per_continent"] is True
+        assert verdict["cost_within_1_2x"] is True
+        assert verdict["winner_cost_vs_single_x"] <= 1.2
+        # pin_primary's data gravity is visible: its cross-region reads
+        # were engine-billed as Table I egress
+        pin = next(r for r in rows if r["policy"] == "geo_pin_primary")
+        assert pin["remote_reads"] > 0
+        assert pin["read_egress_usd"] > 0
+        # full_mirror pays its fan-out; demand_k promotes on read heat
+        mirror = next(r for r in rows if r["policy"] == "geo_full_mirror")
+        assert mirror["replication_usd"] > 0 and mirror["remote_reads"] == 0
+        demand = next(r for r in rows if r["policy"] == "geo_demand_k")
+        assert demand["promotions"] > 0
+    # the headline sweep reaches issue scale: ~10^6 requests, every served
+    headline = sweeps[-1]
+    assert headline["nominal_requests"] >= 1_000_000
+    assert headline["requests"] >= 1_000_000
 
 
 def test_serving_trace_shapes_cover_diurnal_and_flash_crowd():

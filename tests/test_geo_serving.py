@@ -1,0 +1,334 @@
+"""Multi-region fabric + geo serving: link domains, replica placement,
+geo routing, per-region autoscaling — and the single-region pin (the twin
+test: the new region machinery, left unused, changes nothing)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import regions as regions_mod
+from repro.core import ChunkStore, Festivus, FestivusConfig, InMemoryObjectStore
+from repro.core import perfmodel as pm
+from repro.core.metadata import MetadataStore
+from repro.core.object_store import ReplicaMap
+from repro.launch.cluster import ClusterConfig, ClusterEngine
+from repro.serve import (
+    AutoscalePolicy,
+    GeoTileFleet,
+    RegionalAutoscalers,
+    ServeAutoscaler,
+    continental_universes,
+    geo_trace,
+    serve_pool,
+)
+
+KiB = 1024
+ROOT = "bucket"
+
+
+# ---------------------------------------------------------------------------
+# calibration table (configs/regions.py)
+# ---------------------------------------------------------------------------
+def test_region_links_cover_every_pair_symmetrically():
+    regions = regions_mod.REGIONS
+    for i, a in enumerate(regions):
+        for b in regions[i + 1:]:
+            link = regions_mod.inter_region_link(a, b)
+            assert link is regions_mod.inter_region_link(b, a)
+            assert link.key == tuple(sorted((a, b)))
+            assert link.latency_s > 0 and link.bandwidth_bytes_per_s > 0
+
+
+def test_client_rtt_zero_in_region_and_nearest_is_deterministic():
+    assert regions_mod.client_rtt_s("asia", "asia") == 0.0
+    assert regions_mod.client_rtt_s("asia", "usa") == pytest.approx(0.150)
+    # a region prefers itself, then the lowest-RTT candidate
+    assert regions_mod.nearest_region("asia", ("asia", "usa")) == "asia"
+    assert regions_mod.nearest_region("oceania", ("usa", "europe")) == "usa"
+    with pytest.raises(ValueError):
+        regions_mod.nearest_region("usa", ())
+
+
+def test_region_table_is_json_ready_and_complete():
+    table = regions_mod.region_table()
+    n = len(table["regions"])
+    assert len(table["links"]) == n * (n - 1) // 2
+    import json
+    json.dumps(table)  # no dataclasses/tuples leak through
+
+
+# ---------------------------------------------------------------------------
+# replica placement (core/object_store.ReplicaMap)
+# ---------------------------------------------------------------------------
+def test_replica_map_pin_primary_and_full_mirror():
+    regions = ("usa", "europe", "asia")
+    pin = ReplicaMap(regions, "usa", policy="pin_primary")
+    assert pin.holders("k") == ["usa"]
+    src, promote = pin.locate("k", "asia")
+    assert src == "usa" and not promote
+    mirror = ReplicaMap(regions, "usa", policy="full_mirror")
+    assert mirror.holders("k") == sorted(regions)
+    assert mirror.locate("k", "asia") == ("asia", False)
+
+
+def test_replica_map_demand_k_promotes_on_read_heat():
+    rmap = ReplicaMap(("usa", "europe", "asia"), "usa",
+                      policy="demand_k", k=2, promote_after=2)
+    # first remote read: heat 1, still below threshold
+    assert rmap.locate_and_promote("k", "asia") == ("usa", False)
+    # second: threshold met -> promoted, but THIS read still crosses
+    src, promoted = rmap.locate_and_promote("k", "asia")
+    assert src == "usa" and promoted
+    # third: served by the new local replica
+    assert rmap.locate_and_promote("k", "asia") == ("asia", False)
+    assert rmap.replica_count("k") == 2
+    # k caps the replica set: europe keeps reading from its nearest holder
+    for _ in range(5):
+        src, promoted = rmap.locate_and_promote("k", "europe")
+        assert not promoted
+        assert src == "usa"  # nearest holder of {usa, asia} from europe
+    assert rmap.promotions == 1
+
+
+def test_replica_map_rejects_unknown_policy_and_region():
+    with pytest.raises(ValueError):
+        ReplicaMap(("usa",), "usa", policy="nope")
+    with pytest.raises(ValueError):
+        ReplicaMap(("usa",), "europe")
+
+
+# ---------------------------------------------------------------------------
+# the single-region pin: unused region machinery changes nothing
+# ---------------------------------------------------------------------------
+def _scan_run(**config_kwargs):
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x11" * (1024 * KiB))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=4, virtual_time=True, lease_s=3600.0, zones=2,
+        festivus=FestivusConfig(block_bytes=256 * KiB, readahead_blocks=0,
+                                cache_bytes=0, max_inflight=2),
+        **config_kwargs))
+
+    def handler(worker, offset):
+        return len(worker.fs.read("obj", offset, 512 * KiB))
+
+    tasks = {f"s{i}": (i % 2) * 512 * KiB for i in range(12)}
+    return engine.run(tasks, handler)
+
+
+def test_twin_registered_but_unused_links_are_bit_identical():
+    """THE PIN: registering WAN link domains (and an explicit pool-zone
+    map) without routing any I/O over them leaves the ClusterReport
+    bit-identical to the plain single-region run — same completion
+    times (exact float equality), same results, same event count."""
+    plain = _scan_run()
+    links = {link.key: link.bandwidth_bytes_per_s
+             for link in regions_mod.REGION_LINKS.values()}
+    geo = _scan_run(fabric_links=links)
+    assert geo.completion_times == plain.completion_times
+    assert geo.results == plain.results
+    assert geo.makespan_s == plain.makespan_s
+    assert geo.simulator["events"] == plain.simulator["events"]
+    assert geo.read_bandwidth_bytes_per_s == plain.read_bandwidth_bytes_per_s
+    # and nothing was billed over the WAN
+    assert geo.egress_bytes == 0 and geo.egress_usd == 0.0
+    assert plain.egress_bytes == 0 and plain.egress_usd == 0.0
+
+
+def test_route_io_drains_on_link_adds_tail_and_bills_egress():
+    """A routed read contends on the link's provisioned capacity, pays
+    the link RTT as first-byte tail, and bills Table I egress into the
+    engine's accounting — none of which happens on the plain path."""
+    link = regions_mod.inter_region_link("asia", "usa")
+
+    def run(routed):
+        inner = InMemoryObjectStore()
+        meta = MetadataStore()
+        inner.put("obj", b"\x22" * (512 * KiB))
+        driver = Festivus(inner, meta=meta)
+        driver.sync_metadata()
+        driver.close()
+        engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+            nodes=1, virtual_time=True, lease_s=3600.0,
+            fabric_links={link.key: link.bandwidth_bytes_per_s},
+            festivus=FestivusConfig(block_bytes=256 * KiB,
+                                    readahead_blocks=0, cache_bytes=0,
+                                    max_inflight=2)))
+
+        def handler(worker, _):
+            if routed:
+                worker.route_io(link.key, extra_tail_s=link.latency_s,
+                                egress_usd_per_gb=link.egress_usd_per_gb)
+            return len(worker.fs.read("obj", 0, 512 * KiB))
+
+        return engine.run({"t0": 0}, handler)
+
+    local = run(routed=False)
+    remote = run(routed=True)
+    assert local.egress_bytes == 0 and local.egress_usd == 0.0
+    assert remote.egress_bytes == 512 * KiB
+    assert remote.egress_usd == pytest.approx(
+        link.egress_usd(512 * KiB))
+    # the WAN read finishes later: RTT tail + a slower (link-capped) drain
+    delay = remote.completion_times["t0"] - local.completion_times["t0"]
+    assert delay >= link.latency_s
+
+
+# ---------------------------------------------------------------------------
+# geo fleets end-to-end (tiny world)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def geo_world():
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    cs = ChunkStore(Festivus(inner, meta=meta), ROOT)
+    rng = np.random.default_rng(0)
+    comp = rng.random((256, 256, 1), dtype=np.float32)
+    arr = cs.create("composite", comp.shape, np.float32, (64, 64, 1),
+                    pyramid_levels=2)
+    arr.write_region((0, 0, 0), comp)
+    arr.build_pyramid()
+    cs.fs.close()
+    universes = continental_universes((256, 256, 1), 2, 64,
+                                      regions_mod.REGIONS)
+    trace = geo_trace(universes, 0.5, 200.0, alpha=1.1, seed=3)
+    return inner, meta, trace
+
+
+def _fleet(geo_world, **kwargs):
+    inner, meta, _ = geo_world
+    defaults = dict(root=ROOT, tile_px=64, cache_bytes=8 * 16 * KiB)
+    defaults.update(kwargs)
+    return GeoTileFleet(inner, meta, **defaults)
+
+
+def test_geo_fleet_validates_shape():
+    inner, meta = InMemoryObjectStore(), MetadataStore()
+    with pytest.raises(ValueError, match="routing"):
+        GeoTileFleet(inner, meta, servers_by_region={"usa": 1},
+                     routing="teleport")
+    with pytest.raises(ValueError, match="placement"):
+        GeoTileFleet(inner, meta, servers_by_region={"usa": 1},
+                     placement="nope")
+    with pytest.raises(ValueError, match="primary"):
+        GeoTileFleet(inner, meta, servers_by_region={"europe": 1},
+                     primary="usa")
+    with pytest.raises(ValueError, match="single"):
+        GeoTileFleet(inner, meta, routing="single",
+                     servers_by_region={"usa": 1, "asia": 1})
+
+
+def test_single_routing_charges_every_remote_client_the_rtt(geo_world):
+    _, _, trace = geo_world
+    rep = _fleet(geo_world, servers_by_region={"usa": 8},
+                 routing="single").run(trace)
+    assert rep.all_served
+    assert rep.remote_reads == 0  # primary holds the data locally
+    assert rep.egress_bytes == 0
+    for creg, stats in rep.per_region.items():
+        assert stats["serving_region"] == "usa"
+        floor = regions_mod.client_rtt_s(creg, "usa")
+        assert stats["p50_s"] >= floor
+    # remote continents are strictly worse off than home traffic
+    assert rep.per_region["asia"]["p50_s"] > rep.per_region["usa"]["p50_s"]
+
+
+def test_geo_full_mirror_serves_everyone_locally(geo_world):
+    _, _, trace = geo_world
+    sbr = {r: 2 for r in regions_mod.REGIONS}
+    rep = _fleet(geo_world, servers_by_region=sbr,
+                 placement="full_mirror").run(trace)
+    assert rep.all_served
+    assert rep.remote_reads == 0 and rep.egress_bytes == 0
+    assert rep.replication_usd > 0  # the mirror fan-out is billed
+    for creg, stats in rep.per_region.items():
+        assert stats["serving_region"] == creg  # geo routing: home fleet
+
+
+def test_geo_demand_k_promotes_and_bills_the_copies(geo_world):
+    _, _, trace = geo_world
+    sbr = {r: 2 for r in regions_mod.REGIONS}
+    rep = _fleet(geo_world, servers_by_region=sbr, placement="demand_k",
+                 k=4, promote_after=2, cache_bytes=2 * 16 * KiB).run(trace)
+    assert rep.all_served
+    assert rep.promotions > 0
+    assert rep.replication_bytes > 0 and rep.replication_usd > 0
+    assert rep.remote_reads > 0
+    assert rep.read_egress_usd > 0
+    # egress-inclusive bill decomposes exactly
+    assert rep.cost_usd == pytest.approx(
+        rep.node_cost_usd + rep.read_egress_usd + rep.replication_usd)
+
+
+def test_geo_pin_primary_pays_wan_on_remote_misses(geo_world):
+    _, _, trace = geo_world
+    sbr = {r: 2 for r in regions_mod.REGIONS}
+    rep = _fleet(geo_world, servers_by_region=sbr,
+                 placement="pin_primary").run(trace)
+    assert rep.all_served
+    assert rep.remote_reads > 0 and rep.egress_bytes > 0
+    assert rep.promotions == 0 and rep.replication_usd == 0.0
+    # engine-billed egress matches the calibrated link pricing order
+    assert rep.read_egress_usd > 0
+
+
+def test_geo_run_is_deterministic(geo_world):
+    _, _, trace = geo_world
+    sbr = {r: 2 for r in regions_mod.REGIONS}
+    reps = [
+        _fleet(geo_world, servers_by_region=sbr,
+               placement="demand_k", k=4, promote_after=2).run(trace)
+        for _ in range(2)]
+    assert reps[0].p99_s == reps[1].p99_s
+    assert reps[0].cost_usd == reps[1].cost_usd
+    assert reps[0].samples == reps[1].samples
+
+
+def test_per_region_autoscalers_scale_their_own_pools(geo_world):
+    _, _, trace = geo_world
+    policy = AutoscalePolicy(
+        min_servers=1, max_servers=8, target_p99_s=0.05,
+        scale_in_p99_s=0.025, window_s=0.1, interval_s=0.02,
+        queue_high_per_server=3.0, queue_high_min=6, scale_out_step=2,
+        scale_in_step=2, warmup_s=0.01, cooldown_s=0.08,
+        calm_ticks_to_drain=2, drain_headroom=2.0, lease_s=0.5)
+    sbr = {r: 2 for r in regions_mod.REGIONS}
+    rep = _fleet(geo_world, servers_by_region=sbr,
+                 placement="pin_primary", autoscale=policy).run(trace)
+    assert rep.all_served
+    assert rep.autoscale is not None
+    assert set(rep.autoscale) == set(regions_mod.REGIONS)
+    # warm-up accounted in every region; at least one region had to scale
+    assert all(a.warmup_ok for a in rep.autoscale.values())
+    assert any(a.joins for a in rep.autoscale.values())
+
+
+def test_regional_autoscalers_tick_all_regions():
+    policy = AutoscalePolicy(min_servers=1, max_servers=4,
+                             interval_s=0.5, lease_s=0.5)
+    scalers = {
+        r: ServeAutoscaler(dataclasses.replace(policy, pool=serve_pool(r),
+                                               interval_s=0.5 + i * 0.25),
+                           arrivals={})
+        for i, r in enumerate(("usa", "europe"))}
+    ras = RegionalAutoscalers(scalers)
+    assert ras.interval_s == 0.5  # the fastest loop sets the tick rate
+    with pytest.raises(ValueError):
+        RegionalAutoscalers({})
+
+
+def test_geo_edge_caches_absorb_repeats_per_region(geo_world):
+    _, _, trace = geo_world
+    sbr = {r: 2 for r in regions_mod.REGIONS}
+    rep = _fleet(geo_world, servers_by_region=sbr, placement="full_mirror",
+                 edge_cache_bytes=4 * 16 * KiB).run(trace)
+    assert rep.all_served
+    assert rep.edge_hit_rate > 0
+    assert rep.combined_hit_rate >= rep.hit_rate
+    proof_completed = rep.completed
+    assert proof_completed == rep.requests

@@ -210,6 +210,139 @@ def test_water_fill_capped_by_demand(demands, capacity):
         assert a <= d * (1 + 1e-12) + 1e-9
 
 
+_LINK_KEYS = (("asia", "usa"), ("europe", "usa"), ("asia", "europe"))
+_LINK_CAPS = (6.25e9, 1.25e10, 3.125e9)  # heterogeneous, regions.py-shaped
+
+
+def _scratch_domain_allocations(fabric):
+    """From-scratch reference across BOTH domain kinds: each zone at the
+    reader-count capacity curve, each link at its provisioned capacity."""
+    from repro.core import perfmodel as pm
+
+    rates = {}
+    for domain, flows in fabric._zone_flows.items():
+        cap = fabric._link_caps.get(domain)
+        if cap is None:
+            cap = fabric.model.zone_capacity_bytes_per_s(len(flows))
+        granted = pm.water_fill(list(flows.values()), cap)
+        for key, rate in zip(flows, granted):
+            rates[key] = rate
+    return rates
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.booleans(),            # True = add, False = remove
+              st.integers(0, 4),        # 0-1: zone; 2-4: inter-region link
+              st.floats(1e3, 5e9)),     # demand (adds only)
+    min_size=1, max_size=40))
+def test_link_domains_incremental_equals_from_scratch(ops):
+    """INVARIANT: with WAN links registered alongside zones, ANY add/remove
+    sequence across the mixed domains leaves the incrementally maintained
+    allocations element-wise equal (==) to a from-scratch water-fill —
+    zones at the Table III reader-count curve, links at their provisioned
+    capacities.  This pins the geo fabric to the same changed-flows-only
+    reflow contract as the single-region fabric (and exercises the mixed
+    int/link dirty-set ordering)."""
+    from repro.core import perfmodel as pm
+
+    fabric = pm.SharedFabric(zones=2)
+    for key, cap in zip(_LINK_KEYS, _LINK_CAPS):
+        fabric.add_link(key, cap)
+    live = []
+    next_key = 0
+    for is_add, domain_i, demand in ops:
+        domain = domain_i if domain_i < 2 else _LINK_KEYS[domain_i - 2]
+        if is_add or not live:
+            fabric.add_flow(next_key, domain, demand)
+            live.append(next_key)
+            next_key += 1
+        else:
+            victim = live.pop(domain_i % len(live))
+            fabric.remove_flow(victim)
+        got = fabric.allocations()
+        assert got == _scratch_domain_allocations(fabric)
+        assert set(got) == set(live)
+
+
+@settings(max_examples=80, deadline=None)
+@given(demands=st.lists(
+    st.tuples(st.integers(0, 2), st.floats(1e3, 5e9)),
+    min_size=1, max_size=24))
+def test_link_water_fill_conserves_and_caps_per_link(demands):
+    """INVARIANT: per WAN link, granted rates sum to min(link capacity,
+    total demand) — bytes are neither created nor lost crossing a link —
+    and no link ever exceeds its own provisioned capacity, whatever the
+    other links carry."""
+    from repro.core import perfmodel as pm
+
+    fabric = pm.SharedFabric(zones=1)
+    for key, cap in zip(_LINK_KEYS, _LINK_CAPS):
+        fabric.add_link(key, cap)
+    per_link = {key: [] for key in _LINK_KEYS}
+    for i, (link_i, demand) in enumerate(demands):
+        key = _LINK_KEYS[link_i]
+        fabric.add_flow(i, key, demand)
+        per_link[key].append(i)
+    alloc = fabric.allocations()
+    for key, cap in zip(_LINK_KEYS, _LINK_CAPS):
+        flows = per_link[key]
+        granted = sum(alloc[i] for i in flows)
+        offered = sum(d for li, d in demands if _LINK_KEYS[li] == key)
+        assert granted == pytest.approx(min(cap, offered),
+                                        rel=1e-9, abs=1e-6)
+        assert granted <= cap * (1 + 1e-12) + 1e-9
+
+
+@settings(max_examples=80, deadline=None)
+@given(demands=st.lists(st.floats(1e3, 5e9), min_size=1, max_size=24),
+       cap=st.floats(1e6, 2e10))
+def test_link_water_fill_max_min_fair(demands, cap):
+    """INVARIANT: within one link, unsatisfied flows all hold the same
+    maximal share and no flow exceeds it — the same max-min fairness the
+    zones guarantee, at the link's provisioned capacity."""
+    from repro.core import perfmodel as pm
+
+    fabric = pm.SharedFabric(zones=1)
+    key = ("asia", "usa")
+    fabric.add_link(key, cap)
+    for i, d in enumerate(demands):
+        fabric.add_flow(i, key, d)
+    alloc = fabric.allocations()
+    unsat = [alloc[i] for i, d in enumerate(demands)
+             if alloc[i] < d - 1e-9 * max(d, 1.0)]
+    if not unsat:
+        return  # everyone satisfied: fairness is vacuous
+    share = max(unsat)
+    for a in unsat:
+        assert a == pytest.approx(share, rel=1e-9, abs=1e-9)
+    for i in range(len(demands)):
+        assert alloc[i] <= share * (1 + 1e-9) + 1e-9
+
+
+def test_link_water_fill_deterministic_twin():
+    """The hypothesis properties above, pinned to one hand-checked case:
+    two flows on a 6.25 GB/s link split it evenly while a zone flow and a
+    fat-link flow keep their full demands; removing one link flow hands
+    the survivor the whole link."""
+    from repro.core import perfmodel as pm
+
+    fabric = pm.SharedFabric(zones=2)
+    fabric.add_link(("asia", "usa"), 6.25e9)
+    fabric.add_link(("europe", "usa"), 1.25e10)
+    fabric.add_flow("a1", ("asia", "usa"), 9e9)
+    fabric.add_flow("a2", ("asia", "usa"), 9e9)
+    fabric.add_flow("e1", ("europe", "usa"), 9e9)
+    fabric.add_flow("z1", 0, 1e9)
+    alloc = fabric.allocations()
+    assert alloc["a1"] == alloc["a2"] == 3.125e9   # fair halves of the link
+    assert alloc["e1"] == 9e9                      # fat link: demand met
+    assert alloc["z1"] == 1e9                      # zone flow untouched
+    fabric.remove_flow("a2")
+    alloc = fabric.allocations()
+    assert alloc["a1"] == 6.25e9                   # survivor gets the link
+
+
 @settings(max_examples=100, deadline=None)
 @given(demands=st.lists(st.floats(1e-3, 1e6), min_size=1, max_size=32),
        capacity=st.floats(1e-3, 1e6))

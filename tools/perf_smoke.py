@@ -2,8 +2,8 @@
 
     PYTHONPATH=src python tools/perf_smoke.py
 
-Two tripwires, both compared against the committed records' own
-``wall_s`` and both failing only past ``--factor`` (default 2x):
+Three tripwires, each compared against the committed records' own
+``wall_s`` and each failing only past ``--factor`` (default 2x):
 
 * the 512-node cluster-scaling sweep point (BENCH_cluster_scaling.json),
   best of ``--repeats`` after a warm-up run — the canary for accidentally
@@ -17,6 +17,16 @@ Two tripwires, both compared against the committed records' own
   front end: a per-request heap op or wake-all regression multiplies
   this point's wall-clock long before any test notices.  Single run (no
   repeats): at ~10 s the baseline is far above scheduler noise.
+* the geo-serving smoke point (the ``geo_demand_k`` row of the
+  ``geo_serving`` smoke sweep, re-run through
+  ``benchmarks.serving.geo_point``) — the canary for cross-region
+  reflow: WAN link domains must ride the same incremental per-zone
+  water-filling as zones, so a regression to global recomputation (or a
+  per-flow link scan) multiplies this point's wall-clock.
+
+Every tripwire's delta lands in the CI job summary
+(``$GITHUB_STEP_SUMMARY``, markdown table) — or on stdout locally — so
+a reviewer sees the measured-vs-baseline ratios, not only pass/fail.
 
 Wall-clock comparisons across machines are noisy, which is why CI runs
 this as a *non-blocking* step: a failure is a flag for a human, not a
@@ -28,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -51,6 +62,7 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     failed = False
+    deltas: list = []  # one row per tripwire, for the CI job summary
     with open(args.record) as f:
         record = json.load(f)
     row = next((r for r in record["rows"] if r["nodes"] == args.nodes), None)
@@ -77,7 +89,10 @@ def main(argv=None) -> int:
     print(f"perf-smoke: {args.nodes}-node sweep point wall {wall:.3f}s "
           f"best-of-{len(walls)} ({events_per_s:.0f} events/s) vs "
           f"committed baseline {baseline:.3f}s", flush=True)
-    if baseline > 0 and wall > args.factor * baseline:
+    ok = not (baseline > 0 and wall > args.factor * baseline)
+    deltas.append({"name": f"cluster {args.nodes}-node sweep",
+                   "baseline_s": baseline, "wall_s": wall, "ok": ok})
+    if not ok:
         print(f"perf-smoke: REGRESSION — {wall / baseline:.1f}x slower than "
               f"the committed baseline (limit {args.factor}x).  The DES hot "
               f"path has regressed; profile _run_virtual before merging.",
@@ -85,11 +100,14 @@ def main(argv=None) -> int:
         failed = True
 
     if not args.skip_serving:
-        failed |= _serving_tripwire(args.serving_record, args.factor)
+        failed |= _serving_tripwire(args.serving_record, args.factor, deltas)
+        failed |= _geo_tripwire(args.serving_record, args.factor, deltas)
+    _emit_summary(deltas, args.factor)
     return 1 if failed else 0
 
 
-def _serving_tripwire(record_path: str, factor: float) -> bool:
+def _serving_tripwire(record_path: str, factor: float,
+                      deltas: list) -> bool:
     """Re-run the serving million-sweep smoke point; True on regression."""
     try:
         with open(record_path) as f:
@@ -107,13 +125,74 @@ def _serving_tripwire(record_path: str, factor: float) -> bool:
           f"{point['servers']}-server point wall {wall:.3f}s "
           f"({point['requests_per_wall_s']} req/s) vs committed baseline "
           f"{sbase:.3f}s", flush=True)
-    if sbase > 0 and wall > factor * sbase:
+    ok = not (sbase > 0 and wall > factor * sbase)
+    deltas.append({"name": "serving million-sweep smoke point",
+                   "baseline_s": sbase, "wall_s": wall, "ok": ok})
+    if not ok:
         print(f"perf-smoke: REGRESSION — serving point {wall / sbase:.1f}x "
               f"slower than the committed baseline (limit {factor}x).  The "
               f"arrival front end has regressed; profile the batched "
               f"ingestion path before merging.", file=sys.stderr, flush=True)
         return True
     return False
+
+
+def _geo_tripwire(record_path: str, factor: float, deltas: list) -> bool:
+    """Re-run the geo-serving smoke sweep's demand_k point; True on
+    regression.  This point drains cross-region reads over WAN link
+    domains, so it multiplies if link reflow stops being incremental."""
+    try:
+        with open(record_path) as f:
+            serving = json.load(f)
+        sweep = serving["geo_serving"]["sweeps"][0]
+        grow = next(r for r in sweep["rows"]
+                    if r["routing"] == "geo" and r["placement"] == "demand_k")
+    except (OSError, KeyError, IndexError, StopIteration):
+        print("perf-smoke: no committed geo-serving baseline; "
+              "skipping the geo tripwire", flush=True)
+        return False
+    from benchmarks.serving import geo_point
+    _, point = geo_point(sweep["nominal_requests"],
+                         sweep["servers_per_region"],
+                         routing="geo", placement="demand_k")
+    wall, gbase = point["wall_s"], grow["wall_s"]
+    print(f"perf-smoke: geo {point['requests']}-request "
+          f"{point['servers_total']}-server demand_k point wall "
+          f"{wall:.3f}s vs committed baseline {gbase:.3f}s", flush=True)
+    ok = not (gbase > 0 and wall > factor * gbase)
+    deltas.append({"name": "geo-serving demand_k smoke point",
+                   "baseline_s": gbase, "wall_s": wall, "ok": ok})
+    if not ok:
+        print(f"perf-smoke: REGRESSION — geo point {wall / gbase:.1f}x "
+              f"slower than the committed baseline (limit {factor}x).  "
+              f"Cross-region reflow has regressed; check that link domains "
+              f"still ride the incremental per-zone water-filling.",
+              file=sys.stderr, flush=True)
+        return True
+    return False
+
+
+def _emit_summary(deltas: list, factor: float) -> None:
+    """The measured-vs-baseline table: appended to the CI job summary
+    when $GITHUB_STEP_SUMMARY is set, printed to stdout otherwise."""
+    if not deltas:
+        return
+    lines = ["### perf smoke (non-blocking)", "",
+             "| tripwire | baseline | measured | delta | verdict |",
+             "|---|---:|---:|---:|---|"]
+    for d in deltas:
+        ratio = (d["wall_s"] / d["baseline_s"] if d["baseline_s"] > 0
+                 else float("nan"))
+        verdict = "ok" if d["ok"] else f"**REGRESSION** (> {factor:g}x)"
+        lines.append(f"| {d['name']} | {d['baseline_s']:.3f}s "
+                     f"| {d['wall_s']:.3f}s | {ratio:.2f}x | {verdict} |")
+    text = "\n".join(lines) + "\n"
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as f:
+            f.write(text)
+    else:
+        print(text, flush=True)
 
 
 if __name__ == "__main__":
