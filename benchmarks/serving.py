@@ -49,6 +49,9 @@ import numpy as np
 from repro.configs import regions as geo_regions
 from repro.core import ChunkStore, Festivus, InMemoryObjectStore, MetadataStore
 from repro.core import perfmodel as pm
+from repro.core.chunkstore import pyramid_level_shape
+from repro.ingest import (WheelTick, make_wheel_handler, wheel_campaign,
+                          wheel_outcome)
 from repro.serve import (AutoscalePolicy, GeoTileFleet, Spike, TileFleet,
                          continental_universes, diurnal_spikes,
                          flash_crowd_spikes, geo_trace, tile_universe,
@@ -233,6 +236,149 @@ def million_point(requests: int, servers: int, *, _serve_fn=None) -> dict:
         "wall_s": round(wall, 3),
         "requests_per_wall_s": (round(len(trace) / wall, 1)
                                 if wall > 0 else None),
+    }
+
+
+#: the wheel world: finer chunking than the million world so the
+#: incremental-vs-full pyramid gap is visible (21 level chunks per full
+#: rebuild vs ~3 dirty ancestors per small batch)
+WHEEL_WORLD = WorldSpec(composite_hw=1024, chunk_px=128, bands=1,
+                        pyramid_levels=3, stack_depth=1, tile_px=128,
+                        cache_bytes=2 * pm.MiB, edge_cache_bytes=0)
+WHEEL_SCENARIO = ServeScenario(WHEEL_WORLD, base_rps=MILLION_BASE_RPS,
+                               seed=MILLION_SEED)
+WHEEL_SEED = 11
+
+
+def _full_rebuild_chunks(spec: WorldSpec) -> int:
+    """Level-chunk objects one *full* pyramid rebuild writes."""
+    total = 0
+    shape = (spec.composite_hw, spec.composite_hw, spec.bands)
+    chunks = (spec.chunk_px, spec.chunk_px, spec.bands)
+    for level in range(1, spec.pyramid_levels + 1):
+        lshape = pyramid_level_shape(shape, level)
+        total += int(np.prod([-(-s // c) for s, c in zip(lshape, chunks)]))
+    return total
+
+
+def wheel_point(requests: int, servers: int, *, batches: int = 24,
+                ingest_nodes: int = 8, twin_requests: int = 20_000,
+                sim_totals=None) -> dict:
+    """One continuous-ingest point: ~`requests` arrivals served while a
+    scene-batch wheel ingests and re-analyzes `batches` batches.
+
+    Three runs, all on the wheel world:
+
+    1. *baseline* — the trace with no ingest (the with/without p99 pair);
+    2. *wheel* — the same trace with the ingest pool live: scene writes
+       contend on the fabric, chunk rewrites invalidate derived tiles
+       mid-simulation, wheel ticks re-run the analytics exactly-once and
+       rebuild the pyramid incrementally;
+    3. *twin* — a shorter trace with a tick-only (zero-write) ingest
+       pool vs the same trace plain, proving the plumbing itself is free:
+       per-request latencies must be bit-identical.
+
+    The row carries the proofs the ISSUE demands: post-ingest freshness
+    (cached tiles byte-identical to from-scratch reads), the
+    incremental-vs-full chunk-write gap, and the exactly-once audit.
+    `tools/perf_smoke.py` re-runs this point and compares ``wall_s``.
+    """
+    sc = WHEEL_SCENARIO
+    spec = sc.world
+    duration = sc.duration_for(requests)
+    trace = sc.trace(duration)
+    chunks = (spec.chunk_px, spec.chunk_px, spec.bands)
+
+    def _account(rep):
+        if sim_totals is not None:
+            des = rep.cluster.simulator
+            sim_totals["wall_s"] += des.get("wall_s", 0.0)
+            sim_totals["events"] += des.get("events", 0)
+            sim_totals["runs"] += 1
+        return rep
+
+    def _fleet():
+        inner, meta = _build_world(spec, seed=MILLION_SEED)
+        return inner, meta, TileFleet(inner, meta, root=ROOT,
+                                      servers=servers,
+                                      tile_px=spec.tile_px,
+                                      cache_bytes=spec.cache_bytes)
+
+    # 1. baseline: no ingest
+    _, _, fleet = _fleet()
+    base = _account(fleet.run(trace))
+    # 2. the wheel, live under the same trace
+    tasks, scenes, ticks = wheel_campaign(
+        sc.shape, chunks, duration, batches, period_s=duration / 6.0,
+        seed=WHEEL_SEED)
+    inner, meta, fleet = _fleet()
+    rep = _account(fleet.run(trace, ingest_tasks=tasks,
+                             ingest_handler=make_wheel_handler(ROOT),
+                             ingest_nodes=ingest_nodes))
+    outcome = wheel_outcome(meta, ROOT)
+    tick_results = [rep.cluster.results[f"ingest/tick/{t.tick:04d}"]
+                    for t in ticks]
+    incr_writes = sum(r["pyramid_writes"] for r in tick_results)
+    rebuilds = sum(1 for r in tick_results if r["batches"] > 0)
+    full_writes = rebuilds * _full_rebuild_chunks(spec)
+    # 3. the no-ingest twin at a shorter trace: plumbing must be free
+    twin_trace = sc.trace(sc.duration_for(twin_requests))
+    _, _, fleet = _fleet()
+    plain = _account(fleet.run(twin_trace))
+    tick_only = {f"tick/{i}": WheelTick(tick=i, t=1.0 + i)
+                 for i in range(3)}
+    _, _, fleet = _fleet()
+    twin = _account(fleet.run(twin_trace, ingest_tasks=tick_only,
+                              ingest_handler=make_wheel_handler(ROOT),
+                              ingest_nodes=2))
+    sim = rep.cluster.simulator
+    wall = sim.get("wall_s", 0.0)
+    ing = rep.ingest
+    return {
+        "requests": len(trace),
+        "nominal_requests": requests,
+        "servers": servers,
+        "ingest_nodes": ingest_nodes,
+        "scene_batches": batches,
+        "wheel_ticks": len(ticks),
+        "duration_s": round(duration, 3),
+        "ingested_MiB": round(ing["bytes_written"] / pm.MiB, 3),
+        # serving under the wheel vs without it (same trace, same fleet)
+        "p50_ms_no_ingest": _ms(base.p50_s),
+        "p50_ms_with_wheel": _ms(rep.p50_s),
+        "p99_ms_no_ingest": _ms(base.p99_s),
+        "p99_ms_with_wheel": _ms(rep.p99_s),
+        "hit_rate_no_ingest": round(base.hit_rate, 4),
+        "hit_rate_with_wheel": round(rep.hit_rate, 4),
+        "completed": rep.completed,
+        "all_served": rep.all_served,
+        # invalidation churn: every chunk rewrite evicted its derived
+        # tiles; the freshness probe re-reads what is cached now
+        "chunk_writes": ing["chunk_writes"],
+        "tile_invalidations": ing["tile_invalidations"],
+        "tiles_checked": ing["tiles_checked"],
+        "tiles_stale": ing["tiles_stale"],
+        "post_ingest_tiles_fresh": (ing["tiles_checked"] > 0
+                                    and ing["tiles_stale"] == 0),
+        # the wheel: exactly-once reanalysis over every ingested batch
+        "batches_ingested": outcome["ingested"],
+        "batches_wheeled": outcome["wheeled"],
+        "exactly_once": (outcome["ingested"] == outcome["wheeled"]
+                         == batches and not outcome["missing"]
+                         and not outcome["spurious"]),
+        # incremental pyramid: dirty ancestors only
+        "pyramid_writes_incremental": incr_writes,
+        "pyramid_writes_full_equiv": full_writes,
+        "pyramid_rebuilds": rebuilds,
+        "incremental_write_ratio": (round(incr_writes / full_writes, 4)
+                                    if full_writes else None),
+        "incremental_lt_full": incr_writes < full_writes,
+        # the no-ingest twin: identical per-request latencies
+        "twin_requests": len(twin_trace),
+        "twin_bit_identical": (twin.samples == plain.samples
+                               and twin.ingest["chunk_writes"] == 0),
+        "events": sim["events"],
+        "wall_s": round(wall, 3),
     }
 
 
@@ -669,6 +815,21 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "sweeps": geo_sweeps,
     }
 
+    # -- continuous ingest: the reanalysis wheel under live serving ---------
+    # the smoke-sized point (10^5 requests, 256 servers, 24 scene batches)
+    # always runs — it is the perf-smoke wheel tripwire's baseline
+    wheel_rows = [wheel_point(100_000, 256, sim_totals=sim_totals)]
+    ingest_wheel = {
+        "world": dataclasses.asdict(WHEEL_WORLD),
+        "base_rps": MILLION_BASE_RPS,
+        "alpha": 1.1,
+        "seed": MILLION_SEED,
+        "wheel_seed": WHEEL_SEED,
+        "ingest_model": dataclasses.asdict(pm.INGEST_MODEL),
+        "full_rebuild_chunks": _full_rebuild_chunks(WHEEL_WORLD),
+        "rows": wheel_rows,
+    }
+
     # -- trace shapes: diurnal cycle + flash crowd at the mid fleet ---------
     ramp_spikes = diurnal_spikes(duration_s, duration_s, 12.0, steps=8)
     ramp_trace = scenario.trace(duration_s, spikes=ramp_spikes)
@@ -796,6 +957,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "edge_cache": edge_cache,
         "million_sweep": million_sweep,
         "geo_serving": geo_serving,
+        "ingest_wheel": ingest_wheel,
         "trace_shapes": trace_shapes,
         "encode_model": encode_model,
         "predictive_scaling": predictive_scaling,
@@ -876,6 +1038,18 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
                   f"({v['p99_speedup_x']}x) at "
                   f"{v['winner_cost_vs_single_x']}x cost "
                   f"(within 1.2x: {v['cost_within_1_2x']})")
+        for r in wheel_rows:
+            print(f"ingest wheel: {r['requests']} reqs + "
+                  f"{r['scene_batches']} batches on {r['ingest_nodes']} "
+                  f"ingest nodes: p99 {r['p99_ms_no_ingest']} -> "
+                  f"{r['p99_ms_with_wheel']} ms, fresh="
+                  f"{r['post_ingest_tiles_fresh']} "
+                  f"({r['tiles_checked']} checked/{r['tiles_stale']} stale)"
+                  f", pyramid {r['pyramid_writes_incremental']}/"
+                  f"{r['pyramid_writes_full_equiv']} writes "
+                  f"(incremental<full: {r['incremental_lt_full']}), "
+                  f"exactly-once={r['exactly_once']}, "
+                  f"twin identical={r['twin_bit_identical']}")
         for r in shape_rows:
             print(f"trace shape {r['shape']}: {r['requests']} reqs, "
                   f"x{r['peak_multiplier']:.1f} peak over {r['windows']} "

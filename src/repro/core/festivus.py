@@ -159,6 +159,14 @@ class Festivus:
         self._inflight_lock = threading.RLock()
         #: per-path last sequential block, for readahead detection
         self._last_block: Dict[str, int] = {}
+        #: write/delete hooks: each is called with the object path after a
+        #: successful PUT/DELETE and after the block cache drops the path.
+        #: This is the coherence fan-out for *derived* caches — the block
+        #: cache only holds raw object bytes, but a serving tier caches
+        #: decoded tiles built FROM those bytes, and nothing short of a
+        #: hook can tell it a chunk object was rewritten underneath it
+        #: (the stale-tiles-forever bug the ingest path exposed).
+        self.write_hooks: List = []
 
     # -- metadata path (never touches the object store) ---------------------
     def stat(self, path: str) -> dict:
@@ -192,12 +200,16 @@ class Festivus:
                         on_retry=self._count_retry)
         self._cache.invalidate_path(path)
         self.statcache.put(path, meta.size, meta.etag)
+        for hook in self.write_hooks:
+            hook(path)
 
     def delete(self, path: str) -> None:
         retrying(self.store.delete, path, attempts=self.config.max_retries,
                  on_retry=self._count_retry)
         self._cache.invalidate_path(path)
         self.statcache.remove(path)
+        for hook in self.write_hooks:
+            hook(path)
 
     # -- block engine ---------------------------------------------------------
     def _fetch_block(self, path: str, block: int, size: int) -> memoryview:

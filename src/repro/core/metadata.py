@@ -66,6 +66,19 @@ class MetadataStore:
             self._kv[key] = value
             return True
 
+    def peek(self, key: str, default: Any = None) -> Any:
+        """Watch-channel read: the value as a client-side coherence watch
+        sees it.  Unlike :meth:`get` this is *not* a modeled KV round-trip
+        (no op count, no latency accrual through the cluster's MountMeta):
+        it stands for a subscription the server pushes updates into — e.g.
+        an array's write generation, which every reader consults on every
+        access and which only ever changes when a writer (who pays the
+        counted ``incr``) bumps it.  Steady-state readers therefore cost
+        what they did before the watch existed; only actual changes make
+        them pay a counted revalidation."""
+        with self._lock:
+            return self._kv.get(key, default)
+
     def incr(self, key: str, amount: int = 1) -> int:
         with self._lock:
             self._tick(key)

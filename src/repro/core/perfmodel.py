@@ -424,6 +424,38 @@ def tile_format(fmt: str) -> TileFormat:
 
 TILE_SERVING_MODEL = TileServingModel()
 
+
+@dataclasses.dataclass(frozen=True)
+class IngestModel:
+    """Scene-ingest and wheel-reanalysis CPU costs (the write tier).
+
+    The Matsu-wheel shape: new Landsat/Sentinel scenes keep arriving, an
+    ingest task decodes/QAs each scene and writes it into the composite's
+    chunk grid (the object PUTs are modeled I/O, water-filled against the
+    fabric like any flow — these constants bill only the CPU on top), and
+    a recurring wheel pass re-scans each ingested batch:
+
+    * ``decode_s_per_byte`` — L1 radiometric correction + cloud/QA mask
+      at ~200 MB/s per core (scene decode is heavier than tile decode).
+    * ``scene_overhead_s`` — per-scene fixed work: geo-registration
+      lookup, manifest update, provenance record.
+    * ``scan_s_per_byte`` — wheel band math (NDVI-class per-pixel index)
+      over already-decoded pixels, ~800 MB/s per core.
+    """
+
+    decode_s_per_byte: float = 1.0 / 200e6
+    scene_overhead_s: float = 2e-3
+    scan_s_per_byte: float = 1.0 / 800e6
+
+    def ingest_cost_s(self, nbytes: int, scenes: int = 1) -> float:
+        return scenes * self.scene_overhead_s + nbytes * self.decode_s_per_byte
+
+    def scan_cost_s(self, nbytes: int) -> float:
+        return nbytes * self.scan_s_per_byte
+
+
+INGEST_MODEL = IngestModel()
+
 #: virtual seconds between a serve-pool join being requested and the new
 #: server taking traffic: process start + festivus mount + first manifest
 #: sync.  Deliberately on the benchmark traces' compressed virtual

@@ -502,6 +502,12 @@ class ClusterConfig:
     #: index idle worker wins under both schemes — pinned by tests);
     #: False keeps the per-event path for twin comparisons.
     arrival_batching: bool = True
+    #: called with the object path after any worker mount completes a PUT or
+    #: DELETE (installed on every Festivus mount, including elastic joiners).
+    #: This is the write-invalidation fan-out: a serve fleet hangs its tile
+    #: cache invalidation bus here so chunk rewrites from an ingest pool
+    #: evict derived tiles everywhere.
+    mount_write_hook: Optional[Callable[[str], None]] = None
 
 
 @dataclasses.dataclass
@@ -671,6 +677,8 @@ class ClusterEngine:
         mount = MountStore(self.inner, model=self._store_model)
         mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
         fs = Festivus(mount, meta=mmeta, config=self._fest_cfg)
+        if self.config.mount_write_hook is not None:
+            fs.write_hooks.append(self.config.mount_write_hook)
         pool = (pool_override if pool_override is not None
                 else self._pool_of(index))
         zone = index % self.config.zones

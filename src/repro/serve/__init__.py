@@ -31,6 +31,7 @@ from repro.serve.tileserver import (
     TileCache,
     TileCacheStats,
     TileFleet,
+    TileInvalidationBus,
     TileRequest,
     TileResponse,
     TileServer,
@@ -53,8 +54,8 @@ __all__ = [
     "AutoscaleAction", "AutoscalePolicy", "AutoscaleReport", "EdgeCache",
     "EdgeCacheStats", "GeoServingReport", "GeoTileFleet",
     "RegionalAutoscalers", "ServeAutoscaler", "ServingReport", "Spike",
-    "TileCache", "TileCacheStats", "TileFleet", "TileRequest",
-    "TileResponse", "TileServer", "TileServerStats",
+    "TileCache", "TileCacheStats", "TileFleet", "TileInvalidationBus",
+    "TileRequest", "TileResponse", "TileServer", "TileServerStats",
     "continental_universes", "diurnal_spikes", "flash_crowd_spikes",
     "geo_trace", "rate_at", "serve_pool", "tile_bounds", "tile_grid",
     "tile_universe", "zipf_spike_trace",

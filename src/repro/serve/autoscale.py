@@ -84,6 +84,13 @@ class AutoscalePolicy:
     drain_headroom: float = 2.0
     lease_s: float = 0.5
     pool: str = DEFAULT_POOL
+    #: never drain the serve pool while any of these *other* pools still
+    #: has pending work — the continuous-ingest shape: a calm-looking
+    #: serve window during a scene-batch wave is about to be re-heated by
+    #: wheel-refreshed tiles (every invalidated tile is a future miss), so
+    #: a drain now is a guaranteed rejoin.  Names must match the fleet's
+    #: pool labels (e.g. "ingest"); empty tuple = legacy behaviour.
+    hold_drain_while_pools: Tuple[str, ...] = ()
     #: predictive scale-out (default off): join on the arrival-rate
     #: *trend* — the last window's arrivals vs the window before it —
     #: instead of waiting for the trailing latency window to breach.  The
@@ -323,6 +330,12 @@ class ServeAutoscaler(FleetController):
 
         calm = p99 < p.scale_in_p99_s and depth == 0
         if not calm:
+            self._calm_ticks = 0
+            return []
+        if any(view.pending_by_pool.get(pool, 0) > 0
+               for pool in p.hold_drain_while_pools):
+            # an ingest/wheel wave is still in flight: its invalidations
+            # are queued-up future misses, so the calm is not credible
             self._calm_ticks = 0
             return []
         self._calm_ticks += 1

@@ -543,3 +543,37 @@ def test_predictive_joins_on_arrival_trend_before_any_breach():
                              arrivals=arrivals)
     assert at_max.tick(0.2, _view(0.2, active=8)) == []
     assert at_max._calm_ticks == 0
+
+
+def test_hold_drain_while_ingest_pool_pending():
+    """A calm serve window during an ingest wave must not drain: every
+    invalidated tile is a queued-up future miss, so the calm is not
+    credible until the named pools are quiet."""
+    pol = AutoscalePolicy(min_servers=2, max_servers=8, scale_in_step=3,
+                          calm_ticks_to_drain=2, cooldown_s=0.0,
+                          hold_drain_while_pools=("ingest",))
+    scaler = ServeAutoscaler(pol)
+
+    def view(now, ingest_pending):
+        v = _view(now, active=6)
+        v.pending_by_pool["ingest"] = ingest_pending
+        return v
+
+    # calm serve signals, but the wheel still has work: never drain
+    for i in range(5):
+        assert scaler.tick(0.1 * (i + 1), view(0.1 * (i + 1), 3)) == []
+    assert scaler._calm_ticks == 0  # the hold resets the debounce
+    # ingest quiesces: the normal calm debounce resumes
+    assert scaler.tick(0.6, view(0.6, 0)) == []
+    events = scaler.tick(0.7, view(0.7, 0))
+    assert len(events) == 1 and events[0].delta < 0
+
+
+def test_hold_drain_default_off_is_legacy():
+    pol = AutoscalePolicy(min_servers=2, max_servers=8,
+                          calm_ticks_to_drain=1, cooldown_s=0.0)
+    assert pol.hold_drain_while_pools == ()
+    scaler = ServeAutoscaler(pol)
+    v = _view(0.1, active=6)
+    v.pending_by_pool["ingest"] = 99  # ignored without the policy opt-in
+    assert scaler.tick(0.1, v) != []

@@ -27,9 +27,9 @@ SCHEMAS = {
     },
     "BENCH_serving.json": {
         "top": ["bench", "world", "trace", "slo", "rows", "mixed_workload",
-                "million_sweep", "geo_serving", "trace_shapes",
-                "encode_model", "predictive_scaling", "autoscaling",
-                "edge_cache", "simulator", "headline_p99_ms"],
+                "million_sweep", "geo_serving", "ingest_wheel",
+                "trace_shapes", "encode_model", "predictive_scaling",
+                "autoscaling", "edge_cache", "simulator", "headline_p99_ms"],
         "row": ["servers", "requests", "spike_multiplier", "mixed",
                 "offered_rps", "hit_rate", "cache_evictions", "p50_ms",
                 "p90_ms", "p99_ms", "max_ms", "spike_p99_ms",
@@ -291,6 +291,64 @@ def test_serving_geo_section_proves_issue_acceptance():
     headline = sweeps[-1]
     assert headline["nominal_requests"] >= 1_000_000
     assert headline["requests"] >= 1_000_000
+
+
+#: every proof field the ingest-wheel writer emits per row —
+#: schema-guarded so writer drift fails CI
+WHEEL_ROW_KEYS = [
+    "requests", "nominal_requests", "servers", "ingest_nodes",
+    "scene_batches", "wheel_ticks", "duration_s", "ingested_MiB",
+    "p50_ms_no_ingest", "p50_ms_with_wheel", "p99_ms_no_ingest",
+    "p99_ms_with_wheel", "hit_rate_no_ingest", "hit_rate_with_wheel",
+    "completed", "all_served", "chunk_writes", "tile_invalidations",
+    "tiles_checked", "tiles_stale", "post_ingest_tiles_fresh",
+    "batches_ingested", "batches_wheeled", "exactly_once",
+    "pyramid_writes_incremental", "pyramid_writes_full_equiv",
+    "pyramid_rebuilds", "incremental_write_ratio", "incremental_lt_full",
+    "twin_requests", "twin_bit_identical", "events", "wall_s",
+]
+
+WHEEL_TOP_KEYS = ["world", "base_rps", "alpha", "seed", "wheel_seed",
+                  "ingest_model", "full_rebuild_chunks", "rows"]
+
+
+def test_serving_ingest_wheel_section_proves_issue_acceptance():
+    """Issue 8 acceptance: a >= 10^5-request trace served while the
+    scene-batch wheel ingests concurrently, with every post-ingest cached
+    tile byte-identical to a from-scratch read, the incremental pyramid
+    rebuild writing fewer chunks than a full rebuild, the wheel's
+    exactly-once audit clean, and the read-only path pinned bit-identical
+    by the no-ingest twin."""
+    with open(ROOT / "BENCH_serving.json") as f:
+        record = json.load(f)
+    section = record["ingest_wheel"]
+    missing = [k for k in WHEEL_TOP_KEYS if k not in section]
+    assert not missing, f"ingest_wheel section missing {missing}"
+    assert section["full_rebuild_chunks"] > 0
+    assert section["ingest_model"]["decode_s_per_byte"] > 0
+    rows = section["rows"]
+    assert rows, "ingest_wheel has no rows"
+    for i, row in enumerate(rows):
+        missing = [k for k in WHEEL_ROW_KEYS if k not in row]
+        assert not missing, f"ingest_wheel row {i} missing {missing}"
+        assert row["all_served"] is True
+        # tiles rewritten mid-trace were re-read fresh, none stale
+        assert row["tiles_checked"] > 0 and row["tiles_stale"] == 0
+        assert row["post_ingest_tiles_fresh"] is True
+        # the wheel re-analyzed every ingested batch exactly once
+        assert row["exactly_once"] is True
+        assert row["batches_wheeled"] == row["scene_batches"]
+        # incremental rebuild writes strictly fewer chunks than full
+        assert row["incremental_lt_full"] is True
+        assert (row["pyramid_writes_incremental"]
+                < row["pyramid_writes_full_equiv"])
+        assert 0.0 < row["incremental_write_ratio"] < 1.0
+        # the zero-write twin leaves serve latencies bit-identical
+        assert row["twin_bit_identical"] is True
+        assert row["chunk_writes"] > 0 and row["tile_invalidations"] > 0
+    smoke = rows[0]
+    assert smoke["nominal_requests"] >= 100_000
+    assert smoke["servers"] >= 100
 
 
 def test_serving_trace_shapes_cover_diurnal_and_flash_crowd():

@@ -651,3 +651,102 @@ def test_64_server_serving_aggregates_pinned_across_engine_refactors():
     assert rep.cluster.queue_stats == {
         "submitted": 1500, "completed": 1500, "retried": 0, "expired": 0,
         "speculated": 0, "dead": 0, "duplicate_completions": 0}
+
+
+# ---------------------------------------------------------------------------
+# write invalidation: chunk rewrites must evict derived tiles
+# ---------------------------------------------------------------------------
+def test_tile_cache_invalidate():
+    cache = TileCache(MiB)
+    tile = np.ones((8, 8), dtype=np.float32)
+    cache.put(("a", 0, 0, 0), tile)
+    assert cache.invalidate(("a", 0, 0, 0))
+    assert not cache.invalidate(("a", 0, 0, 0))  # already gone
+    assert cache.get(("a", 0, 0, 0)) is None
+    assert cache.stats.invalidations == 1
+    assert cache.stats.evictions == 0  # correctness, not capacity
+    assert cache.bytes_used == 0
+
+
+def test_edge_cache_invalidate():
+    edge = EdgeCache(MiB)
+    edge.put(("a", 0, 0, 0, "raw"), 1000, "req000000")
+    assert edge.invalidate(("a", 0, 0, 0, "raw"))
+    assert edge.get(("a", 0, 0, 0, "raw")) is None
+    assert edge.stats.invalidations == 1
+
+
+def test_invalidation_bus_maps_chunks_to_tiles():
+    from repro.serve import TileInvalidationBus
+    inner, meta, cs, data = _world(hw=128, chunk=32, levels=2)
+    bus = TileInvalidationBus(inner, meta, "bucket", tile_px=64)
+    cache = TileCache(MiB)
+    edge = EdgeCache(MiB)
+    bus.register_cache(cache)
+    bus.register_cache(edge, fmts=("raw", "png"))
+    tile = np.ones((8, 8), dtype=np.float32)
+    # chunk (0,0) at level 0 lives inside tile (0,0) at tile_px=64
+    cache.put(("composite", 0, 0, 0), tile)
+    cache.put(("composite", 0, 1, 1), tile)  # untouched tile survives
+    edge.put(("composite", 0, 0, 0, "raw"), 100, "req000000")
+    edge.put(("composite", 0, 0, 0, "png"), 50, "req000001")
+    bus.on_write("bucket/composite/c/0.0.0")
+    assert cache.get(("composite", 0, 0, 0)) is None
+    assert cache.contains(("composite", 0, 1, 1))
+    assert edge.get(("composite", 0, 0, 0, "raw")) is None
+    assert edge.get(("composite", 0, 0, 0, "png")) is None
+    assert bus.chunk_writes == 1 and bus.invalidations == 3
+    # a pyramid-level chunk maps to that level's tiles
+    cache.put(("composite", 1, 0, 0), tile)
+    bus.on_write("bucket/composite/p1/c/0.0.0")
+    assert cache.get(("composite", 1, 0, 0)) is None
+    # non-chunk writes are ignored
+    bus.on_write("bucket/composite/.manifest.json")
+    assert bus.chunk_writes == 2
+    bus.close()
+
+
+def test_chunk_rewrite_mid_trace_refreshes_tiles():
+    """REGRESSION (the stale-tiles-forever bug): a tile requested before
+    and after a chunk rewrite must be re-read the second time — pre-fix
+    the second request was a (stale) cache hit."""
+    from repro.ingest import SceneBatch, make_wheel_handler
+    inner, meta, cs, data = _world(hw=128, chunk=32, levels=2)
+    trace = [TileRequest(t=0.5, level=0, x=0, y=0),
+             TileRequest(t=20.0, level=0, x=0, y=0)]
+    batch = SceneBatch(batch_id="0000", t=10.0, y0=0, x0=0,
+                       height=32, width=32, seed=9)
+    fleet = TileFleet(inner, meta, root="bucket", servers=1, tile_px=64)
+    rep = fleet.run(trace, ingest_tasks={"scene/0000": batch},
+                    ingest_handler=make_wheel_handler("bucket"),
+                    ingest_nodes=1)
+    assert rep.all_served
+    # second request re-read the pyramid: no hit anywhere in the run
+    assert rep.cache_hits == 0 and rep.cache_misses == 2
+    assert rep.ingest["tile_invalidations"] >= 1
+    # and what is cached now is byte-identical to a from-scratch read
+    assert rep.ingest["tiles_checked"] >= 1
+    assert rep.ingest["tiles_stale"] == 0
+
+
+def test_no_ingest_twin_is_bit_identical():
+    """The ingest plumbing must cost nothing when unused: the same trace
+    with and without an (empty-write) ingest pool gives identical serving
+    latencies — read-only behavior pinned."""
+    from repro.ingest import WheelTick, make_wheel_handler
+    inner, meta = _pin_world()
+    trace = _pin_trace(300)
+    base = TileFleet(inner, meta, root="bucket", servers=8, tile_px=128,
+                     cache_bytes=256 * KiB).run(trace)
+    # wheel ticks with no scene batches: KV scans only, no writes
+    ticks = {f"tick/{i}": WheelTick(tick=i, t=5.0 + i) for i in range(3)}
+    twin = TileFleet(inner, meta, root="bucket", servers=8, tile_px=128,
+                     cache_bytes=256 * KiB).run(
+        trace, ingest_tasks=ticks,
+        ingest_handler=make_wheel_handler("bucket"), ingest_nodes=2)
+    assert twin.samples == base.samples
+    assert twin.p99_s == base.p99_s and twin.mean_s == base.mean_s
+    assert twin.hit_rate == base.hit_rate
+    assert twin.bytes_served == base.bytes_served
+    assert twin.ingest["chunk_writes"] == 0
+    assert twin.ingest["tile_invalidations"] == 0

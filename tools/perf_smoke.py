@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python tools/perf_smoke.py
 
-Three tripwires, each compared against the committed records' own
+Four tripwires, each compared against the committed records' own
 ``wall_s`` and each failing only past ``--factor`` (default 2x):
 
 * the 512-node cluster-scaling sweep point (BENCH_cluster_scaling.json),
@@ -23,6 +23,10 @@ Three tripwires, each compared against the committed records' own
   reflow: WAN link domains must ride the same incremental per-zone
   water-filling as zones, so a regression to global recomputation (or a
   per-flow link scan) multiplies this point's wall-clock.
+* the ingest-wheel smoke point (the ``ingest_wheel`` smoke row, re-run
+  through ``benchmarks.serving.wheel_point``) — the canary for the
+  write path: scene-batch write flows, tile invalidation fan-out, and
+  the incremental pyramid rebuild all sit on this point's wall-clock.
 
 Every tripwire's delta lands in the CI job summary
 (``$GITHUB_STEP_SUMMARY``, markdown table) — or on stdout locally — so
@@ -102,6 +106,7 @@ def main(argv=None) -> int:
     if not args.skip_serving:
         failed |= _serving_tripwire(args.serving_record, args.factor, deltas)
         failed |= _geo_tripwire(args.serving_record, args.factor, deltas)
+        failed |= _wheel_tripwire(args.serving_record, args.factor, deltas)
     _emit_summary(deltas, args.factor)
     return 1 if failed else 0
 
@@ -167,6 +172,41 @@ def _geo_tripwire(record_path: str, factor: float, deltas: list) -> bool:
               f"slower than the committed baseline (limit {factor}x).  "
               f"Cross-region reflow has regressed; check that link domains "
               f"still ride the incremental per-zone water-filling.",
+              file=sys.stderr, flush=True)
+        return True
+    return False
+
+
+def _wheel_tripwire(record_path: str, factor: float, deltas: list) -> bool:
+    """Re-run the ingest-wheel smoke point; True on regression.  This
+    point serves a 10^5-request trace while an ingest pool writes and a
+    wheel re-analyzes, so it multiplies if write flows, invalidation
+    fan-out, or the incremental pyramid rebuild stop being cheap."""
+    try:
+        with open(record_path) as f:
+            serving = json.load(f)
+        wrow = serving["ingest_wheel"]["rows"][0]
+    except (OSError, KeyError, IndexError):
+        print("perf-smoke: no committed ingest-wheel baseline; "
+              "skipping the wheel tripwire", flush=True)
+        return False
+    from benchmarks.serving import wheel_point
+    point = wheel_point(wrow.get("nominal_requests", wrow["requests"]),
+                        wrow["servers"], batches=wrow["scene_batches"],
+                        ingest_nodes=wrow["ingest_nodes"])
+    wall, wbase = point["wall_s"], wrow["wall_s"]
+    print(f"perf-smoke: wheel {point['requests']}-request "
+          f"{point['servers']}-server + {point['scene_batches']}-batch "
+          f"point wall {wall:.3f}s vs committed baseline {wbase:.3f}s",
+          flush=True)
+    ok = not (wbase > 0 and wall > factor * wbase)
+    deltas.append({"name": "ingest-wheel smoke point",
+                   "baseline_s": wbase, "wall_s": wall, "ok": ok})
+    if not ok:
+        print(f"perf-smoke: REGRESSION — wheel point {wall / wbase:.1f}x "
+              f"slower than the committed baseline (limit {factor}x).  The "
+              f"write path has regressed; check the invalidation bus and "
+              f"the incremental pyramid rebuild before merging.",
               file=sys.stderr, flush=True)
         return True
     return False
