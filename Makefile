@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench perf-smoke docs-check deps-optional
+.PHONY: test bench-smoke bench perf-smoke docs-check coverage-floor deps-optional
 
 test:  ## tier-1: full suite, fail fast
 	$(PYTHON) -m pytest -x -q
@@ -25,8 +25,11 @@ bench-smoke:  ## scaling curve + serving SLO + end-to-end examples
 perf-smoke:  ## non-blocking: 512-node DES wall-clock vs committed baseline
 	$(PYTHON) tools/perf_smoke.py
 
+coverage-floor:  ## non-blocking: repro.core line coverage >= 85% (skips w/o pytest-cov)
+	$(PYTHON) tools/coverage_floor.py
+
 bench:  ## every paper-table reproduction + kernel timings
 	$(PYTHON) -m benchmarks.run
 
 deps-optional:  ## best-effort install of optional dev deps (offline-safe)
-	-$(PYTHON) -m pip install hypothesis
+	-$(PYTHON) -m pip install hypothesis pytest-cov

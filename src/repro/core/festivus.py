@@ -61,6 +61,21 @@ class FestivusConfig:
     #: which is identical either way) — and without pool threads the
     #: simulation is single-threaded end to end.
     inline_fetch: bool = False
+    #: local-SSD tier capacity in bytes (the second level of the two-level
+    #: design; see :class:`_SsdTier`).  0 — the default — disables the tier
+    #: entirely: no lookups, no admission, no device-time accrual, so a
+    #: mount with ``ssd_bytes=0`` behaves bit-identically to one built
+    #: before the tier existed.
+    ssd_bytes: int = 0
+    #: device service-time model for the SSD tier
+    ssd_model: perfmodel.LocalSsdModel = perfmodel.LOCAL_SSD_MODEL
+    #: admit store fetches into the SSD tier.  False is the read-around
+    #: admission policy: the mount still *serves* from a warm tier but
+    #: never fills it — what an ingest-pool mount sharing a persistent
+    #: tier would run so a one-pass scan cannot churn a serve tier's
+    #: working set.  (An ingest pool with ``ssd_bytes=0`` bypasses the
+    #: tier outright; writes never admit under any policy — write-around.)
+    ssd_admit: bool = True
 
 
 @dataclasses.dataclass
@@ -73,10 +88,33 @@ class FestivusStats:
     coalesced_fetches: int = 0
     #: transient store errors absorbed by the retry loop (pre-emptible realism)
     retried_ops: int = 0
+    #: SSD-tier counters (two-level storage).  A block lookup that misses
+    #: RAM consults the SSD tier when one is mounted: `ssd_hits` were
+    #: served from the device (generation-validated), `ssd_misses` fell
+    #: through to the store — `ssd_stale_drops` of those found an entry
+    #: stamped with an outdated KV generation and dropped it unserved.
+    #: Conservation law (pinned by tests/test_properties.py): with the
+    #: tier mounted, ``cache_hits + ssd_hits + ssd_misses`` equals total
+    #: block lookups, and ``ssd_hits + ssd_misses == cache_misses``.
+    ssd_hits: int = 0
+    ssd_misses: int = 0
+    ssd_stale_drops: int = 0
+    ssd_evictions: int = 0
+    ssd_fill_bytes: int = 0
+    #: modeled device time: `ssd_read_s` bills into request tails on hits
+    #: (an SSD hit replaces a remote GET and its fabric flow);
+    #: `ssd_fill_write_s` is the write-behind admission cost — reported
+    #: device busy-time, never added to the admitting request's latency.
+    ssd_read_s: float = 0.0
+    ssd_fill_write_s: float = 0.0
 
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    def ssd_hit_rate(self) -> float:
+        total = self.ssd_hits + self.ssd_misses
+        return self.ssd_hits / total if total else 0.0
 
     @staticmethod
     def merge(items) -> "FestivusStats":
@@ -126,12 +164,91 @@ class _BlockCache:
         return len(self._data)
 
 
+class SsdTier:
+    """Byte-bounded LRU of (path, block) -> (bytes, generation): the
+    persistent local-SSD level under the RAM :class:`_BlockCache`.
+
+    Two properties distinguish it from the RAM cache above it:
+
+    * **Persistence** — the tier is a standalone handle a fleet keeps
+      *across* mounts (`Festivus(..., ssd_tier=...)`), modeling a local
+      SSD that survives worker leases and remounts.  A remounting worker
+      starts RAM-cold but device-warm.
+    * **Generation stamps** — every entry carries the object's KV write
+      generation observed at fill time.  A lookup must present the
+      current generation (read from the shared stat KV, which every read
+      already consults for size); a mismatched stamp means some mount
+      rewrote the object since the fill, so the entry is dropped
+      unserved.  A rebuilt chunk is therefore never served stale no
+      matter how long the device held it.
+    """
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._data: Dict[Tuple[str, int], Tuple[bytes, object]] = {}
+        self._order: List[Tuple[str, int]] = []
+        self._bytes = 0
+        self._lock = threading.Lock()
+        #: cumulative capacity evictions over the tier's whole life (the
+        #: handle outlives mounts, so this is not per-campaign; mounts
+        #: snapshot deltas into their own FestivusStats)
+        self.evictions = 0
+
+    def get(self, key: Tuple[str, int],
+            generation) -> Tuple[Optional[bytes], bool]:
+        """Return ``(bytes, False)`` when `key` is held and stamped with
+        `generation`; ``(None, True)`` when a stale-stamped entry was
+        found and dropped; ``(None, False)`` on a plain miss."""
+        with self._lock:
+            entry = self._data.get(key)
+            if entry is None:
+                return None, False
+            data, stamp = entry
+            if stamp != generation:
+                self._bytes -= len(data)
+                self._order.remove(key)
+                del self._data[key]
+                return None, True
+            self._order.remove(key)
+            self._order.append(key)
+            return data, False
+
+    def put(self, key: Tuple[str, int], value: bytes, generation) -> None:
+        with self._lock:
+            if key in self._data:
+                self._bytes -= len(self._data[key][0])
+                self._order.remove(key)
+            self._data[key] = (value, generation)
+            self._order.append(key)
+            self._bytes += len(value)
+            while self._bytes > self.capacity and self._order:
+                old = self._order.pop(0)
+                self._bytes -= len(self._data.pop(old)[0])
+                self.evictions += 1
+
+    def invalidate_path(self, path: str) -> None:
+        with self._lock:
+            victims = [k for k in self._data if k[0] == path]
+            for k in victims:
+                self._bytes -= len(self._data[k][0])
+                self._order.remove(k)
+                del self._data[k]
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def __len__(self):
+        return len(self._data)
+
+
 class Festivus:
     """The virtual file system: open/read/stat/listdir over an ObjectStore."""
 
     def __init__(self, store: ObjectStore, meta: Optional[MetadataStore] = None,
                  config: Optional[FestivusConfig] = None,
-                 pool: Optional[ThreadPoolExecutor] = None):
+                 pool: Optional[ThreadPoolExecutor] = None,
+                 ssd_tier: Optional[SsdTier] = None):
         self.store = store
         self.meta = meta if meta is not None else MetadataStore()
         self.statcache = StatCache(self.meta)
@@ -141,6 +258,20 @@ class Festivus:
         #: += is not atomic, so all stats writes go through _bump
         self._stats_lock = threading.Lock()
         self._cache = _BlockCache(self.config.cache_bytes)
+        #: the local-SSD level (two-level storage).  A passed-in handle is
+        #: the *persistent* form — the device outliving this mount (a
+        #: fleet re-attaches it on remount); otherwise `ssd_bytes > 0`
+        #: creates a mount-lifetime tier.  None = single-level behavior,
+        #: bit-identical to the pre-tier read path.
+        if ssd_tier is not None:
+            self._ssd = ssd_tier
+        elif self.config.ssd_bytes > 0:
+            self._ssd = SsdTier(self.config.ssd_bytes)
+        else:
+            self._ssd = None
+        #: device read-time accrued by SSD hits since the last drain (the
+        #: DES bills it into the task tail: local reads ride no fabric flow)
+        self._pending_ssd_s = 0.0
         #: `pool` lets many mounts share one block engine (the cluster DES
         #: runs hundreds of mounts but one task at a time — per-mount pools
         #: would pin nodes x max_inflight idle OS threads); with
@@ -194,12 +325,23 @@ class Festivus:
 
     # -- write path ----------------------------------------------------------
     def write(self, path: str, data: bytes) -> None:
-        """Whole-object PUT (objects are immutable; update == rewrite)."""
+        """Whole-object PUT (objects are immutable; update == rewrite).
+
+        The PUT's store generation is recorded in the shared stat KV, so
+        every mount's next read of `path` — which consults that entry for
+        the size anyway — sees the bumped generation and refuses any SSD
+        entry stamped with the old one.  Writes never admit into the SSD
+        tier (write-around): a one-pass ingest wave must not evict the
+        read working set this tier exists to protect.
+        """
         meta = retrying(self.store.put, path, data,
                         attempts=self.config.max_retries,
                         on_retry=self._count_retry)
         self._cache.invalidate_path(path)
-        self.statcache.put(path, meta.size, meta.etag)
+        if self._ssd is not None:
+            self._ssd.invalidate_path(path)
+        self.statcache.put(path, meta.size, meta.etag,
+                           generation=meta.generation)
         for hook in self.write_hooks:
             hook(path)
 
@@ -207,25 +349,69 @@ class Festivus:
         retrying(self.store.delete, path, attempts=self.config.max_retries,
                  on_retry=self._count_retry)
         self._cache.invalidate_path(path)
+        if self._ssd is not None:
+            self._ssd.invalidate_path(path)
         self.statcache.remove(path)
         for hook in self.write_hooks:
             hook(path)
 
+    def drain_ssd_pending(self) -> float:
+        """Device read-time accrued by SSD hits since the last drain.
+        Always 0.0 with no tier mounted — the DES adds this into every
+        task tail, so the no-tier path must cost exactly nothing."""
+        if self._ssd is None:
+            return 0.0
+        with self._stats_lock:
+            s, self._pending_ssd_s = self._pending_ssd_s, 0.0
+            return s
+
     # -- block engine ---------------------------------------------------------
-    def _fetch_block(self, path: str, block: int, size: int) -> memoryview:
+    def _fetch_block(self, path: str, block: int, size: int,
+                     generation=None) -> memoryview:
         """Fetch one aligned block as a read-only buffer view (zero-copy
         from stores that can serve it that way); accounting (stats and,
-        under the DES, modeled service time) is identical to a bytes GET."""
+        under the DES, modeled service time) is identical to a bytes GET.
+
+        With an SSD tier mounted the device is consulted first: an entry
+        stamped with the caller's `generation` (read from the stat KV the
+        read already consulted) is served at device read time with *no*
+        store request and no fabric flow; a stale or missing entry falls
+        through to the store range-GET, whose bytes are then admitted
+        back into the tier write-behind (unless the mount's admission
+        policy is read-around).
+        """
         offset = block * self.config.block_bytes
         length = min(self.config.block_bytes, size - offset)
+        if self._ssd is not None:
+            data, stale = self._ssd.get((path, block), generation)
+            if data is not None:
+                read_s = self.config.ssd_model.read_time_s(len(data))
+                with self._stats_lock:
+                    self.stats.ssd_hits += 1
+                    self.stats.ssd_read_s += read_s
+                    self._pending_ssd_s += read_s
+                self._cache.put((path, block), data)
+                return data
+            if stale:
+                self._bump(ssd_misses=1, ssd_stale_drops=1)
+            else:
+                self._bump(ssd_misses=1)
         data = retrying(self.store.get_range_view, path, offset, length,
                         attempts=self.config.max_retries,
                         on_retry=self._count_retry)
         self._bump(blocks_fetched=1, bytes_fetched=len(data))
+        if self._ssd is not None and self.config.ssd_admit:
+            before = self._ssd.evictions
+            self._ssd.put((path, block), data, generation)
+            self._bump(ssd_fill_bytes=len(data),
+                       ssd_evictions=self._ssd.evictions - before,
+                       ssd_fill_write_s=self.config.ssd_model.write_time_s(
+                           len(data)))
         self._cache.put((path, block), data)
         return data
 
-    def _block_future(self, path: str, block: int, size: int) -> Future:
+    def _block_future(self, path: str, block: int, size: int,
+                      generation=None) -> Future:
         """Submit (or join) an async fetch of one block."""
         key = (path, block)
         with self._inflight_lock:
@@ -233,7 +419,8 @@ class Festivus:
             if fut is not None:
                 self._bump(coalesced_fetches=1)
                 return fut
-            fut = self._pool.submit(self._fetch_block, path, block, size)
+            fut = self._pool.submit(self._fetch_block, path, block, size,
+                                    generation)
             self._inflight[key] = fut
 
             def _done(f, key=key):
@@ -243,17 +430,19 @@ class Festivus:
             fut.add_done_callback(_done)
             return fut
 
-    def _get_block(self, path: str, block: int, size: int) -> bytes:
+    def _get_block(self, path: str, block: int, size: int,
+                   generation=None) -> bytes:
         cached = self._cache.get((path, block))
         if cached is not None:
             self._bump(cache_hits=1)
             return cached
         self._bump(cache_misses=1)
         if self._pool is None:  # inline mode: fetch on this thread
-            return self._fetch_block(path, block, size)
-        return self._block_future(path, block, size).result()
+            return self._fetch_block(path, block, size, generation)
+        return self._block_future(path, block, size, generation).result()
 
-    def _maybe_readahead(self, path: str, last_block: int, size: int) -> None:
+    def _maybe_readahead(self, path: str, last_block: int, size: int,
+                         generation=None) -> None:
         nblocks = -(-size // self.config.block_bytes)
         prev = self._last_block.get(path)
         self._last_block[path] = last_block
@@ -264,9 +453,9 @@ class Festivus:
             if self._cache.get((path, b)) is None:
                 self._bump(readahead_issued=1)
                 if self._pool is None:  # inline: prefetch == warm the cache
-                    self._fetch_block(path, b, size)
+                    self._fetch_block(path, b, size, generation)
                 else:
-                    self._block_future(path, b, size)
+                    self._block_future(path, b, size, generation)
 
     # -- read path -------------------------------------------------------------
     def _gather_parts(self, path: str, offset: int,
@@ -274,7 +463,13 @@ class Festivus:
         """Fetch the covering blocks of [offset, offset+length) and return
         the in-order list of bytes-like parts (shared by :meth:`read` /
         :meth:`read_view`; all cache and stats accounting lives here)."""
-        size = int(self.stat(path)["size"])
+        entry = self.stat(path)
+        size = int(entry["size"])
+        # the KV write generation rides the same stat entry every read
+        # already pays for — SSD-tier revalidation is therefore free in
+        # metadata ops (None with no tier, or for pre-generation entries,
+        # which then never validate: conservative, never stale)
+        gen = entry.get("generation") if self._ssd is not None else None
         if length is None:
             length = size - offset
         if offset < 0 or offset > size:
@@ -297,13 +492,13 @@ class Festivus:
             else:
                 self._bump(cache_misses=1)
                 if self._pool is None:
-                    blocks[b] = self._fetch_block(path, b, size)
+                    blocks[b] = self._fetch_block(path, b, size, gen)
                 else:
-                    futures[b] = self._block_future(path, b, size)
+                    futures[b] = self._block_future(path, b, size, gen)
         for b, fut in futures.items():
             blocks[b] = fut.result()
 
-        self._maybe_readahead(path, last, size)
+        self._maybe_readahead(path, last, size, gen)
 
         parts = []
         for b in range(first, last + 1):

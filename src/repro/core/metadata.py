@@ -159,8 +159,16 @@ class StatCache:
     def __init__(self, meta: MetadataStore):
         self.meta = meta
 
-    def put(self, path: str, size: int, etag: str = "", extra: Optional[dict] = None):
+    def put(self, path: str, size: int, etag: str = "",
+            extra: Optional[dict] = None, generation: Optional[int] = None):
+        """Record one object's metadata.  `generation` is the store's
+        monotonic write generation — the SSD tier's revalidation token
+        (:class:`repro.core.festivus.SsdTier`): it rides the same hmset
+        (no extra KV op), and every reader gets it with the hgetall it
+        already pays for the size."""
         entry = {"size": int(size), "etag": etag}
+        if generation is not None:
+            entry["generation"] = int(generation)
         if extra:
             entry.update(extra)
         self.meta.hmset(self.PREFIX + path, entry)
@@ -195,6 +203,6 @@ class StatCache:
         n = 0
         for key in store.list(""):
             meta = store.head(key)
-            self.put(key, meta.size, meta.etag)
+            self.put(key, meta.size, meta.etag, generation=meta.generation)
             n += 1
         return n

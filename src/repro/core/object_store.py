@@ -507,3 +507,50 @@ class ReplicaMap:
 
     def replica_count(self, key: str) -> int:
         return len(self.holders(key))
+
+
+class ZoneSpread:
+    """Fabric-aware placement of freshly-ingested hot data across zones.
+
+    The intra-region sibling of :class:`ReplicaMap`: where ReplicaMap
+    answers *which region* a reader pulls a replica from, ZoneSpread
+    answers *which fabric zone* hosts a freshly-written object's flows.
+    An ingest pool pinned into one zone (``ClusterConfig.pool_zones``)
+    writes every scene batch — and re-reads them all on the next wheel
+    revolution — against that single zone's water-filled capacity, while
+    the other zones idle.  Spreading placement assigns each written key
+    a home zone round-robin in first-write order (sticky thereafter, the
+    way a bucket's chunks don't migrate), so both the write wave and the
+    wheel's scan fan across every zone.
+
+    Deterministic by construction: assignment depends only on the order
+    of first :meth:`place` calls, never on hashing or clocks — the DES
+    twin tests rely on that.
+    """
+
+    def __init__(self, zones: int):
+        if zones < 1:
+            raise ValueError(f"zones={zones} must be >= 1")
+        self.zones = zones
+        self._zone_of: Dict[str, int] = {}
+        self._next = 0
+
+    def place(self, key: str) -> int:
+        """Home zone for `key`: assigned round-robin on first placement,
+        sticky on every later call."""
+        z = self._zone_of.get(key)
+        if z is None:
+            z = self._zone_of[key] = self._next
+            self._next = (self._next + 1) % self.zones
+        return z
+
+    def zone_of(self, key: str) -> Optional[int]:
+        """Assigned zone, or None if `key` was never placed."""
+        return self._zone_of.get(key)
+
+    def zones_used(self) -> int:
+        """Distinct zones holding at least one placed key."""
+        return len(set(self._zone_of.values()))
+
+    def __len__(self):
+        return len(self._zone_of)

@@ -98,6 +98,46 @@ GCSFUSE_STORE_MODEL = ObjectStoreModel(
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class LocalSsdModel:
+    """Per-worker local-SSD tier service-time model, t(B) = t0 + B/peak.
+
+    The second storage level of the two-level design (Xuan et al.,
+    PAPERS.md): a node-attached NVMe device between the RAM block cache
+    and the remote bucket.  Parameters follow the GCE local-SSD class of
+    device the paper's cluster exposes (Table I prices it at
+    :attr:`CostModel.local_ssd_gb_s`): tens-of-microseconds first-byte
+    latency and per-device streaming bandwidth in the GB/s range —
+    roughly 20x cheaper first-byte and comparable streaming rate versus
+    the object store's millisecond request overhead.
+
+    Reads bill on the serving path (an SSD hit replaces a remote GET and
+    its fabric flow).  Writes model the admission/fill cost; the Festivus
+    tier admits write-behind — fills ride the device write queue off the
+    request path — so write time is *reported* (``ssd_fill_write_s``)
+    rather than added to the admitting request's latency.
+    """
+
+    #: first-byte latency of a random device read, seconds
+    read_latency_s: float = 80e-6
+    #: sustained device read bandwidth, bytes/s
+    read_bytes_per_s: float = 1.56e9
+    #: first-byte latency of a device write (queued, then flushed), seconds
+    write_latency_s: float = 30e-6
+    #: sustained device write bandwidth, bytes/s
+    write_bytes_per_s: float = 1.09e9
+
+    def read_time_s(self, nbytes: int) -> float:
+        return self.read_latency_s + nbytes / self.read_bytes_per_s
+
+    def write_time_s(self, nbytes: int) -> float:
+        return self.write_latency_s + nbytes / self.write_bytes_per_s
+
+
+#: default local-SSD tier device (GCE local-SSD class)
+LOCAL_SSD_MODEL = LocalSsdModel()
+
+
 #: Table III 16-vCPU measured aggregate curve, (nodes, bytes/s) — the
 #: calibration anchors for the zone-capacity interpolation below.
 _TABLE_III_CURVE = ((1, 1.0 * GB), (4, 4.1 * GB), (16, 17.4 * GB),

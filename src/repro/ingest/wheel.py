@@ -189,6 +189,14 @@ def make_wheel_handler(root: str = DEFAULT_ROOT):
     Handlers receive a :class:`~repro.launch.cluster.Worker`; all I/O
     goes through its mount (accounted, water-filled on the fabric) and
     all coordination through its metered KV view.
+
+    When the cluster exposes a fabric-aware placement handle
+    (``worker.placement``, e.g. :class:`repro.core.object_store.ZoneSpread`),
+    each scene batch is placed into a home zone on ingest and both its
+    write wave and the wheel's later scan route their flows there
+    (:meth:`Worker.route_io`) — freshly-ingested hot chunks spread across
+    every zone's water-filled capacity instead of piling onto the ingest
+    pool's own (possibly pinned) zone.
     """
 
     def handler(worker, payload):
@@ -199,6 +207,10 @@ def make_wheel_handler(root: str = DEFAULT_ROOT):
         raise TypeError(f"not a wheel payload: {payload!r}")
 
     return handler
+
+
+def _placement_key(root: str, array: str, batch_id: str) -> str:
+    return f"{root}/{array}/batch:{batch_id}"
 
 
 def _scene_pixels(spec, batch: SceneBatch) -> np.ndarray:
@@ -217,6 +229,11 @@ def _scene_pixels(spec, batch: SceneBatch) -> np.ndarray:
 
 def _ingest_batch(worker, root: str, batch: SceneBatch) -> Dict[str, Any]:
     arr = worker.chunkstore(root).open(batch.array)
+    if worker.placement is not None:
+        # place the batch's chunks into a home zone (round-robin, sticky)
+        # and host this task's write flow there
+        worker.route_io(worker.placement.place(
+            _placement_key(root, batch.array, batch.batch_id)))
     data = _scene_pixels(arr.spec, batch)
     worker.charge_compute(
         perfmodel.INGEST_MODEL.ingest_cost_s(data.nbytes, batch.scenes))
@@ -250,6 +267,14 @@ def _wheel_tick(worker, root: str, tk: WheelTick) -> Dict[str, Any]:
     if not claimed:
         return {"tick": tk.tick, "batches": 0, "scanned_bytes": 0,
                 "pyramid_writes": 0}
+    if worker.placement is not None:
+        # scan where the data lives: a tick's read flow is hosted on the
+        # first claimed batch's home zone (one flow per task is the DES
+        # contract; claims are sorted, so the choice is deterministic)
+        zone = worker.placement.zone_of(
+            _placement_key(root, tk.array, claimed[0]))
+        if zone is not None:
+            worker.route_io(zone)
     arr = worker.chunkstore(root).open(tk.array)
     dh, dw = spatial_dims(arr.spec.shape)
     scanned = 0

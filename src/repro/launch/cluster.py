@@ -78,7 +78,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import perfmodel
 from repro.core.chunkstore import ChunkStore
-from repro.core.festivus import Festivus, FestivusConfig, FestivusStats
+from repro.core.festivus import Festivus, FestivusConfig, FestivusStats, SsdTier
 from repro.core.metadata import MetadataStore
 from repro.core.object_store import ObjectStore, StoreStats
 from repro.core.taskqueue import TaskQueue
@@ -375,6 +375,10 @@ class Worker:
         self.meta = meta
         #: task-routing pool (ClusterConfig.worker_pools); None = shared
         self.pool = pool
+        #: fabric-aware placement handle (ClusterConfig.placement); a
+        #: handler writing fresh data consults it and routes its flows to
+        #: the placed zone via :meth:`route_io`
+        self.placement = None
         #: False once pre-empted by an ElasticSchedule leave event
         self.active = True
         #: virtual instants bounding this node's uptime: when it joined
@@ -508,6 +512,27 @@ class ClusterConfig:
     #: cache invalidation bus here so chunk rewrites from an ingest pool
     #: evict derived tiles everywhere.
     mount_write_hook: Optional[Callable[[str], None]] = None
+    #: pool name -> per-mount festivus override (two-level storage's
+    #: pool-scoped admission policy): e.g. the serve pool mounts a local
+    #: SSD tier (``ssd_bytes > 0``) while the ingest pool keeps the
+    #: default single-level mount, so an ingest wave can neither fill nor
+    #: churn the serve tier.  Pools absent from the map — and all workers
+    #: when None — use :attr:`festivus`.  The same virtual-time
+    #: adjustments (readahead off, inline fetch) apply to every entry.
+    pool_festivus: Optional[Dict[Optional[str], FestivusConfig]] = None
+    #: (pool, worker index) -> persistent :class:`SsdTier` handle.  When
+    #: set, a worker whose resolved festivus config enables the tier
+    #: attaches the registry's tier for its slot (creating it on first
+    #: attach) instead of a mount-lifetime one — the local device that
+    #: survives leases, remounts, and engine rebuilds.  The caller owns
+    #: the registry (a plain dict) and carries it between campaigns.
+    ssd_tier_registry: Optional[Dict[Tuple[Optional[str], int], SsdTier]] = None
+    #: fabric-aware placement handle (e.g.
+    #: :class:`repro.core.object_store.ZoneSpread`) exposed to handlers as
+    #: ``worker.placement``: an ingest handler places freshly-written data
+    #: across zones and routes its flows (Worker.route_io) to the placed
+    #: zone instead of piling everything onto the worker's home zone.
+    placement: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -617,7 +642,10 @@ class ClusterEngine:
         #: everything the fleet writes (and vice versa)
         self.meta = meta if meta is not None else MetadataStore()
         fest_cfg = self.config.festivus or FestivusConfig()
-        if self.config.virtual_time:
+
+        def _adjust(cfg: FestivusConfig) -> FestivusConfig:
+            if not self.config.virtual_time:
+                return cfg
             # readahead pool threads would accrue service time asynchronously
             # across task boundaries, making the DES nondeterministic; its
             # latency-hiding effect is already modeled by water-filling the
@@ -626,9 +654,15 @@ class ClusterEngine:
             # thread-pool round-trip per block fetch is pure overhead —
             # blocks are fetched synchronously (as zero-copy views) and the
             # whole simulation stays on one thread
-            fest_cfg = dataclasses.replace(fest_cfg, readahead_blocks=0,
-                                           inline_fetch=True)
-        self._fest_cfg = fest_cfg
+            return dataclasses.replace(cfg, readahead_blocks=0,
+                                       inline_fetch=True)
+
+        self._fest_cfg = _adjust(fest_cfg)
+        #: per-pool festivus overrides (pool-scoped SSD admission), with
+        #: the same virtual-time adjustments as the shared default
+        self._pool_fest_cfg = {
+            pool: _adjust(cfg)
+            for pool, cfg in (self.config.pool_festivus or {}).items()}
         self._store_model = (self.config.store_model
                              if self.config.virtual_time else None)
         self._meta_latency = (self.config.meta_op_latency_s
@@ -674,18 +708,29 @@ class ClusterEngine:
         autoscaler growing the serve pool); None keeps positional
         assignment (joiners beyond the partition land in the default
         shared pool)."""
-        mount = MountStore(self.inner, model=self._store_model)
-        mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
-        fs = Festivus(mount, meta=mmeta, config=self._fest_cfg)
-        if self.config.mount_write_hook is not None:
-            fs.write_hooks.append(self.config.mount_write_hook)
         pool = (pool_override if pool_override is not None
                 else self._pool_of(index))
+        mount = MountStore(self.inner, model=self._store_model)
+        mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
+        fcfg = self._pool_fest_cfg.get(pool, self._fest_cfg)
+        ssd_tier = None
+        if self.config.ssd_tier_registry is not None and fcfg.ssd_bytes > 0:
+            # the persistent local device for this slot: created on first
+            # attach, re-attached (warm) by every later mount of the slot
+            ssd_tier = self.config.ssd_tier_registry.get((pool, index))
+            if ssd_tier is None:
+                ssd_tier = SsdTier(fcfg.ssd_bytes)
+                self.config.ssd_tier_registry[(pool, index)] = ssd_tier
+        fs = Festivus(mount, meta=mmeta, config=fcfg, ssd_tier=ssd_tier)
+        if self.config.mount_write_hook is not None:
+            fs.write_hooks.append(self.config.mount_write_hook)
         zone = index % self.config.zones
         if self.config.pool_zones is not None and pool in self.config.pool_zones:
             zone = self.config.pool_zones[pool] % self.config.zones
-        return Worker(index, mount, fs, perfmodel.WorkerClock(),
-                      zone=zone, meta=mmeta, pool=pool)
+        worker = Worker(index, mount, fs, perfmodel.WorkerClock(),
+                        zone=zone, meta=mmeta, pool=pool)
+        worker.placement = self.config.placement
+        return worker
 
     # -- public API -----------------------------------------------------------
     def run(self, tasks: Dict[str, Any], handler: Handler,
@@ -786,7 +831,10 @@ class ClusterEngine:
             io_s = service_s / self._inflight
             if nbytes:
                 io_s = max(io_s, nbytes / self._node_cap)
+        # SSD-tier hits ride no fabric flow: their device read time bills
+        # straight into the tail (exactly 0.0 with no tier mounted)
         tail_s = (worker.meta.drain_pending() + worker._drain_compute()
+                  + worker.fs.drain_ssd_pending()
                   + self.config.compute_s_per_task)
         return io_s, nbytes, tail_s
 

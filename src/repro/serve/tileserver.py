@@ -31,7 +31,7 @@ import numpy as np
 from repro.core import perfmodel
 from repro.core.chunkstore import (ChunkedArray, ChunkStore, parse_chunk_key,
                                    spatial_dims)
-from repro.core.festivus import Festivus, FestivusConfig
+from repro.core.festivus import Festivus, FestivusConfig, SsdTier
 from repro.core.metadata import MetadataStore
 from repro.core.object_store import ObjectStore
 from repro.launch.cluster import ClusterConfig, ClusterEngine, ClusterReport, Worker
@@ -533,11 +533,15 @@ class TileFleet:
                  block_bytes: int = 4 * perfmodel.MiB,
                  max_inflight: int = 16,
                  edge_cache_bytes: int = 0,
-                 autoscale: Optional[AutoscalePolicy] = None):
+                 autoscale: Optional[AutoscalePolicy] = None,
+                 ssd_bytes: int = 0,
+                 placement=None):
         if servers < 1:
             raise ValueError(f"need at least one server, got {servers}")
         if edge_cache_bytes < 0:
             raise ValueError(f"negative edge cache {edge_cache_bytes}")
+        if ssd_bytes < 0:
+            raise ValueError(f"negative ssd tier {ssd_bytes}")
         self.store = store
         self.meta = meta
         self.root = root
@@ -556,6 +560,22 @@ class TileFleet:
         #: an AutoscalePolicy lets a ServeAutoscaler grow/drain the serve
         #: pool mid-run; `servers` is then the starting size
         self.autoscale = autoscale
+        #: > 0 mounts a persistent local-SSD tier under every *serve*-pool
+        #: festivus mount (two-level storage).  Pool-scoped by design:
+        #: batch and ingest mounts stay single-level, so a scan or ingest
+        #: wave can neither fill nor churn the serve tier.  The RAM block
+        #: cache stays off (the tile cache remains the cache under test);
+        #: the SSD level sits directly under it.
+        self.ssd_bytes = ssd_bytes
+        #: the persistent devices: (pool, worker index) -> SsdTier,
+        #: carried across run() calls on this fleet — a re-run serve pool
+        #: starts RAM-cold but device-warm, exactly the property a local
+        #: SSD that outlives worker leases has
+        self.ssd_tiers: Dict[Tuple[Optional[str], int], SsdTier] = {}
+        #: fabric-aware placement handle (e.g. object_store.ZoneSpread)
+        #: exposed to handlers as ``worker.placement``: the ingest wheel
+        #: spreads freshly-written scene batches across fabric zones
+        self.placement = placement
 
     def _config(self, batch_nodes: int,
                 controller: Optional[ServeAutoscaler] = None,
@@ -578,6 +598,19 @@ class TileFleet:
         heartbeat_s = (lease_s / 2.0
                        if controller is not None
                        and (batch_nodes or ingest_nodes) else None)
+        fest = FestivusConfig(block_bytes=self.block_bytes,
+                              readahead_blocks=0, cache_bytes=0,
+                              max_inflight=self.max_inflight)
+        # pool-scoped two-level storage: only serve mounts get the SSD
+        # tier (ingest/batch traffic write-arounds it by construction),
+        # and the tiers themselves persist on the fleet across runs.
+        # With ssd_bytes=0 nothing is passed at all — ClusterConfig
+        # defaults — keeping the single-level path bit-identical.
+        pool_fest = ssd_registry = None
+        if self.ssd_bytes > 0:
+            pool_fest = {SERVE_POOL: dataclasses.replace(
+                fest, ssd_bytes=self.ssd_bytes)}
+            ssd_registry = self.ssd_tiers
         return ClusterConfig(
             nodes=self.servers + batch_nodes + ingest_nodes, vcpus=self.vcpus,
             virtual_time=True, lease_s=lease_s, heartbeat_s=heartbeat_s,
@@ -589,11 +622,11 @@ class TileFleet:
             min_completions_for_speculation=10**9,
             fabric=self.fabric, zones=self.zones,
             worker_pools=pools, controller=controller,
+            pool_festivus=pool_fest, ssd_tier_registry=ssd_registry,
+            placement=self.placement,
             # the tile cache is the cache under test; festivus block cache
             # off so hits/misses are attributable to it alone
-            festivus=FestivusConfig(block_bytes=self.block_bytes,
-                                    readahead_blocks=0, cache_bytes=0,
-                                    max_inflight=self.max_inflight))
+            festivus=fest)
 
     def _edge_filter(self, trace: Sequence[TileRequest], edge: EdgeCache,
                      purge_events: Optional[Sequence[Tuple[float, Tuple]]] = None):

@@ -27,7 +27,7 @@ SCHEMAS = {
     },
     "BENCH_serving.json": {
         "top": ["bench", "world", "trace", "slo", "rows", "mixed_workload",
-                "million_sweep", "geo_serving", "ingest_wheel",
+                "million_sweep", "geo_serving", "ingest_wheel", "two_level",
                 "trace_shapes", "encode_model", "predictive_scaling",
                 "autoscaling", "edge_cache", "simulator", "headline_p99_ms"],
         "row": ["servers", "requests", "spike_multiplier", "mixed",
@@ -346,6 +346,90 @@ def test_serving_ingest_wheel_section_proves_issue_acceptance():
         # the zero-write twin leaves serve latencies bit-identical
         assert row["twin_bit_identical"] is True
         assert row["chunk_writes"] > 0 and row["tile_invalidations"] > 0
+    smoke = rows[0]
+    assert smoke["nominal_requests"] >= 100_000
+    assert smoke["servers"] >= 100
+
+
+#: every proof field the two-level-storage writer emits per row —
+#: schema-guarded so writer drift fails CI
+TWO_LEVEL_ROW_KEYS = [
+    "requests", "nominal_requests", "servers", "ingest_nodes",
+    "scene_batches", "duration_s", "ssd_bytes",
+    "p50_ms_no_tier", "p50_ms_with_tier",
+    "p99_ms_no_tier", "p99_ms_with_tier", "p99_improvement_ms",
+    "tier_beats_baseline", "hit_rate_no_tier", "hit_rate_with_tier",
+    "completed", "all_served",
+    "serve_bytes_read_no_tier", "serve_bytes_read_with_tier",
+    "store_read_reduction", "ssd_hits", "ssd_misses", "ssd_hit_rate",
+    "ssd_stale_drops", "ssd_evictions", "ssd_fill_MiB",
+    "ssd_conservation_ok", "chunk_writes", "tiles_checked", "tiles_stale",
+    "post_ingest_tiles_fresh", "twin_requests",
+    "tier_disabled_bit_identical", "placement", "events", "wall_s",
+]
+
+TWO_LEVEL_TOP_KEYS = ["world", "base_rps", "alpha", "seed", "wheel_seed",
+                      "ssd_model", "ssd_bytes", "rows"]
+
+TWO_LEVEL_PLACEMENT_KEYS = [
+    "zones", "requests", "scene_batches", "p99_ms_unplaced",
+    "p99_ms_spread", "placements", "zones_used", "spread_covers_all_zones",
+]
+
+
+def test_serving_two_level_section_proves_issue_acceptance():
+    """Issue 9 acceptance: the PR-8 wheel world with the persistent
+    serve-pool SSD tier — serve p99 under the concurrent wheel strictly
+    better than the tierless baseline on the identical trace, the
+    baseline reproducing the committed ingest_wheel number, the
+    freshness probe still clean under KV-generation revalidation, the
+    conservation law holding over the serve pool's counters, and the
+    tier-disabled twin bit-identical."""
+    with open(ROOT / "BENCH_serving.json") as f:
+        record = json.load(f)
+    section = record["two_level"]
+    missing = [k for k in TWO_LEVEL_TOP_KEYS if k not in section]
+    assert not missing, f"two_level section missing {missing}"
+    # the tier's device model rides in the record (reproducibility)
+    assert section["ssd_model"]["read_latency_s"] > 0
+    assert section["ssd_model"]["read_bytes_per_s"] > 0
+    # identical world/trace family as the wheel section it baselines on
+    wheel = record["ingest_wheel"]
+    assert section["world"] == wheel["world"]
+    assert section["seed"] == wheel["seed"]
+    assert section["wheel_seed"] == wheel["wheel_seed"]
+    rows = section["rows"]
+    assert rows, "two_level has no rows"
+    for i, row in enumerate(rows):
+        missing = [k for k in TWO_LEVEL_ROW_KEYS if k not in row]
+        assert not missing, f"two_level row {i} missing {missing}"
+        assert row["all_served"] is True
+        # THE acceptance number: tier p99 strictly better than tierless
+        assert row["tier_beats_baseline"] is True
+        assert row["p99_ms_with_tier"] < row["p99_ms_no_tier"]
+        assert row["p99_improvement_ms"] > 0
+        # the tierless side IS the PR-8 path: same p99 as ingest_wheel
+        assert row["p99_ms_no_tier"] == wheel["rows"][0]["p99_ms_with_wheel"]
+        # the tier displaced store traffic onto the device
+        assert row["ssd_hits"] > 0
+        assert row["store_read_reduction"] > 0.5
+        assert (row["serve_bytes_read_with_tier"]
+                < row["serve_bytes_read_no_tier"])
+        # conservation: ssd_hits + ssd_misses == serve-pool cache_misses
+        assert row["ssd_conservation_ok"] is True
+        # revalidation caught the wheel's rewrites and stayed fresh
+        assert row["chunk_writes"] > 0 and row["ssd_stale_drops"] > 0
+        assert row["tiles_checked"] > 0 and row["tiles_stale"] == 0
+        assert row["post_ingest_tiles_fresh"] is True
+        # ssd_bytes=0 must be the PR-8 path bit for bit
+        assert row["tier_disabled_bit_identical"] is True
+        # fabric-aware placement spread the wheel across every zone
+        pl = row["placement"]
+        pmissing = [k for k in TWO_LEVEL_PLACEMENT_KEYS if k not in pl]
+        assert not pmissing, f"two_level placement missing {pmissing}"
+        assert pl["spread_covers_all_zones"] is True
+        assert pl["zones_used"] == pl["zones"] >= 2
+        assert pl["placements"] >= pl["zones"]
     smoke = rows[0]
     assert smoke["nominal_requests"] >= 100_000
     assert smoke["servers"] >= 100

@@ -580,3 +580,139 @@ def test_batched_arrivals_bit_identical_to_per_event_path():
     # and the point of it all: the arrival front end stopped paying the
     # heap — push/pop counts collapse on the batched path
     assert batched.simulator["events"] < legacy.simulator["events"] / 2
+
+
+# ---------------------------------------------------------------------------
+# two-level storage at the engine: pool-scoped tiers, persistence, and the
+# tier-disabled twin (the PR's bit-identity guarantee)
+# ---------------------------------------------------------------------------
+def _two_pool_setup():
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x42" * (4 * MiB))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    fest = FestivusConfig(block_bytes=1 * MiB, readahead_blocks=0,
+                          cache_bytes=0, max_inflight=2)
+    tasks = {}
+    pools = {}
+    for i in range(8):
+        tasks[f"s{i}"] = (i % 4) * MiB
+        pools[f"s{i}"] = "serve"
+    for i in range(4):
+        tasks[f"b{i}"] = (i % 4) * MiB
+        pools[f"b{i}"] = "batch"
+    return inner, meta, fest, tasks, pools
+
+
+def _two_pool_handler(worker, offset):
+    return len(worker.fs.read("obj", offset, 1 * MiB))
+
+
+def _two_pool_report(inner, meta, fest, tasks, pools, *,
+                     pool_festivus=None, registry=None):
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=4, virtual_time=True, lease_s=3600.0,
+        worker_pools=(("serve", 2), ("batch", 2)),
+        festivus=fest, pool_festivus=pool_festivus,
+        ssd_tier_registry=registry))
+    return engine.run(tasks, _two_pool_handler, pools=pools)
+
+
+def test_pool_scoped_ssd_tier_isolation():
+    """Only the pool whose FestivusConfig mounts a tier gets one: serve
+    workers accrue ssd stats, batch workers stay single-level."""
+    from repro.core.festivus import FestivusStats
+
+    inner, meta, fest, tasks, pools = _two_pool_setup()
+    import dataclasses as _dc
+    registry = {}
+    rep = _two_pool_report(
+        inner, meta, fest, tasks, pools,
+        pool_festivus={"serve": _dc.replace(fest, ssd_bytes=64 * MiB)},
+        registry=registry)
+    assert rep.all_done
+    serve = FestivusStats.merge(w.festivus_stats for w in rep.per_worker
+                                if w.pool == "serve")
+    batch = FestivusStats.merge(w.festivus_stats for w in rep.per_worker
+                                if w.pool == "batch")
+    assert serve.ssd_hits + serve.ssd_misses == serve.cache_misses
+    assert serve.ssd_misses > 0 and serve.ssd_fill_bytes > 0
+    assert batch.ssd_hits == batch.ssd_misses == batch.ssd_fill_bytes == 0
+    # the registry holds exactly the serve workers' devices
+    assert set(registry) == {("serve", 0), ("serve", 1)}
+
+
+def test_ssd_tier_registry_persists_across_engines():
+    """A second engine over the same registry starts device-warm: the
+    re-run serves from the SSD with no store reads at all."""
+    import dataclasses as _dc
+
+    inner, meta, fest, tasks, pools = _two_pool_setup()
+    registry = {}
+    pf = {"serve": _dc.replace(fest, ssd_bytes=64 * MiB)}
+    _two_pool_report(inner, meta, fest, tasks, pools,
+                     pool_festivus=pf, registry=registry)
+    warm = _two_pool_report(inner, meta, fest, tasks, pools,
+                            pool_festivus=pf, registry=registry)
+    from repro.core.festivus import FestivusStats
+    serve = FestivusStats.merge(w.festivus_stats for w in warm.per_worker
+                                if w.pool == "serve")
+    assert serve.ssd_misses == 0 and serve.ssd_hits == serve.cache_misses
+    serve_reads = sum(w.store_stats.bytes_read for w in warm.per_worker
+                     if w.pool == "serve")
+    assert serve_reads == 0
+    # and the device time is billed: a warm run still takes virtual time
+    assert warm.makespan_s > 0
+
+
+def test_tier_disabled_twin_bit_identical():
+    """ssd_bytes=0 through the pool_festivus machinery must replay the
+    plain engine bit for bit — completion instants, results, makespans,
+    and per-worker counters (the 'x + 0.0 == x' guarantee plus the
+    never-even-adds-0.0 drain path)."""
+    import dataclasses as _dc
+
+    inner, meta, fest, tasks, pools = _two_pool_setup()
+    plain = _two_pool_report(inner, meta, fest, tasks, pools)
+    inner2, meta2, fest2, tasks2, pools2 = _two_pool_setup()
+    twin = _two_pool_report(
+        inner2, meta2, fest2, tasks2, pools2,
+        pool_festivus={"serve": _dc.replace(fest2, ssd_bytes=0)},
+        registry={})
+    assert twin.completion_times == plain.completion_times
+    assert twin.results == plain.results
+    assert twin.makespan_s == plain.makespan_s
+    assert twin.simulator["events"] == plain.simulator["events"]
+    assert ([(w.worker, w.tasks_completed, w.store_stats.bytes_read,
+              w.virtual_time_s) for w in twin.per_worker]
+            == [(w.worker, w.tasks_completed, w.store_stats.bytes_read,
+                 w.virtual_time_s) for w in plain.per_worker])
+
+
+def test_placement_reaches_workers():
+    """ClusterConfig.placement is exposed on every worker (the ingest
+    wheel's fabric-aware routing handle), defaulting to None."""
+    from repro.core.object_store import ZoneSpread
+
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x11" * KiB)
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    spread = ZoneSpread(2)
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=2, virtual_time=True, zones=2, placement=spread))
+    seen = []
+
+    def handler(worker, payload):
+        seen.append(worker.placement)
+        worker.route_io(worker.placement.place(f"k{payload}"))
+        return len(worker.fs.read("obj"))
+
+    rep = engine.run({f"t{i}": i for i in range(4)}, handler)
+    assert rep.all_done
+    assert all(p is spread for p in seen)
+    assert spread.zones_used() == 2

@@ -23,8 +23,8 @@ from repro.core import (
     TransientStoreError,
 )
 from repro.core import codec as codec_mod
-from repro.core.festivus import FestivusStats
-from repro.core.object_store import StoreStats, retrying
+from repro.core.festivus import FestivusStats, SsdTier, _BlockCache
+from repro.core.object_store import StoreStats, ZoneSpread, retrying
 
 
 # ---------------------------------------------------------------------------
@@ -528,3 +528,188 @@ def test_statcache_sync_from_store(store):
     sc = StatCache(MetadataStore())
     assert sc.sync_from_store(store) == 2
     assert sc.size("x/2") == 3
+
+
+# ---------------------------------------------------------------------------
+# block cache (direct unit tests: the RAM level of two-level storage)
+# ---------------------------------------------------------------------------
+def test_block_cache_lru_eviction_order():
+    c = _BlockCache(capacity_bytes=300)
+    c.put(("p", 0), b"a" * 100)
+    c.put(("p", 1), b"b" * 100)
+    c.put(("p", 2), b"c" * 100)
+    assert len(c) == 3
+    # touching block 0 moves it to MRU: block 1 is now the LRU victim
+    assert c.get(("p", 0)) == b"a" * 100
+    c.put(("p", 3), b"d" * 100)
+    assert c.get(("p", 1)) is None          # evicted
+    assert c.get(("p", 0)) == b"a" * 100    # survived the touch
+    assert c.get(("p", 2)) == b"c" * 100
+    assert c.get(("p", 3)) == b"d" * 100
+
+
+def test_block_cache_replace_does_not_double_count():
+    c = _BlockCache(capacity_bytes=250)
+    c.put(("p", 0), b"a" * 100)
+    c.put(("p", 0), b"b" * 100)  # replace, not accumulate
+    c.put(("p", 1), b"c" * 100)  # 200 <= 250: both must fit
+    assert c.get(("p", 0)) == b"b" * 100
+    assert c.get(("p", 1)) == b"c" * 100
+    # an oversized value clears everything smaller, never loops
+    c.put(("p", 2), b"z" * 300)
+    assert len(c) == 0 or c.get(("p", 2)) is None
+
+
+def test_readahead_fetches_bypass_miss_accounting(store):
+    """Readahead prefetches go straight to _fetch_block: they bump
+    readahead_issued and blocks_fetched but never cache_misses — the
+    accounting contract the two-level conservation law
+    (ssd_hits + ssd_misses == cache_misses) depends on when readahead
+    is enabled."""
+    data = bytes(range(256)) * 16  # 4096 B = 4 x 1 KiB blocks
+    fs = Festivus(store, config=FestivusConfig(block_bytes=1024,
+                                               readahead_blocks=2,
+                                               inline_fetch=True))
+    fs.write("f", data)
+    fs.read("f", 0, 1024)      # miss on block 0
+    fs.read("f", 1024, 1024)   # miss on block 1, prefetch blocks 2-3
+    assert fs.stats.cache_misses == 2
+    assert fs.stats.readahead_issued == 2
+    assert fs.stats.blocks_fetched == 4  # 2 demand + 2 readahead
+    fs.read("f", 2048, 2048)   # blocks 2-3: served by the prefetches
+    assert fs.stats.cache_misses == 2
+    assert fs.stats.cache_hits == 2
+
+
+# ---------------------------------------------------------------------------
+# two-level storage: the persistent SSD tier (deterministic twins of the
+# hypothesis properties in test_properties.py)
+# ---------------------------------------------------------------------------
+def test_ssd_tier_lru_order_and_byte_bound():
+    t = SsdTier(capacity_bytes=300)
+    t.put(("p", 0), b"a" * 100, 1)
+    t.put(("p", 1), b"b" * 100, 1)
+    t.put(("p", 2), b"c" * 100, 1)
+    assert t.bytes_used == 300 and len(t) == 3
+    assert t.get(("p", 0), 1) == (b"a" * 100, False)  # touch -> MRU
+    t.put(("p", 3), b"d" * 100, 1)
+    assert t.bytes_used <= t.capacity
+    assert t.evictions == 1
+    assert t.get(("p", 1), 1) == (None, False)        # the LRU victim
+    assert t.get(("p", 0), 1) == (b"a" * 100, False)
+    # replace does not double-count bytes
+    t.put(("p", 0), b"e" * 100, 2)
+    assert t.bytes_used == 300
+    assert t.get(("p", 0), 2) == (b"e" * 100, False)
+
+
+def test_ssd_tier_generation_revalidation():
+    t = SsdTier(capacity_bytes=1000)
+    t.put(("p", 0), b"old", 7)
+    # a mismatched stamp is dropped unserved — stale, not a plain miss
+    assert t.get(("p", 0), 8) == (None, True)
+    # and the entry is gone: the next lookup is a plain miss
+    assert t.get(("p", 0), 8) == (None, False)
+    assert t.bytes_used == 0
+    # None vs int is conservatively a mismatch too (pre-generation entry)
+    t.put(("p", 1), b"x", None)
+    assert t.get(("p", 1), 3) == (None, True)
+
+
+def test_two_level_conservation_twin(store):
+    """Deterministic twin of the conservation property: with the RAM
+    cache off, every read goes to exactly one of {SSD hit, SSD miss}."""
+    meta = MetadataStore()
+    fs = Festivus(store, meta=meta,
+                  config=FestivusConfig(block_bytes=1024, cache_bytes=0,
+                                        readahead_blocks=0, ssd_bytes=8192,
+                                        inline_fetch=True))
+    fs.write("obj", bytes(range(256)) * 8)  # 2048 B = 2 blocks
+    fs.read("obj")                  # 2 ssd misses, write-behind fills
+    assert (fs.stats.ssd_hits, fs.stats.ssd_misses) == (0, 2)
+    assert fs.stats.ssd_fill_bytes == 2048
+    assert fs.read("obj") == bytes(range(256)) * 8  # 2 ssd hits
+    assert (fs.stats.ssd_hits, fs.stats.ssd_misses) == (2, 2)
+    assert fs.stats.ssd_hits + fs.stats.ssd_misses == fs.stats.cache_misses
+    assert fs.stats.ssd_hit_rate() == 0.5
+    # device read time accrued only for hits, and drains exactly once
+    assert fs.drain_ssd_pending() > 0.0
+    assert fs.drain_ssd_pending() == 0.0
+
+
+def test_two_level_never_serves_stale_across_mounts(store):
+    """A rebuilt object is never served stale from the device: a write on
+    a *different* mount (which cannot see this mount's tier) bumps the KV
+    generation, and the tier drops its stamped entry unserved."""
+    meta = MetadataStore()
+    cfg = FestivusConfig(block_bytes=1024, cache_bytes=0,
+                         readahead_blocks=0, ssd_bytes=8192,
+                         inline_fetch=True)
+    reader = Festivus(store, meta=meta, config=cfg)
+    writer = Festivus(store, meta=meta, config=FestivusConfig())
+    writer.write("obj", b"v1" * 512)
+    assert reader.read("obj") == b"v1" * 512   # fills the tier
+    assert reader.read("obj") == b"v1" * 512   # served from the tier
+    assert reader.stats.ssd_hits == 1
+    writer.write("obj", b"v2" * 512)           # reader's tier not invalidated
+    assert reader.read("obj") == b"v2" * 512   # revalidation catches it
+    assert reader.stats.ssd_stale_drops == 1
+    assert reader.read("obj") == b"v2" * 512   # re-admitted at the new gen
+    assert reader.stats.ssd_hits == 2
+
+
+def test_ssd_write_around_and_read_around(store):
+    meta = MetadataStore()
+    fs = Festivus(store, meta=meta,
+                  config=FestivusConfig(block_bytes=1024, cache_bytes=0,
+                                        readahead_blocks=0, ssd_bytes=8192,
+                                        inline_fetch=True))
+    # write-around: a write invalidates but never admits
+    fs.write("obj", b"w" * 1024)
+    assert len(fs._ssd) == 0
+    # read-around (ssd_admit=False): lookups count, fills never happen
+    ra = Festivus(store, meta=meta,
+                  config=FestivusConfig(block_bytes=1024, cache_bytes=0,
+                                        readahead_blocks=0, ssd_bytes=8192,
+                                        ssd_admit=False, inline_fetch=True))
+    ra.read("obj")
+    ra.read("obj")
+    assert ra.stats.ssd_misses == 2 and ra.stats.ssd_fill_bytes == 0
+    assert len(ra._ssd) == 0
+
+
+def test_ssd_tier_persists_across_mounts(store):
+    """The tier is a standalone handle that outlives mounts: a remounted
+    worker starts RAM-cold but device-warm."""
+    meta = MetadataStore()
+    tier = SsdTier(8192)
+    cfg = FestivusConfig(block_bytes=1024, cache_bytes=0,
+                         readahead_blocks=0, inline_fetch=True)
+    a = Festivus(store, meta=meta, config=cfg, ssd_tier=tier)
+    a.write("obj", b"p" * 2048)
+    a.read("obj")
+    a.close()
+    assert tier.bytes_used == 2048
+    b = Festivus(store, meta=meta, config=cfg, ssd_tier=tier)
+    gets_before = store.stats.gets
+    assert b.read("obj") == b"p" * 2048
+    assert b.stats.ssd_hits == 2           # no store traffic at all
+    assert store.stats.gets == gets_before
+    # no tier mounted -> the drain is exactly free (bit-identity lever)
+    plain = Festivus(store, meta=meta, config=FestivusConfig())
+    assert plain.drain_ssd_pending() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# zone spread placement
+# ---------------------------------------------------------------------------
+def test_zone_spread_round_robin_and_sticky():
+    zs = ZoneSpread(3)
+    assert [zs.place(k) for k in ("a", "b", "c", "d")] == [0, 1, 2, 0]
+    # sticky: re-placing never migrates
+    assert zs.place("a") == 0 and zs.place("d") == 0
+    assert zs.zone_of("b") == 1
+    assert zs.zone_of("nope") is None
+    assert zs.zones_used() == 3 and len(zs) == 4
+    with pytest.raises(ValueError):
+        ZoneSpread(0)

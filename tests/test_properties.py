@@ -7,6 +7,8 @@ at collection when it is absent, so the tier-1 suite stays green on a bare
 container.
 """
 
+import collections
+
 import numpy as np
 import pytest
 
@@ -18,6 +20,8 @@ from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import ChunkStore, Festivus, FestivusConfig, InMemoryObjectStore  # noqa: E402
 from repro.core import codec as codec_mod  # noqa: E402
+from repro.core.festivus import SsdTier  # noqa: E402
+from repro.core.metadata import MetadataStore  # noqa: E402
 from repro.core.tiling import (  # noqa: E402
     N_ZONES,
     TileAssignment,
@@ -69,6 +73,133 @@ def test_chunkstore_region_roundtrip(h, w, ch, cw, seed):
     x1 = rng.integers(x0, w) + 1
     np.testing.assert_array_equal(
         arr.read_region((y0, x0), (y1, x1)), x[y0:y1, x0:x1])
+
+
+# ---------------------------------------------------------------------------
+# two-level storage: the persistent SSD tier under festivus
+# (deterministic twins of each property live in test_core.py, so the
+# invariants stay exercised on containers without hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 2),     # 0 = put, 1 = get, 2 = invalidate_path
+              st.integers(0, 4),     # path index
+              st.integers(0, 3),     # block index
+              st.integers(1, 120),   # value size (puts)
+              st.integers(0, 2)),    # generation stamp
+    min_size=1, max_size=60),
+    capacity=st.integers(1, 400))
+def test_ssd_tier_matches_lru_oracle(ops, capacity):
+    """INVARIANT: after ANY op sequence the tier's contents, byte count,
+    and cumulative evictions equal a reference LRU oracle's — the byte
+    bound is never exceeded, eviction order is exactly LRU, and a
+    generation-mismatched entry is dropped unserved."""
+    tier = SsdTier(capacity)
+    oracle = collections.OrderedDict()  # key -> (bytes, generation)
+    obytes = 0
+    oevictions = 0
+    for op, p, b, size, gen in ops:
+        path, key = f"p{p}", (f"p{p}", b)
+        if op == 0:
+            value = bytes([(p * 7 + b) % 251]) * size
+            if key in oracle:
+                obytes -= len(oracle.pop(key)[0])
+            oracle[key] = (value, gen)
+            obytes += len(value)
+            while obytes > capacity and oracle:
+                _, (v, _) = oracle.popitem(last=False)
+                obytes -= len(v)
+                oevictions += 1
+            tier.put(key, value, gen)
+        elif op == 1:
+            entry = oracle.get(key)
+            if entry is None:
+                expect = (None, False)
+            elif entry[1] != gen:
+                obytes -= len(entry[0])
+                del oracle[key]
+                expect = (None, True)
+            else:
+                oracle.move_to_end(key)
+                expect = (entry[0], False)
+            assert tier.get(key, gen) == expect
+        else:
+            for k in [k for k in oracle if k[0] == path]:
+                obytes -= len(oracle.pop(k)[0])
+            tier.invalidate_path(path)
+        assert tier.bytes_used == obytes
+        assert tier.bytes_used <= capacity
+        assert tier.evictions == oevictions
+        assert len(tier) == len(oracle)
+    for key, (value, gen) in oracle.items():
+        assert tier.get(key, gen) == (value, False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(size=st.integers(1, 4096),
+       reads=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 4096),
+                                st.integers(0, 4096)),
+                      min_size=1, max_size=20),
+       block=st.sampled_from([64, 256, 1024]),
+       cache_bytes=st.sampled_from([0, 512]),
+       ssd_bytes=st.sampled_from([256, 1 << 20]))
+def test_two_level_conservation(size, reads, block, cache_bytes, ssd_bytes):
+    """INVARIANT: with readahead off, every RAM-cache miss goes to
+    exactly one of {SSD hit, SSD miss} — ssd_hits + ssd_misses ==
+    cache_misses — for any workload, block size, and tier capacity, and
+    every read returns the written bytes."""
+    fs = Festivus(InMemoryObjectStore(),
+                  config=FestivusConfig(block_bytes=block,
+                                        cache_bytes=cache_bytes,
+                                        readahead_blocks=0,
+                                        ssd_bytes=ssd_bytes,
+                                        inline_fetch=True))
+    datas = {}
+    for i in range(3):
+        d = bytes((i * 37 + j) % 251 for j in range(size))
+        fs.write(f"o{i}", d)
+        datas[f"o{i}"] = d
+    for oi, off, ln in reads:
+        path = f"o{oi}"
+        off = min(off, size)
+        assert fs.read(path, off, ln) == datas[path][off:off + ln]
+    s = fs.stats
+    assert s.ssd_hits + s.ssd_misses == s.cache_misses
+    assert s.ssd_stale_drops == 0  # single mount: writes invalidate
+    assert s.ssd_hits == 0 or s.ssd_hit_rate() > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(steps=st.lists(st.booleans(), min_size=1, max_size=30))
+def test_two_level_never_serves_stale(steps):
+    """INVARIANT: a reader whose SSD tier is never invalidated directly
+    (the writer is a different mount) still always reads the latest
+    version — KV-generation revalidation drops stale device entries
+    unserved, for ANY interleaving of rewrites and reads."""
+    store = InMemoryObjectStore()
+    meta = MetadataStore()
+    reader = Festivus(store, meta=meta,
+                      config=FestivusConfig(block_bytes=256, cache_bytes=0,
+                                            readahead_blocks=0,
+                                            ssd_bytes=1 << 20,
+                                            inline_fetch=True))
+    writer = Festivus(store, meta=meta, config=FestivusConfig())
+
+    def payload(v):
+        return (f"v{v}:".encode() * 200)[:600]
+
+    version = 0
+    writer.write("obj", payload(version))
+    for is_write in steps:
+        if is_write:
+            version += 1
+            writer.write("obj", payload(version))
+        else:
+            assert reader.read("obj") == payload(version)
+    s = reader.stats
+    assert s.ssd_hits + s.ssd_misses == s.cache_misses
+    rewrites_read = s.ssd_stale_drops
+    assert rewrites_read <= version * 3  # <= blocks per object per rewrite
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python tools/perf_smoke.py
 
-Four tripwires, each compared against the committed records' own
+Five tripwires, each compared against the committed records' own
 ``wall_s`` and each failing only past ``--factor`` (default 2x):
 
 * the 512-node cluster-scaling sweep point (BENCH_cluster_scaling.json),
@@ -27,6 +27,12 @@ Four tripwires, each compared against the committed records' own
   through ``benchmarks.serving.wheel_point``) — the canary for the
   write path: scene-batch write flows, tile invalidation fan-out, and
   the incremental pyramid rebuild all sit on this point's wall-clock.
+* the two-level smoke point (the ``two_level`` smoke row, re-run
+  through ``benchmarks.serving.two_level_point``) — the canary for the
+  SSD tier: the point runs the wheel world twice (tierless baseline +
+  tiered) plus the bit-identity twin and the placement probe, so a
+  per-hit device-model scan, a revalidation slowdown, or a tier-twin
+  divergence re-run all multiply this point's wall-clock.
 
 Every tripwire's delta lands in the CI job summary
 (``$GITHUB_STEP_SUMMARY``, markdown table) — or on stdout locally — so
@@ -107,6 +113,8 @@ def main(argv=None) -> int:
         failed |= _serving_tripwire(args.serving_record, args.factor, deltas)
         failed |= _geo_tripwire(args.serving_record, args.factor, deltas)
         failed |= _wheel_tripwire(args.serving_record, args.factor, deltas)
+        failed |= _two_level_tripwire(args.serving_record, args.factor,
+                                      deltas)
     _emit_summary(deltas, args.factor)
     return 1 if failed else 0
 
@@ -207,6 +215,43 @@ def _wheel_tripwire(record_path: str, factor: float, deltas: list) -> bool:
               f"slower than the committed baseline (limit {factor}x).  The "
               f"write path has regressed; check the invalidation bus and "
               f"the incremental pyramid rebuild before merging.",
+              file=sys.stderr, flush=True)
+        return True
+    return False
+
+
+def _two_level_tripwire(record_path: str, factor: float,
+                        deltas: list) -> bool:
+    """Re-run the two-level smoke point; True on regression.  The point
+    runs the wheel world tierless and tiered on the identical trace
+    (plus the tier-disabled twin and the placement probe), so an SSD-hit
+    hot-path scan, a generation-revalidation slowdown, or a twin
+    divergence multiplies its wall-clock."""
+    try:
+        with open(record_path) as f:
+            serving = json.load(f)
+        trow = serving["two_level"]["rows"][0]
+    except (OSError, KeyError, IndexError):
+        print("perf-smoke: no committed two-level baseline; "
+              "skipping the two-level tripwire", flush=True)
+        return False
+    from benchmarks.serving import two_level_point
+    point = two_level_point(trow.get("nominal_requests", trow["requests"]),
+                            trow["servers"], batches=trow["scene_batches"],
+                            ingest_nodes=trow["ingest_nodes"],
+                            ssd_bytes=trow["ssd_bytes"])
+    wall, tbase = point["wall_s"], trow["wall_s"]
+    print(f"perf-smoke: two-level {point['requests']}-request "
+          f"{point['servers']}-server tiered point wall {wall:.3f}s vs "
+          f"committed baseline {tbase:.3f}s", flush=True)
+    ok = not (tbase > 0 and wall > factor * tbase)
+    deltas.append({"name": "two-level smoke point",
+                   "baseline_s": tbase, "wall_s": wall, "ok": ok})
+    if not ok:
+        print(f"perf-smoke: REGRESSION — two-level point {wall / tbase:.1f}x "
+              f"slower than the committed baseline (limit {factor}x).  The "
+              f"SSD tier has regressed; check the hit path, the generation "
+              f"revalidation, and the tier-disabled twin before merging.",
               file=sys.stderr, flush=True)
         return True
     return False
