@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench perf-smoke docs-check coverage-floor deps-optional
+.PHONY: test bench-smoke bench perf-smoke chaos-smoke docs-check coverage-floor deps-optional
 
 test:  ## tier-1: full suite, fail fast
 	$(PYTHON) -m pytest -x -q
@@ -24,6 +24,9 @@ bench-smoke:  ## scaling curve + serving SLO + end-to-end examples
 
 perf-smoke:  ## non-blocking: 512-node DES wall-clock vs committed baseline
 	$(PYTHON) tools/perf_smoke.py
+
+chaos-smoke:  ## availability fault matrix at reduced scale; fails on any proof
+	$(PYTHON) benchmarks/serving.py --chaos-smoke
 
 coverage-floor:  ## non-blocking: repro.core line coverage >= 85% (skips w/o pytest-cov)
 	$(PYTHON) tools/coverage_floor.py

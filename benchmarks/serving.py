@@ -53,7 +53,8 @@ from repro.core.chunkstore import pyramid_level_shape
 from repro.core.object_store import ZoneSpread
 from repro.ingest import (WheelTick, make_wheel_handler, wheel_campaign,
                           wheel_outcome)
-from repro.serve.tileserver import SERVE_POOL
+from repro.launch.chaos import ChaosSchedule, FaultEvent
+from repro.serve.tileserver import SERVE_POOL, DegradePolicy
 from repro.serve import (AutoscalePolicy, GeoTileFleet, Spike, TileFleet,
                          continental_universes, diurnal_spikes,
                          flash_crowd_spikes, geo_trace, tile_universe,
@@ -177,19 +178,22 @@ def _composite_scan_handler(worker, payload):
 def _serve(world_spec: WorldSpec, trace, servers: int, *,
            batch_nodes: int = 0, batch_tasks_per_node: int = 0,
            batch_arrival_t: float = 0.0, seed: int = 0,
-           autoscale=None, edge_cache_bytes: int = 0):
+           autoscale=None, edge_cache_bytes: int = 0,
+           chaos=None, degrade=None, fest_overrides=None):
     inner, meta = _build_world(world_spec, seed=seed)
     fleet = TileFleet(inner, meta, root=ROOT, servers=servers,
                       tile_px=world_spec.tile_px,
                       cache_bytes=world_spec.cache_bytes,
                       autoscale=autoscale,
-                      edge_cache_bytes=edge_cache_bytes)
+                      edge_cache_bytes=edge_cache_bytes,
+                      fest_overrides=fest_overrides)
     batch = ({f"scan{i}": i for i in range(batch_nodes * batch_tasks_per_node)}
              if batch_nodes else None)
     return fleet.run(
         trace, batch_tasks=batch,
         batch_handler=_composite_scan_handler if batch else None,
-        batch_nodes=batch_nodes, batch_arrival_t=batch_arrival_t)
+        batch_nodes=batch_nodes, batch_arrival_t=batch_arrival_t,
+        degrade=degrade, chaos=chaos)
 
 
 #: the million-sweep world: a small, hot pyramid (21 tiles of 16 KiB) so a
@@ -239,6 +243,185 @@ def million_point(requests: int, servers: int, *, _serve_fn=None) -> dict:
         "requests_per_wall_s": (round(len(trace) / wall, 1)
                                 if wall > 0 else None),
     }
+
+
+# -- availability: the chaos fault-storm matrix ------------------------------
+#: the matrix fleet: small enough that 11 runs of the 10^5-request trace
+#: stay CI-sized, big enough that 4 crashed nodes are a visible dent
+AVAIL_SERVERS = 250
+#: requests for the twin/bit-identity probe (timing-only, keep it cheap)
+AVAIL_TWIN_REQUESTS = 10_000
+#: the graceful-degradation ladder armed for every matrix cell
+AVAIL_DEGRADE = DegradePolicy(deadline_s=0.05, coarse_fallback=True)
+#: Festivus recovery knobs armed for every matrix cell: hedged reads
+#: (p99-delay, first-wins) atop a finite retry budget — on a fault-free
+#: cell neither ever fires, so cells stay comparable
+AVAIL_FEST_OVERRIDES = {"hedged_reads": True, "retry_budget_s": 0.05,
+                        "hedge_delay_floor_s": 1e-3}
+
+
+def _avail_policy(servers: int) -> AutoscalePolicy:
+    """Near-fixed fleet (min == max: no scaling decisions can fire) whose
+    short lease is the crash-recovery path, plus the brownout shed line
+    (pool backlog > 2 x fleet => shed, the last rung of the ladder)."""
+    return AutoscalePolicy(min_servers=servers, max_servers=servers,
+                           lease_s=0.5, brownout_queue_per_server=2.0)
+
+
+def _avail_schedule(duration: float, *, crash: bool, outage: bool,
+                    storm: bool):
+    """The fault storm for one matrix cell, phased so each fault's window
+    is distinguishable in the latency timeline: crashes at 25%, the zone
+    brownout over [45%, 60%], the throttle storm over [65%, 85%]."""
+    events = []
+    if crash:
+        events += [FaultEvent(t=duration * 0.25, kind="crash", worker=w,
+                              restart_s=0.2) for w in range(4)]
+    if outage:
+        events.append(FaultEvent(t=duration * 0.45, kind="zone_outage",
+                                 domain=0, duration_s=duration * 0.15,
+                                 scale=0.05))
+    if storm:
+        events.append(FaultEvent(t=duration * 0.65, kind="throttle_storm",
+                                 duration_s=duration * 0.2, fail_rate=0.6))
+    return ChaosSchedule(events, seed=MILLION_SEED) if events else None
+
+
+def availability_point(requests: int, servers: int, *, crash: bool = False,
+                       outage: bool = False, storm: bool = False,
+                       _serve_fn=None) -> dict:
+    """One cell of the fault matrix: the million-sweep scenario under a
+    chaos schedule, scored on what a client actually saw — availability
+    (non-shed, non-dead fraction), tail latency through the degradation
+    ladder, and the worker-second cost of riding the faults out.
+
+    ``tools/perf_smoke.py`` re-runs the full-storm cell and compares its
+    ``wall_s`` against the committed record — keep it deterministic.
+    """
+    sc = MILLION_SCENARIO
+    duration = sc.duration_for(requests)
+    trace = sc.trace(duration)
+    schedule = _avail_schedule(duration, crash=crash, outage=outage,
+                               storm=storm)
+    rep = (_serve_fn or _serve)(
+        sc.world, trace, servers, seed=MILLION_SEED,
+        autoscale=_avail_policy(servers), degrade=AVAIL_DEGRADE,
+        chaos=schedule, fest_overrides=AVAIL_FEST_OVERRIDES)
+    lats = sorted(lat for _, lat in rep.samples)
+    sim = rep.cluster.simulator
+    fstats = rep.cluster.festivus_stats
+    return {
+        "crash": crash,
+        "zone_outage": outage,
+        "throttle_storm": storm,
+        "requests": len(trace),
+        "completed": rep.completed,
+        "shed": rep.shed,
+        "degraded": rep.degraded,
+        "dead": rep.dead,
+        "availability": round(rep.availability, 6),
+        "p50_ms": _ms(rep.p50_s),
+        "p99_ms": _ms(rep.p99_s),
+        "p999_ms": _ms(pm.percentile_sorted(lats, 99.9)),
+        "hedged_reads": fstats.hedged_reads,
+        "hedge_wins": fstats.hedge_wins,
+        "store_retries": fstats.retried_ops,
+        "retry_backoff_s": round(fstats.retry_backoff_s, 6),
+        "cost_usd": round(rep.serve_worker_seconds / 3600.0
+                          * pm.NODE_COST_PER_HR_USD, 6),
+        "chaos_fired": (rep.cluster.chaos.get("fired", {})
+                        if rep.cluster.chaos else {}),
+        # the exactly-once audit: every request completed, shed, or
+        # dead-lettered — none lost, none double-counted
+        "exactly_once": rep.completed + rep.shed + rep.dead == len(trace),
+        "events": sim["events"],
+        "wall_s": round(sim.get("wall_s", 0.0), 3),
+    }
+
+
+def _avail_twin_proof(serve_fn, servers: int) -> dict:
+    """The disabled-twin guarantee at serving scale: an *empty*
+    ChaosSchedule (chaos wiring built, zero events) must leave every
+    client-visible and engine-internal observable bit-identical to the
+    pre-chaos engine (chaos=None, no degrade, no recovery overrides)."""
+    sc = MILLION_SCENARIO
+    trace = sc.trace(sc.duration_for(AVAIL_TWIN_REQUESTS))
+    policy = _avail_policy(servers)
+    plain = serve_fn(sc.world, trace, servers, seed=MILLION_SEED,
+                     autoscale=policy)
+    twin = serve_fn(sc.world, trace, servers, seed=MILLION_SEED,
+                    autoscale=policy, chaos=ChaosSchedule())
+    pw = lambda rep: [(w.worker, w.tasks_completed, w.virtual_time_s,
+                       w.store_stats.bytes_read, w.meta_ops,
+                       dict(w.store_faults)) for w in rep.cluster.per_worker]
+    return {
+        "twin_requests": len(trace),
+        "twin_bit_identical": (
+            plain.samples == twin.samples
+            and plain.cluster.completion_times
+                == twin.cluster.completion_times
+            and plain.cluster.queue_stats == twin.cluster.queue_stats
+            and plain.cluster.makespan_s == twin.cluster.makespan_s
+            and pw(plain) == pw(twin)
+            and twin.shed == 0 and twin.dead == 0),
+    }
+
+
+def availability_section(requests: int, servers: int = AVAIL_SERVERS,
+                         serve_fn=_serve,
+                         determinism: bool = True) -> dict:
+    """The full fault matrix + both proofs (twin bit-identity, seeded
+    determinism of the worst cell), as the BENCH ``availability`` value."""
+    rows = [availability_point(requests, servers, crash=c, outage=o,
+                               storm=s, _serve_fn=serve_fn)
+            for c in (False, True) for o in (False, True)
+            for s in (False, True)]
+    worst = rows[-1]  # the crash x outage x storm cell
+    det_ok = None
+    if determinism:
+        again = availability_point(requests, servers, crash=True,
+                                   outage=True, storm=True,
+                                   _serve_fn=serve_fn)
+        det_ok = all(worst[k] == again[k] for k in worst if k != "wall_s")
+    section = {
+        "world": dataclasses.asdict(MILLION_WORLD),
+        "base_rps": MILLION_BASE_RPS,
+        "alpha": 1.1,
+        "seed": MILLION_SEED,
+        "servers": servers,
+        "nominal_requests": requests,
+        "degrade": dataclasses.asdict(AVAIL_DEGRADE),
+        "lease_s": _avail_policy(servers).lease_s,
+        "brownout_queue_per_server":
+            _avail_policy(servers).brownout_queue_per_server,
+        "fest_overrides": dict(AVAIL_FEST_OVERRIDES),
+        "node_cost_per_hr_usd": pm.NODE_COST_PER_HR_USD,
+        "rows": rows,
+        "determinism_ok": det_ok,
+    }
+    section.update(_avail_twin_proof(serve_fn, servers))
+    return section
+
+
+def _print_availability(section: dict) -> None:
+    print(f"availability matrix @ {section['servers']} servers, "
+          f"~{section['nominal_requests']} reqs/cell:")
+    print(f"  {'faults':>24} {'avail':>8} {'shed':>6} {'degr':>6} "
+          f"{'dead':>5} {'p99 ms':>8} {'p999 ms':>8} {'hedge':>6} "
+          f"{'cost $':>8} {'1x':>3}")
+    for r in section["rows"]:
+        faults = "+".join(k for k, on in (("crash", r["crash"]),
+                                          ("outage", r["zone_outage"]),
+                                          ("storm", r["throttle_storm"]))
+                          if on) or "none"
+        print(f"  {faults:>24} {r['availability']:>8.4f} {r['shed']:>6} "
+              f"{r['degraded']:>6} {r['dead']:>5} {r['p99_ms']:>8.2f} "
+              f"{r['p999_ms']:>8.2f} {r['hedge_wins']:>6} "
+              f"{r['cost_usd']:>8.4f} "
+              f"{'ok' if r['exactly_once'] else 'NO':>3}")
+    print(f"  twin identical={section['twin_bit_identical']} "
+          f"(@{section['twin_requests']} reqs), "
+          f"determinism={section['determinism_ok']}")
 
 
 #: the wheel world: finer chunking than the million world so the
@@ -854,7 +1037,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         mid_fleet: int = 4, batch_nodes: int = 64,
         batch_tasks_per_node: int = 8, duration_s: float = 2.0,
         base_rps: float = 150.0, alpha: float = 1.1, seed: int = 3,
-        million_full: bool = True,
+        million_full: bool = True, avail_requests: int = 100_000,
         out_path: str = "BENCH_serving.json") -> dict:
     spec = WorldSpec()
     scenario = ServeScenario(spec, base_rps=base_rps, alpha=alpha, seed=seed)
@@ -1069,6 +1252,13 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "rows": two_level_rows,
     }
 
+    # -- availability: the chaos fault-storm matrix at serving scale --------
+    # 2^3 cells (crash x zone outage x throttle storm) of the 10^5-request
+    # million-sweep trace through the graceful-degradation ladder, plus the
+    # disabled-twin and seeded-determinism proofs (11 engine runs total);
+    # the full-storm cell is the perf-smoke availability tripwire's baseline
+    availability = availability_section(avail_requests, serve_fn=serve)
+
     # -- trace shapes: diurnal cycle + flash crowd at the mid fleet ---------
     ramp_spikes = diurnal_spikes(duration_s, duration_s, 12.0, steps=8)
     ramp_trace = scenario.trace(duration_s, spikes=ramp_spikes)
@@ -1198,6 +1388,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
         "geo_serving": geo_serving,
         "ingest_wheel": ingest_wheel,
         "two_level": two_level,
+        "availability": availability,
         "trace_shapes": trace_shapes,
         "encode_model": encode_model,
         "predictive_scaling": predictive_scaling,
@@ -1302,6 +1493,7 @@ def run(verbose: bool = True, fleets=(2, 4, 8), spike_mults=(1.0, 8.0, 16.0),
                   f"{r['tier_disabled_bit_identical']}, placement "
                   f"{pl['zones_used']}/{pl['zones']} zones "
                   f"p99 {pl['p99_ms_unplaced']} -> {pl['p99_ms_spread']} ms")
+        _print_availability(availability)
         for r in shape_rows:
             print(f"trace shape {r['shape']}: {r['requests']} reqs, "
                   f"x{r['peak_multiplier']:.1f} peak over {r['windows']} "
@@ -1343,9 +1535,21 @@ def main(argv=None) -> int:
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized: smaller batch wave, million sweep "
                         "capped at its 10^5-request point, same schema")
+    p.add_argument("--chaos-smoke", action="store_true",
+                   help="run ONLY the availability fault matrix at reduced "
+                        "scale (no record written); exit 1 if any proof — "
+                        "twin bit-identity, determinism, exactly-once — "
+                        "fails")
     p.add_argument("--out", default="BENCH_serving.json",
                    help="JSON record path ('' to skip writing)")
     args = p.parse_args(argv)
+    if args.chaos_smoke:
+        section = availability_section(10_000, servers=100)
+        _print_availability(section)
+        ok = (section["twin_bit_identical"] and section["determinism_ok"]
+              and all(r["exactly_once"] for r in section["rows"]))
+        print(f"chaos smoke: {'ok' if ok else 'FAILED'}")
+        return 0 if ok else 1
     kwargs = dict(
         fleets=tuple(int(n) for n in args.fleets.split(",")),
         spike_mults=tuple(float(m) for m in args.spike_mults.split(",")),
@@ -1354,7 +1558,8 @@ def main(argv=None) -> int:
         duration_s=args.duration, base_rps=args.base_rps, out_path=args.out)
     if args.smoke:
         kwargs.update(batch_nodes=24, batch_tasks_per_node=4,
-                      duration_s=1.4, base_rps=120.0, million_full=False)
+                      duration_s=1.4, base_rps=120.0, million_full=False,
+                      avail_requests=20_000)
     run(**kwargs)
     return 0
 

@@ -26,8 +26,11 @@ cross-file cache.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
+import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 
@@ -36,6 +39,7 @@ from repro.core.metadata import MetadataStore, StatCache
 from repro.core.object_store import (
     ObjectNotFound,
     ObjectStore,
+    TransientStoreError,
     merge_counters,
     retrying,
 )
@@ -76,6 +80,22 @@ class FestivusConfig:
     #: working set.  (An ingest pool with ``ssd_bytes=0`` bypasses the
     #: tier outright; writes never admit under any policy — write-around.)
     ssd_admit: bool = True
+    #: per-request retry budget: total backoff seconds one read/write may
+    #: spend before giving up (routed through :func:`retrying`'s
+    #: ``budget_s``).  None keeps the attempts-only legacy behaviour.  An
+    #: exhausted budget raises the TransientStoreError to the caller —
+    #: under the cluster DES that dead-letters the task through the queue
+    #: rather than stalling a latency-SLO request indefinitely.
+    retry_budget_s: Optional[float] = None
+    #: deadline-aware hedged reads: on a transient block-fetch failure,
+    #: wait a p99-based hedge delay and issue a *second* request instead
+    #: of walking the full exponential-backoff ladder (first response
+    #: wins; counted in ``hedged_reads`` / ``hedge_wins``).  Off by
+    #: default — the single-request path stays bit-identical.
+    hedged_reads: bool = False
+    #: hedge delay floor, used until enough fetch-latency samples accrue
+    #: to compute an observed p99 (and as a lower bound thereafter)
+    hedge_delay_floor_s: float = 1e-3
 
 
 @dataclasses.dataclass
@@ -107,6 +127,20 @@ class FestivusStats:
     #: device busy-time, never added to the admitting request's latency.
     ssd_read_s: float = 0.0
     ssd_fill_write_s: float = 0.0
+    #: retry-backoff seconds actually charged (virtual seconds under the
+    #: DES — billed into task tails; wall seconds slept otherwise)
+    retry_backoff_s: float = 0.0
+    #: reads abandoned because their retry budget ran out (the request
+    #: then fails fast to the caller instead of blowing its deadline)
+    retry_budget_exhausted: int = 0
+    #: hedged reads issued (a transient primary failure answered with a
+    #: delayed second request instead of a full backoff ladder), and how
+    #: many of those hedges won (their response was the one served)
+    hedged_reads: int = 0
+    hedge_wins: int = 0
+    #: SSD devices dropped by fault injection (reads fall through to the
+    #: store from the drop instant on)
+    ssd_device_failures: int = 0
 
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
@@ -272,6 +306,20 @@ class Festivus:
         #: device read-time accrued by SSD hits since the last drain (the
         #: DES bills it into the task tail: local reads ride no fabric flow)
         self._pending_ssd_s = 0.0
+        #: retry backoff accrued since the last drain (virtual mode only).
+        #: Under ``inline_fetch`` (the DES) backoff is *charged* here and
+        #: billed into the task tail — never slept; real-thread mounts keep
+        #: wall-clock time.sleep.  This is the fix for the silent retry
+        #: storm: before it, a storm burnt wall seconds invisible to the
+        #: simulation.
+        self._pending_retry_s = 0.0
+        self._retry_sleep = (self._charge_retry_backoff
+                             if self.config.inline_fetch else self._wall_sleep)
+        #: observed per-fetch store service times (hedged reads only):
+        #: a FIFO of recent samples plus the same samples sorted, so the
+        #: p99 hedge delay is O(log n) per observation
+        self._fetch_window: deque = deque()
+        self._fetch_sorted: List[float] = []
         #: `pool` lets many mounts share one block engine (the cluster DES
         #: runs hundreds of mounts but one task at a time — per-mount pools
         #: would pin nodes x max_inflight idle OS threads); with
@@ -323,6 +371,28 @@ class Festivus:
     def _count_retry(self, _attempt: int) -> None:
         self._bump(retried_ops=1)
 
+    def _wall_sleep(self, seconds: float) -> None:
+        """Real-thread backoff: sleep wall clock, but still count it."""
+        self._bump(retry_backoff_s=seconds)
+        time.sleep(seconds)
+
+    def _charge_retry_backoff(self, seconds: float) -> None:
+        """Virtual backoff: accrue into the pending pool the DES drains
+        into the task tail (``drain_retry_pending``) — no wall sleep."""
+        with self._stats_lock:
+            self.stats.retry_backoff_s += seconds
+            self._pending_retry_s += seconds
+
+    def drain_retry_pending(self) -> float:
+        """Retry backoff charged since the last drain (virtual seconds).
+        Exactly 0.0 when no retry ever backed off — the DES adds this into
+        every task tail, so the fault-free path must cost nothing."""
+        if self._pending_retry_s == 0.0:
+            return 0.0
+        with self._stats_lock:
+            s, self._pending_retry_s = self._pending_retry_s, 0.0
+            return s
+
     # -- write path ----------------------------------------------------------
     def write(self, path: str, data: bytes) -> None:
         """Whole-object PUT (objects are immutable; update == rewrite).
@@ -336,6 +406,8 @@ class Festivus:
         """
         meta = retrying(self.store.put, path, data,
                         attempts=self.config.max_retries,
+                        sleep=self._retry_sleep,
+                        budget_s=self.config.retry_budget_s,
                         on_retry=self._count_retry)
         self._cache.invalidate_path(path)
         if self._ssd is not None:
@@ -347,6 +419,8 @@ class Festivus:
 
     def delete(self, path: str) -> None:
         retrying(self.store.delete, path, attempts=self.config.max_retries,
+                 sleep=self._retry_sleep,
+                 budget_s=self.config.retry_budget_s,
                  on_retry=self._count_retry)
         self._cache.invalidate_path(path)
         if self._ssd is not None:
@@ -358,12 +432,96 @@ class Festivus:
     def drain_ssd_pending(self) -> float:
         """Device read-time accrued by SSD hits since the last drain.
         Always 0.0 with no tier mounted — the DES adds this into every
-        task tail, so the no-tier path must cost exactly nothing."""
-        if self._ssd is None:
+        task tail, so the no-tier path must cost exactly nothing.  (The
+        pending check, not the tier check, decides: a device dropped by
+        fault injection mid-task still bills the reads it served.)"""
+        if self._ssd is None and self._pending_ssd_s == 0.0:
             return 0.0
         with self._stats_lock:
             s, self._pending_ssd_s = self._pending_ssd_s, 0.0
             return s
+
+    def drop_ssd_tier(self) -> bool:
+        """Fault injection: the local SSD device fails.  Detaches the tier
+        — every later read falls through to the store, admissions stop —
+        and returns whether a device was actually mounted.  Counted in
+        ``ssd_device_failures``; time already accrued by served hits still
+        bills (see :meth:`drain_ssd_pending`)."""
+        if self._ssd is None:
+            return False
+        self._ssd = None
+        self._bump(ssd_device_failures=1)
+        return True
+
+    # -- store fetch (retry budget + hedged reads) ---------------------------
+    _HEDGE_WINDOW = 512      #: service-time samples kept for the p99 estimate
+    _HEDGE_MIN_SAMPLES = 16  #: below this, fall back to hedge_delay_floor_s
+
+    def _observe_fetch(self, service_s: float) -> None:
+        with self._stats_lock:
+            self._fetch_window.append(service_s)
+            bisect.insort(self._fetch_sorted, service_s)
+            if len(self._fetch_window) > self._HEDGE_WINDOW:
+                old = self._fetch_window.popleft()
+                del self._fetch_sorted[bisect.bisect_left(
+                    self._fetch_sorted, old)]
+
+    def _hedge_delay_s(self) -> float:
+        with self._stats_lock:
+            if len(self._fetch_sorted) >= self._HEDGE_MIN_SAMPLES:
+                return perfmodel.percentile_sorted(self._fetch_sorted, 99.0)
+        return self.config.hedge_delay_floor_s
+
+    def _fetch_store(self, path: str, offset: int, length: int):
+        """One range-GET against the backing store, with recovery.
+
+        Plain mode (``hedged_reads=False``): the classic budgeted retry
+        loop — same single-request sequence as before, so the fault-free
+        path is bit-identical.  Hedged mode: try the primary once; on a
+        transient failure wait a p99-based hedge delay (charged to the
+        virtual clock under the DES) and fire a second, hedge request —
+        first success wins.  Only if both fail does the budgeted retry
+        loop take over, with the hedge delay already deducted from the
+        budget.  A budget that runs dry re-raises: under the engine the
+        task fails, burns its queue retries, and dead-letters.
+        """
+        budget = self.config.retry_budget_s
+        if not self.config.hedged_reads:
+            try:
+                return retrying(self.store.get_range_view, path, offset,
+                                length, attempts=self.config.max_retries,
+                                sleep=self._retry_sleep, budget_s=budget,
+                                on_retry=self._count_retry)
+            except TransientStoreError:
+                if budget is not None:
+                    self._bump(retry_budget_exhausted=1)
+                raise
+        try:
+            data = self.store.get_range_view(path, offset, length)
+        except TransientStoreError:
+            delay = self._hedge_delay_s()
+            self._bump(hedged_reads=1)
+            self._retry_sleep(delay)
+            try:
+                data = self.store.get_range_view(path, offset, length)
+                self._bump(hedge_wins=1)
+            except TransientStoreError:
+                remaining = (None if budget is None
+                             else max(0.0, budget - delay))
+                try:
+                    data = retrying(self.store.get_range_view, path, offset,
+                                    length, attempts=self.config.max_retries,
+                                    sleep=self._retry_sleep,
+                                    budget_s=remaining,
+                                    on_retry=self._count_retry)
+                except TransientStoreError:
+                    if budget is not None:
+                        self._bump(retry_budget_exhausted=1)
+                    raise
+        service_s = getattr(self.store, "last_op_service_s", None)
+        if service_s is not None:
+            self._observe_fetch(service_s)
+        return data
 
     # -- block engine ---------------------------------------------------------
     def _fetch_block(self, path: str, block: int, size: int,
@@ -396,9 +554,7 @@ class Festivus:
                 self._bump(ssd_misses=1, ssd_stale_drops=1)
             else:
                 self._bump(ssd_misses=1)
-        data = retrying(self.store.get_range_view, path, offset, length,
-                        attempts=self.config.max_retries,
-                        on_retry=self._count_retry)
+        data = self._fetch_store(path, offset, length)
         self._bump(blocks_fetched=1, bytes_fetched=len(data))
         if self._ssd is not None and self.config.ssd_admit:
             before = self._ssd.evictions

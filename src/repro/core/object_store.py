@@ -292,11 +292,15 @@ class FlakyObjectStore(ObjectStore):
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
         self.injected_failures = 0
+        #: op name ("put"/"get_range"/"head"/"delete") -> failures injected
+        #: into it; the per-op breakdown ClusterReport worker stats surface
+        self.injected_by_op: Dict[str, int] = {}
 
     def _maybe_fail(self, op: str):
         with self._lock:
             if self._rng.random() < self.failure_rate:
                 self.injected_failures += 1
+                self.injected_by_op[op] = self.injected_by_op.get(op, 0) + 1
                 raise TransientStoreError(f"injected failure in {op}")
 
     def put(self, key, data):
@@ -324,23 +328,41 @@ class FlakyObjectStore(ObjectStore):
 
 
 def retrying(fn, *args, attempts: int = 5, base_delay_s: float = 0.001,
-             sleep=time.sleep, on_retry=None, **kwargs):
+             sleep=time.sleep, on_retry=None, budget_s: Optional[float] = None,
+             **kwargs):
     """Exponential-backoff retry for TransientStoreError.
 
     The paper runs on pre-emptible nodes where transient 5xx responses are
     routine; every store access in the framework funnels through this.
     `on_retry(attempt_index)` is called before each backoff so callers can
     surface retry counts in their stats.
+
+    `sleep` is the backoff clock: wall-clock ``time.sleep`` by default, but
+    under the virtual-time DES callers MUST pass a virtual charge hook
+    (``Festivus`` routes it into the worker's task tail) — otherwise a
+    retry storm burns real seconds while showing zero simulated latency.
+
+    `budget_s` is the per-request retry budget: the total backoff this
+    call may spend.  A retry whose backoff would exceed the remaining
+    budget re-raises immediately instead of sleeping — the deadline-aware
+    contract a latency SLO needs (waiting longer than the deadline to
+    return an error helps nobody).  None (the default) keeps the
+    attempts-only behaviour.
     """
+    slept = 0.0
     for i in range(attempts):
         try:
             return fn(*args, **kwargs)
         except TransientStoreError:
             if i == attempts - 1:
                 raise
+            delay = base_delay_s * (2**i)
+            if budget_s is not None and slept + delay > budget_s:
+                raise
             if on_retry is not None:
                 on_retry(i)
-            sleep(base_delay_s * (2**i))
+            sleep(delay)
+            slept += delay
     raise AssertionError("unreachable")
 
 

@@ -286,6 +286,12 @@ class SharedFabric:
         #: link key -> fixed capacity bytes/s (domains water-filled against
         #: a provisioned cap instead of the Table III curve)
         self._link_caps: Dict[Any, float] = {}
+        #: domain -> capacity multiplier in (0, 1] (fault injection: a zone
+        #: outage or WAN brownout temporarily rescales the domain).  Absent
+        #: domains are never multiplied at all, so a fabric that has never
+        #: seen a fault computes capacities bit-identically to one built
+        #: before this field existed.
+        self._cap_scale: Dict[Any, float] = {}
 
     def add_link(self, key, capacity_bytes_per_s: float) -> None:
         """Register fixed-capacity domain `key` (an inter-region link).
@@ -304,6 +310,29 @@ class SharedFabric:
         if prev is not None and prev != cap:
             raise ValueError(f"link {key!r} already registered at {prev} B/s")
         self._link_caps[key] = cap
+
+    def set_capacity_scale(self, zone, scale: float) -> None:
+        """Rescale domain capacity by `scale` in (0, 1] — the zone-outage /
+        link-brownout injection point.  Marks the domain dirty so the next
+        :meth:`reflow` re-water-fills its flows against the degraded
+        capacity through the normal incremental path.  ``scale == 1.0``
+        clears the entry entirely (full restoration leaves no trace, so a
+        healed fabric is indistinguishable from a never-faulted one).
+        Zero is rejected: a dead domain would strand its in-flight flows
+        at rate 0 with no completion prediction; model an outage as a deep
+        brownout (e.g. 0.01) instead."""
+        if not 0.0 < scale <= 1.0:
+            raise ValueError(f"capacity scale must be in (0, 1], got {scale}")
+        z = self._domain(zone)
+        if scale == 1.0:
+            self._cap_scale.pop(z, None)
+        else:
+            self._cap_scale[z] = scale
+        self._dirty_zones.add(z)
+
+    def capacity_scale(self, zone) -> float:
+        """Current capacity multiplier for `zone` (1.0 when unfaulted)."""
+        return self._cap_scale.get(self._domain(zone), 1.0)
 
     def _domain(self, zone) -> Any:
         if isinstance(zone, int):
@@ -344,6 +373,9 @@ class SharedFabric:
         cap = self._link_caps.get(z)
         if cap is None:
             cap = self.model.zone_capacity_bytes_per_s(len(flows))
+        scale = self._cap_scale.get(z)
+        if scale is not None:  # fault-injected outage/brownout in effect
+            cap *= scale
         granted = water_fill(list(flows.values()), cap)
         for key, rate in zip(flows, granted):
             if self._rates.get(key) != rate:

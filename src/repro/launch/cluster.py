@@ -80,8 +80,10 @@ from repro.core import perfmodel
 from repro.core.chunkstore import ChunkStore
 from repro.core.festivus import Festivus, FestivusConfig, FestivusStats, SsdTier
 from repro.core.metadata import MetadataStore
-from repro.core.object_store import ObjectStore, StoreStats
+from repro.core.object_store import (ObjectStore, StoreStats,
+                                     TransientStoreError)
 from repro.core.taskqueue import TaskQueue
+from repro.launch.chaos import ChaosRuntime, ChaosSchedule, StoreStormInjector
 
 
 class MountStore(ObjectStore):
@@ -91,24 +93,62 @@ class MountStore(ObjectStore):
     virtual-time mode the calibrated service time of each request accrues
     here and the engine drains it into the worker's clock at task
     boundaries (after water-filling over concurrent streams).
+
+    Fault surface: transient failures — whether raised by the backing
+    store (e.g. a `FlakyObjectStore` shim) or injected here by a chaos
+    throttle-storm oracle (:class:`repro.launch.chaos.StoreStormInjector`,
+    consulted against the virtual clock *before* the op runs, so a
+    rejected request accrues no service time) — are counted per op name
+    into ``fault_counts`` and surfaced as ``WorkerReport.store_faults``.
     """
 
     def __init__(self, inner: ObjectStore,
-                 model: Optional[perfmodel.ObjectStoreModel] = None):
+                 model: Optional[perfmodel.ObjectStoreModel] = None,
+                 chaos: Optional[StoreStormInjector] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.inner = inner
         self.model = model
+        self.chaos = chaos
+        self.clock = clock
         self.stats = StoreStats()
+        #: op name -> transient failures observed at this mount (storm
+        #: rejections + inner-store raises); empty on a fault-free run
+        self.fault_counts: Dict[str, int] = {}
+        #: modeled service time of the most recent accounted op — the
+        #: sample Festivus's hedged-read p99 window observes
+        self.last_op_service_s: Optional[float] = None
         self._lock = threading.Lock()
         self._pending_service_s = 0.0
         self._pending_bytes = 0
 
     def _account(self, nbytes: int) -> None:
         if self.model is not None:
-            self._pending_service_s += self.model.service_time_s(nbytes)
+            s = self.model.service_time_s(nbytes)
+            self._pending_service_s += s
             self._pending_bytes += nbytes
+            self.last_op_service_s = s
+
+    def _fault(self, op: str) -> None:
+        with self._lock:
+            self.fault_counts[op] = self.fault_counts.get(op, 0) + 1
+
+    def _gate(self, op: str) -> None:
+        """Chaos throttle-storm gate: inside a storm window, reject the op
+        before it reaches the store (no bytes move, no service time)."""
+        if self.chaos is not None and self.clock is not None:
+            now = self.clock()
+            if self.chaos.roll(now):
+                self._fault(op)
+                raise TransientStoreError(
+                    f"throttle storm: {op} rejected at t={now:.6f}")
 
     def put(self, key, data):
-        meta = self.inner.put(key, data)
+        self._gate("put")
+        try:
+            meta = self.inner.put(key, data)
+        except TransientStoreError:
+            self._fault("put")
+            raise
         with self._lock:
             self.stats.puts += 1
             self.stats.bytes_written += meta.size
@@ -116,7 +156,12 @@ class MountStore(ObjectStore):
         return meta
 
     def get_range(self, key, offset, length):
-        data = self.inner.get_range(key, offset, length)
+        self._gate("get_range")
+        try:
+            data = self.inner.get_range(key, offset, length)
+        except TransientStoreError:
+            self._fault("get_range")
+            raise
         with self._lock:
             self.stats.gets += 1
             self.stats.bytes_read += len(data)
@@ -127,7 +172,12 @@ class MountStore(ObjectStore):
         # the zero-copy fast path festivus block fetches take; accounted
         # identically to get_range (same request count, bytes, and modeled
         # service time — only the memcpy is gone)
-        data = self.inner.get_range_view(key, offset, length)
+        self._gate("get_range")
+        try:
+            data = self.inner.get_range_view(key, offset, length)
+        except TransientStoreError:
+            self._fault("get_range")
+            raise
         with self._lock:
             self.stats.gets += 1
             self.stats.bytes_read += len(data)
@@ -135,7 +185,12 @@ class MountStore(ObjectStore):
         return data
 
     def head(self, key):
-        meta = self.inner.head(key)
+        self._gate("head")
+        try:
+            meta = self.inner.head(key)
+        except TransientStoreError:
+            self._fault("head")
+            raise
         with self._lock:
             self.stats.heads += 1
         return meta
@@ -147,7 +202,12 @@ class MountStore(ObjectStore):
         return out
 
     def delete(self, key):
-        self.inner.delete(key)
+        self._gate("delete")
+        try:
+            self.inner.delete(key)
+        except TransientStoreError:
+            self._fault("delete")
+            raise
         with self._lock:
             self.stats.deletes += 1
 
@@ -173,9 +233,17 @@ class MountMeta:
     _COUNTED = ("get", "set", "setnx", "incr", "delete", "exists", "keys",
                 "hset", "hmset", "hget", "hgetall", "hdel", "hlen", "cas")
 
-    def __init__(self, inner: MetadataStore, latency_s: float = 0.0):
+    def __init__(self, inner: MetadataStore, latency_s: float = 0.0,
+                 stall_windows: Tuple[Tuple[float, float, float], ...] = (),
+                 clock: Optional[Callable[[], float]] = None):
         self.inner = inner
         self.latency_s = latency_s
+        #: chaos KV stalls: (start, end, extra_latency_s) virtual-time
+        #: windows during which every op pays the extra round-trip (a hot
+        #: shard / compaction pause).  Empty on a fault-free mount — the
+        #: per-op cost of the feature is then one falsy check.
+        self._stalls = tuple(stall_windows)
+        self._clock = clock
         self.ops = 0
         self._pending_s = 0.0
         self._lock = threading.Lock()
@@ -187,6 +255,12 @@ class MountMeta:
             with self._lock:
                 self.ops += 1
                 self._pending_s += self.latency_s
+                if self._stalls:
+                    now = self._clock()
+                    for start, end, extra in self._stalls:
+                        if start <= now < end:
+                            self._pending_s += extra
+                            break
             return method(*args, **kwargs)
         return op
 
@@ -334,10 +408,12 @@ class _Flow:
     lazy-deletion accounting behind heap compaction)."""
 
     __slots__ = ("task", "result", "error", "bytes_left", "demand",
-                 "tail_s", "rate", "epoch", "updated_at", "has_pred")
+                 "tail_s", "rate", "epoch", "updated_at", "has_pred",
+                 "claim_epoch")
 
     def __init__(self, task, result, error, bytes_left: float,
-                 demand: float, tail_s: float, now: float):
+                 demand: float, tail_s: float, now: float,
+                 claim_epoch: int = 0):
         self.task = task
         self.result = result
         self.error = error
@@ -348,6 +424,10 @@ class _Flow:
         self.epoch = 0
         self.updated_at = now
         self.has_pred = False
+        #: the worker's _dispatch_epoch at claim time, carried into the
+        #: task's _FINISH so a crash-restart (which bumps the epoch) kills
+        #: the dead incarnation's completion instead of letting it land
+        self.claim_epoch = claim_epoch
 
 
 class Worker:
@@ -405,7 +485,27 @@ class Worker:
         self._current: Optional[str] = None
         #: True while a claimed task's FINISH is outstanding
         self._inflight = False
+        #: back-reference to the owning engine (set by _make_worker) —
+        #: what virtual_now()/pending_depth() read; None under unit tests
+        #: that build a bare Worker
+        self._engine = None
         self._chunkstores: Dict[str, ChunkStore] = {}
+
+    def virtual_now(self) -> float:
+        """Current simulation time (0.0 outside an engine / the DES) —
+        what a deadline-aware handler compares against its arrival t."""
+        eng = self._engine
+        return eng._now if eng is not None else 0.0
+
+    def pending_depth(self) -> int:
+        """Queue backlog (submitted or re-queued, unclaimed) for this
+        worker's pool right now — the signal a load-shedding handler
+        compares against its brownout threshold.  0 outside a run."""
+        eng = self._engine
+        queue = getattr(eng, "_active_queue", None) if eng is not None else None
+        if queue is None:
+            return 0
+        return queue.pending_by_pool().get(self.pool, 0)
 
     def chunkstore(self, root: str = "arrays") -> ChunkStore:
         cs = self._chunkstores.get(root)
@@ -533,6 +633,16 @@ class ClusterConfig:
     #: across zones and routes its flows (Worker.route_io) to the placed
     #: zone instead of piling everything onto the worker's home zone.
     placement: Optional[Any] = None
+    #: virtual mode: deterministic fault-injection script
+    #: (:class:`repro.launch.chaos.ChaosSchedule`).  An *empty* schedule
+    #: is the disabled twin: the chaos layer is registered but pushes no
+    #: events, consults no oracle, and the run is bit-identical to
+    #: ``chaos=None``.  With faults scheduled, recovery rides the
+    #: machinery that already exists — lease expiry + speculation for
+    #: crashes/hangs, incremental fabric reflow for outages, Festivus's
+    #: budgeted retries/hedged reads for storms — and every fault fired
+    #: is counted into :attr:`ClusterReport.chaos`.
+    chaos: Optional[ChaosSchedule] = None
 
 
 @dataclasses.dataclass
@@ -557,6 +667,10 @@ class WorkerReport:
     #: Uptime = (left_t or makespan) - joined_t — the $-proxy integrand.
     joined_t: float = 0.0
     left_t: Optional[float] = None
+    #: op name -> transient store failures observed at this worker's mount
+    #: (chaos storm rejections + FlakyObjectStore-style inner raises);
+    #: empty on a fault-free run
+    store_faults: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -597,6 +711,10 @@ class ClusterReport:
     #: heap_compactions — the "how much did simulating this cost" figures
     #: the scaling benchmark reports per sweep point.
     simulator: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: fault-injection summary (runs with ClusterConfig.chaos set):
+    #: scheduled event count, seed, and per-kind fired counts.  Empty when
+    #: no chaos layer was registered.
+    chaos: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def all_done(self) -> bool:
@@ -616,7 +734,7 @@ class ClusterReport:
 Handler = Callable[[Worker, Any], Any]
 
 (_DISPATCH, _FINISH, _HEARTBEAT, _IO_DONE, _JOIN, _LEAVE, _ARRIVE,
- _CONTROL) = range(8)
+ _CONTROL, _CHAOS) = range(9)
 
 
 class ClusterEngine:
@@ -638,6 +756,14 @@ class ClusterEngine:
         if self.config.controller is not None and not self.config.virtual_time:
             raise ValueError("a FleetController requires virtual_time=True "
                              "(its ticks are simulation events)")
+        if self.config.chaos is not None and not self.config.virtual_time:
+            raise ValueError("chaos fault injection requires "
+                             "virtual_time=True (faults are scheduled in "
+                             "virtual time through the event loop)")
+        #: engine-side chaos runtime: heap events + per-worker storm/stall
+        #: windows + fired counts.  None when no chaos layer is registered.
+        self._chaos = (ChaosRuntime.build(self.config.chaos)
+                       if self.config.chaos is not None else None)
         #: the shared metadata KV — pass the caller's so its mounts see
         #: everything the fleet writes (and vice versa)
         self.meta = meta if meta is not None else MetadataStore()
@@ -710,8 +836,20 @@ class ClusterEngine:
         shared pool)."""
         pool = (pool_override if pool_override is not None
                 else self._pool_of(index))
-        mount = MountStore(self.inner, model=self._store_model)
-        mmeta = MountMeta(self.meta, latency_s=self._meta_latency)
+        chaos_inj = None
+        stall_windows: Tuple = ()
+        clock_fn: Optional[Callable[[], float]] = None
+        if self._chaos is not None:
+            # per-worker fault plumbing resolved once at mount creation:
+            # a worker no storm/stall ever targets gets None/() and pays
+            # nothing per op (the disabled-twin guarantee)
+            chaos_inj = self._chaos.storm_injector(index)
+            stall_windows = self._chaos.kv_stall_windows(index)
+            clock_fn = lambda: self._now  # noqa: E731 — engine clock handle
+        mount = MountStore(self.inner, model=self._store_model,
+                           chaos=chaos_inj, clock=clock_fn)
+        mmeta = MountMeta(self.meta, latency_s=self._meta_latency,
+                          stall_windows=stall_windows, clock=clock_fn)
         fcfg = self._pool_fest_cfg.get(pool, self._fest_cfg)
         ssd_tier = None
         if self.config.ssd_tier_registry is not None and fcfg.ssd_bytes > 0:
@@ -730,6 +868,7 @@ class ClusterEngine:
         worker = Worker(index, mount, fs, perfmodel.WorkerClock(),
                         zone=zone, meta=mmeta, pool=pool)
         worker.placement = self.config.placement
+        worker._engine = self
         return worker
 
     # -- public API -----------------------------------------------------------
@@ -768,6 +907,9 @@ class ClusterEngine:
                     f"worker claims from it (worker pools: "
                     f"{sorted(p if p is not None else '<default>' for p in worker_pools)})")
         queue = self._make_queue()
+        #: the live queue, exposed so a handler can read its own pool's
+        #: backlog (Worker.pending_depth — the load-shedding signal)
+        self._active_queue = queue
         #: per-pool unfinished-task counts, maintained at completion — what
         #: lets a pool-targeted elastic leave refuse to strand live work
         self._unfinished_by_pool = {}
@@ -832,9 +974,11 @@ class ClusterEngine:
             if nbytes:
                 io_s = max(io_s, nbytes / self._node_cap)
         # SSD-tier hits ride no fabric flow: their device read time bills
-        # straight into the tail (exactly 0.0 with no tier mounted)
+        # straight into the tail (exactly 0.0 with no tier mounted);
+        # likewise retry backoff (exactly 0.0 when nothing retried)
         tail_s = (worker.meta.drain_pending() + worker._drain_compute()
                   + worker.fs.drain_ssd_pending()
+                  + worker.fs.drain_retry_pending()
                   + self.config.compute_s_per_task)
         return io_s, nbytes, tail_s
 
@@ -1032,6 +1176,13 @@ class ClusterEngine:
 
         for ev in (self.config.elastic.events if self.config.elastic else ()):
             push(ev.t, _JOIN if ev.delta > 0 else _LEAVE, -1, ev)
+        # instant faults (crash / hang / ssd / capacity set+restore) enter
+        # the heap; storms and KV stalls are static mount-level windows
+        # that cost nothing here.  An empty schedule pushes nothing and
+        # consumes no seq — the disabled twin stays bit-identical.
+        if self._chaos is not None:
+            for t, tag in self._chaos.heap_events:
+                push(t, _CHAOS, -1, tag)
         controller = self.config.controller
         if controller is not None:
             push(controller.interval_s, _CONTROL, -1)
@@ -1232,13 +1383,93 @@ class ClusterEngine:
                         w._current = None
                 continue
 
+            if kind == _CHAOS:
+                rt = self._chaos
+                tag = data[0]
+                if tag == "capacity":
+                    # zone outage / link brownout window edge: rescale the
+                    # domain's capacity through the incremental reflow
+                    # path (restore events re-scale to 1.0)
+                    _, domain, scale = data
+                    if fabric is not None:
+                        fabric.set_capacity_scale(domain, scale)
+                        dirty = True
+                        if scale != 1.0:  # count window opens, not closes
+                            rt.count("zone_outage" if isinstance(domain, int)
+                                     else "link_brownout")
+                elif tag == "crash":
+                    ev = data[1]
+                    if ev.worker < len(self.workers):
+                        w = self.workers[ev.worker]
+                        if w.active:
+                            rt.count("crash")
+                            # the process dies: its claim vanishes without
+                            # fail() (same contract as pre-emption — lease
+                            # expiry / speculation recovers the task), its
+                            # flow leaves the fabric, and a restart is the
+                            # only thing scheduled
+                            fl = flows.pop(w.index, None)
+                            if fl is not None:
+                                fabric.remove_flow(w.index)
+                                dirty = True
+                                if fl.has_pred:
+                                    stale_io += 1
+                                    if stale_io > stale_peak:
+                                        stale_peak = stale_io
+                            if w._inflight:
+                                busy -= 1
+                                w._inflight = False
+                                w._current = None
+                            idle = self._idle_by_pool.get(w.pool)
+                            if idle:
+                                idle.discard(w.index)
+                            rt.hung_until.pop(ev.worker, None)  # fresh process
+                            if self._now >= w.ready_t:
+                                # epoch bump kills the dead incarnation's
+                                # in-heap FINISH/poll events; the restart
+                                # dispatch starts a fresh chain.  A crash
+                                # during warm-up schedules nothing — the
+                                # join's first dispatch at ready_t stands.
+                                w._dispatch_epoch += 1
+                                w._idle_backoff = 0.0
+                                push(self._now + ev.restart_s, _DISPATCH,
+                                     w.index, w._dispatch_epoch)
+                elif tag == "hang":
+                    ev = data[1]
+                    if (ev.worker < len(self.workers)
+                            and self.workers[ev.worker].active):
+                        rt.count("hang")
+                        until = self._now + ev.duration_s
+                        rt.hung_until[ev.worker] = max(
+                            rt.hung_until.get(ev.worker, 0.0), until)
+                elif tag == "ssd":
+                    ev = data[1]
+                    if ev.worker < len(self.workers):
+                        w = self.workers[ev.worker]
+                        if w.fs.drop_ssd_tier():
+                            rt.count("ssd_failure")
+                        reg = self.config.ssd_tier_registry
+                        if reg is not None:
+                            # the device is gone for good: a later remount
+                            # of this slot gets a cold replacement, not
+                            # the dead device's contents
+                            reg.pop((w.pool, w.index), None)
+                continue
+
             worker = self.workers[widx]
 
             if kind == _HEARTBEAT:
                 # the chain re-arms itself while the worker is still on the
-                # same task; it goes quiet on completion or pre-emption
+                # same task; it goes quiet on completion or pre-emption.
+                # A hung worker's beats are *suppressed* (the chain stays
+                # armed but the lease stops renewing — exactly how a stall
+                # looks from the queue's side, letting the lease expire
+                # under the zombie while it still "holds" the task).
                 if worker.active and worker._current == data:
-                    queue.heartbeat(data, worker.name)
+                    hung = (self._chaos.hung_until.get(widx)
+                            if self._chaos is not None else None)
+                    if hung is None or self._now >= hung:
+                        queue.heartbeat(data, worker.name)
                     push(self._now + self.config.heartbeat_s, _HEARTBEAT,
                          widx, data)
                 continue
@@ -1252,13 +1483,27 @@ class ClusterEngine:
                 fabric.remove_flow(widx)
                 dirty = True  # departing reader frees bandwidth for the rest
                 push(self._now + fl.tail_s, _FINISH, widx,
-                     (fl.task, fl.result, fl.error))
+                     (fl.task, fl.result, fl.error, fl.claim_epoch))
                 continue
 
             if kind == _FINISH:
                 if not worker.active or not worker._inflight:
                     continue  # pre-empted after this was scheduled
-                task, result, error = data
+                task, result, error, cep = data
+                if cep != worker._dispatch_epoch:
+                    continue  # claim predates a crash-restart: the dead
+                    # incarnation's completion must not land (the task
+                    # re-runs via lease expiry / speculation)
+                if self._chaos is not None:
+                    hung = self._chaos.hung_until.get(widx)
+                    if hung is not None and self._now < hung:
+                        # the zombie path: completion is *deferred*, not
+                        # dropped — it fires at hang end and goes through
+                        # first-wins arbitration, so a speculative copy
+                        # that finished meanwhile turns this into a
+                        # duplicate_completion, never a double count
+                        push(hung, _FINISH, widx, data)
+                        continue
                 busy -= 1
                 worker._inflight = False
                 worker._current = None
@@ -1283,6 +1528,11 @@ class ClusterEngine:
                 continue
             if data is not None and data != worker._dispatch_epoch:
                 continue  # poll superseded by an arrival wake-up
+            if self._chaos is not None:
+                hung = self._chaos.hung_until.get(widx)
+                if hung is not None and self._now < hung:
+                    push(hung, _DISPATCH, widx, data)  # stalled: poll later
+                    continue
             task = queue.claim(worker.name, lease_s=self.config.lease_s,
                                pool=worker.pool)
             if task is None:
@@ -1306,6 +1556,7 @@ class ClusterEngine:
             worker._idle_backoff = 0.0
             worker._current = task.task_id
             worker._inflight = True
+            claim_epoch = worker._dispatch_epoch
             busy += 1
             result = error = None
             try:
@@ -1331,13 +1582,13 @@ class ClusterEngine:
             if fabric is not None and nbytes > 0 and io_s > 0:
                 fl = _Flow(task, result, error, bytes_left=float(nbytes),
                            demand=nbytes / io_s, tail_s=tail_s,
-                           now=self._now)
+                           now=self._now, claim_epoch=claim_epoch)
                 flows[widx] = fl
                 fabric.add_flow(widx, domain, fl.demand)
                 dirty = True
             else:
                 push(self._now + io_s + tail_s, _FINISH, widx,
-                     (task, result, error))
+                     (task, result, error, claim_epoch))
         self._sim = {
             "events": events, "io_pushes": io_pushes, "reflows": reflows,
             "heap_peak": heap_peak, "stale_peak": stale_peak,
@@ -1358,7 +1609,8 @@ class ClusterEngine:
                          festivus_stats=dataclasses.replace(w.fs.stats),
                          meta_ops=w.meta.ops if w.meta is not None else 0,
                          zone=w.zone, active=w.active, pool=w.pool,
-                         joined_t=w.joined_t, left_t=w.left_t)
+                         joined_t=w.joined_t, left_t=w.left_t,
+                         store_faults=dict(w.store.fault_counts))
             for w in self.workers
         ]
         store_stats = StoreStats.merge(r.store_stats for r in per_worker)
@@ -1375,7 +1627,9 @@ class ClusterEngine:
             joined=self._joined, left=self._left,
             egress_bytes=self._egress_bytes, egress_usd=self._egress_usd,
             completion_times=queue.completion_times(),
-            simulator=dict(self._sim))
+            simulator=dict(self._sim),
+            chaos=(self._chaos.snapshot() if self._chaos is not None
+                   else {}))
 
 
 def scatter_gather(store: ObjectStore, tasks: Dict[str, Any], handler: Handler,

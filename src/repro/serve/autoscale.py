@@ -103,6 +103,13 @@ class AutoscalePolicy:
     #: ignore trends built on fewer recent arrivals than this (a handful
     #: of early requests must not read as a ramp)
     predict_min_arrivals: int = 20
+    #: load-shedding line for a degradation-aware fleet (0 = off): when
+    #: the serve pool's backlog exceeds ``brownout_queue_per_server *
+    #: servers`` a :class:`~repro.serve.tileserver.DegradePolicy`-driven
+    #: handler sheds the request instead of queueing it deeper.  Sits
+    #: *above* queue_high_per_server: scale-out is the first answer, shed
+    #: is the last (capacity is already maxed or still warming).
+    brownout_queue_per_server: float = 0.0
 
     def __post_init__(self):
         if self.min_servers < 1:
@@ -130,6 +137,9 @@ class AutoscalePolicy:
         if self.predict_min_arrivals < 1:
             raise ValueError(f"predict_min_arrivals must be >= 1, got "
                              f"{self.predict_min_arrivals}")
+        if self.brownout_queue_per_server < 0:
+            raise ValueError(f"brownout_queue_per_server must be >= 0, got "
+                             f"{self.brownout_queue_per_server}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,6 +213,10 @@ class ServeAutoscaler(FleetController):
         self._win_order: Deque[Tuple[float, float]] = deque()
         self._win_sorted: List[float] = []
         self._last_now = float("-inf")
+        #: serve-pool size (active + warming) as of the last tick — the
+        #: denominator a shedding handler's brownout threshold scales by
+        #: (0 until the first tick; callers fall back to base fleet size)
+        self.last_servers = 0
 
     # -- signal extraction ----------------------------------------------------
     def _advance(self, now: float, view: FleetView) -> None:
@@ -296,6 +310,7 @@ class ServeAutoscaler(FleetController):
         active = view.active_by_pool.get(p.pool, 0)
         warming = view.warming_by_pool.get(p.pool, 0)
         servers = active + warming
+        self.last_servers = servers
         out_cooled = now - self._last_out_t >= p.cooldown_s
         in_cooled = (now - max(self._last_out_t, self._last_in_t)
                      >= p.cooldown_s)

@@ -34,6 +34,7 @@ from repro.core.chunkstore import (ChunkedArray, ChunkStore, parse_chunk_key,
 from repro.core.festivus import Festivus, FestivusConfig, SsdTier
 from repro.core.metadata import MetadataStore
 from repro.core.object_store import ObjectStore
+from repro.launch.chaos import ChaosSchedule
 from repro.launch.cluster import ClusterConfig, ClusterEngine, ClusterReport, Worker
 from repro.serve.autoscale import AutoscalePolicy, AutoscaleReport, ServeAutoscaler
 
@@ -425,6 +426,58 @@ class TileServer:
 
 
 # ---------------------------------------------------------------------------
+# graceful degradation: the ladder a brownout walks down
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """What a server gives up, and in what order, when the fleet browns out.
+
+    The ladder (cheapest concession first):
+
+    1. **stale-while-revalidate** (``swr_s > 0``, edge tier only): a
+       purged edge entry keeps serving its old bytes for up to ``swr_s``
+       after the purge while a background revalidation request refills
+       it — clients see edge-hit latency instead of a miss storm right
+       after every ingest wave.
+    2. **coarser-pyramid fallback** (``coarse_fallback``): a request
+       claimed more than ``deadline_s`` after it arrived (the deadline is
+       already blown — queueing ate it) is answered with the parent tile
+       one pyramid level up: 4x fewer pixels to read and decode, a
+       response the client can still render.
+    3. **load shedding**: when the serve pool's backlog exceeds the
+       brownout line — ``AutoscalePolicy.brownout_queue_per_server *
+       current servers`` under an autoscaler, else the static
+       ``brownout_depth`` — the request is answered with a cheap refusal
+       (``shed_cost_s`` of CPU, no I/O) instead of queueing deeper.
+       Shed responses count against availability, never into latency.
+    """
+
+    #: claim-time delay beyond which the response degrades to the parent
+    #: pyramid level (queueing already ate the latency budget)
+    deadline_s: float = 0.05
+    coarse_fallback: bool = True
+    #: static shed line: shed when pool backlog exceeds this (0 = only
+    #: the autoscaler's brownout_queue_per_server line, if any, sheds)
+    brownout_depth: int = 0
+    #: stale-while-revalidate window for purged edge entries (0 = off)
+    swr_s: float = 0.0
+    #: CPU billed for emitting a shed response (a 503 is not free)
+    shed_cost_s: float = 20e-6
+
+    def __post_init__(self):
+        if self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+        if self.brownout_depth < 0:
+            raise ValueError(f"brownout_depth must be >= 0, got "
+                             f"{self.brownout_depth}")
+        if self.swr_s < 0:
+            raise ValueError(f"swr_s must be >= 0, got {self.swr_s}")
+        if self.shed_cost_s < 0:
+            raise ValueError(f"shed_cost_s must be >= 0, got "
+                             f"{self.shed_cost_s}")
+
+
+# ---------------------------------------------------------------------------
 # the fleet: N servers as cluster-engine workers
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -482,6 +535,22 @@ class ServingReport:
     #: and the post-run freshness probe (cached tiles over rewritten
     #: chunks re-read from scratch and compared byte-for-byte)
     ingest: Optional[Dict[str, Any]] = None
+    #: graceful-degradation outcomes (all zero without a DegradePolicy):
+    #: `shed` requests were refused at the brownout line (no latency
+    #: sample — a refusal is not a serve), `degraded` were answered with
+    #: the parent pyramid level after blowing their deadline, and
+    #: `stale_served` rode a purged edge entry inside its
+    #: stale-while-revalidate window
+    shed: int = 0
+    degraded: int = 0
+    stale_served: int = 0
+    #: requests that dead-lettered under fault injection (every queue
+    #: retry burned; only possible with a ChaosSchedule); 0 otherwise
+    dead: int = 0
+    #: non-shed, non-dead fraction of the trace — the availability figure
+    #: the fault-matrix BENCH section reports (degraded and stale count
+    #: as available: the client got renderable bytes)
+    availability: float = 1.0
 
     def window_percentile(self, q: float, t0: float = 0.0,
                           t1: float = float("inf")) -> float:
@@ -535,7 +604,8 @@ class TileFleet:
                  edge_cache_bytes: int = 0,
                  autoscale: Optional[AutoscalePolicy] = None,
                  ssd_bytes: int = 0,
-                 placement=None):
+                 placement=None,
+                 fest_overrides: Optional[Dict[str, Any]] = None):
         if servers < 1:
             raise ValueError(f"need at least one server, got {servers}")
         if edge_cache_bytes < 0:
@@ -576,11 +646,17 @@ class TileFleet:
         #: exposed to handlers as ``worker.placement``: the ingest wheel
         #: spreads freshly-written scene batches across fabric zones
         self.placement = placement
+        #: FestivusConfig field overrides applied to every mount — the
+        #: recovery knobs a chaos campaign arms (``retry_budget_s``,
+        #: ``hedged_reads``, ``hedge_delay_floor_s``).  None = legacy
+        #: config, bit-identical
+        self.fest_overrides = fest_overrides
 
     def _config(self, batch_nodes: int,
                 controller: Optional[ServeAutoscaler] = None,
                 ingest_nodes: int = 0,
                 mount_write_hook: Optional[Callable[[str], None]] = None,
+                chaos: Optional[ChaosSchedule] = None,
                 ) -> ClusterConfig:
         pools: Tuple[Tuple[str, int], ...] = ((SERVE_POOL, self.servers),)
         if batch_nodes:
@@ -601,6 +677,8 @@ class TileFleet:
         fest = FestivusConfig(block_bytes=self.block_bytes,
                               readahead_blocks=0, cache_bytes=0,
                               max_inflight=self.max_inflight)
+        if self.fest_overrides:
+            fest = dataclasses.replace(fest, **self.fest_overrides)
         # pool-scoped two-level storage: only serve mounts get the SSD
         # tier (ingest/batch traffic write-arounds it by construction),
         # and the tiers themselves persist on the fleet across runs.
@@ -623,22 +701,24 @@ class TileFleet:
             fabric=self.fabric, zones=self.zones,
             worker_pools=pools, controller=controller,
             pool_festivus=pool_fest, ssd_tier_registry=ssd_registry,
-            placement=self.placement,
+            placement=self.placement, chaos=chaos,
             # the tile cache is the cache under test; festivus block cache
             # off so hits/misses are attributable to it alone
             festivus=fest)
 
     def _edge_filter(self, trace: Sequence[TileRequest], edge: EdgeCache,
-                     purge_events: Optional[Sequence[Tuple[float, Tuple]]] = None):
+                     purge_events: Optional[Sequence[Tuple[float, Tuple]]] = None,
+                     swr_s: float = 0.0):
         """Pass the trace through the edge tier in arrival order.
 
-        Returns ``(forwarded, followers)``: the requests that missed the
-        edge (they become fleet tasks, ids matching their forwarded
-        order), and for every edge-absorbed request the ``(arrival_t,
-        nbytes, leader_id)`` triple — resolved into a latency later,
-        against the leader's simulated completion instant.  Tile sizes
-        come from the manifests alone (no chunk I/O here: the edge caches
-        responses, it never reads the pyramid).
+        Returns ``(forwarded, followers, stale_served, revalidation_ids)``:
+        the requests that missed the edge (they become fleet tasks, ids
+        matching their forwarded order), for every edge-absorbed request
+        the ``(arrival_t, nbytes, leader_id)`` triple — resolved into a
+        latency later, against the leader's simulated completion instant
+        — plus the stale-while-revalidate bookkeeping (below).  Tile
+        sizes come from the manifests alone (no chunk I/O here: the edge
+        caches responses, it never reads the pyramid).
 
         `purge_events` is the edge's write-invalidation feed: a
         time-sorted list of ``(t, (array, level, x, y))`` purges (every
@@ -650,12 +730,26 @@ class TileFleet:
         deliberately conservative modeling choice (documented in
         ARCHITECTURE.md §9) that can only under-count edge hits, never
         serve stale bytes.
+
+        ``swr_s`` > 0 turns purges into stale-while-revalidate marks
+        (the graceful-degradation rung for read availability during
+        ingest churn): a purged-but-present entry answers requests for up
+        to ``swr_s`` seconds past the purge — each such answer lands in
+        ``stale_served`` as ``(arrival_t, nbytes)`` and the *first* one
+        also forwards a background revalidation request (its task id goes
+        in ``revalidation_ids``, so the caller can exclude it from
+        client-visible latency).  Past the window the entry is dropped
+        and the request forwards as a plain miss.  With ``swr_s == 0``
+        (the default) the legacy purge path runs unchanged.
         """
         fs = Festivus(self.store, meta=self.meta)
         cs = ChunkStore(fs, self.root)
         arrays: Dict[str, ChunkedArray] = {}
         forwarded: List[TileRequest] = []
         followers: List[Tuple[float, int, str]] = []
+        stale_served: List[Tuple[float, int]] = []
+        revalidation_ids: set = set()
+        stale_at: Dict[Tuple, float] = {}
         purges = sorted(purge_events) if purge_events else []
         fmts = tuple(perfmodel.TILE_FORMATS)
         pi = 0
@@ -663,7 +757,13 @@ class TileFleet:
             for req in trace:
                 while pi < len(purges) and purges[pi][0] <= req.t:
                     for fmt in fmts:
-                        edge.invalidate(tuple(purges[pi][1]) + (fmt,))
+                        k = tuple(purges[pi][1]) + (fmt,)
+                        if swr_s > 0.0:
+                            # keep the entry; remember the *earliest*
+                            # unrevalidated purge instant for the key
+                            stale_at.setdefault(k, purges[pi][0])
+                        else:
+                            edge.invalidate(k)
                     pi += 1
                 arr = arrays.get(req.array)
                 if arr is None:
@@ -679,6 +779,21 @@ class TileFleet:
                 # keying and sizing, bit-for-bit
                 nbytes = self.serving_model.wire_bytes(raw, req.fmt)
                 key = (req.array, req.level, req.x, req.y, req.fmt)
+                purged_t = stale_at.get(key)
+                if purged_t is not None:
+                    leader = edge.get(key)
+                    del stale_at[key]
+                    if leader is not None and req.t <= purged_t + swr_s:
+                        # serve the stale entry now, revalidate behind it:
+                        # the new leader refills the entry off-path
+                        stale_served.append((req.t, nbytes))
+                        leader = f"req{len(forwarded):06d}"
+                        revalidation_ids.add(leader)
+                        edge.put(key, nbytes, leader)
+                        forwarded.append(req)
+                        continue
+                    # window expired (or entry already evicted): hard purge
+                    edge.invalidate(key)
                 leader = edge.get(key)
                 if leader is not None:
                     followers.append((req.t, nbytes, leader))
@@ -688,7 +803,7 @@ class TileFleet:
                     forwarded.append(req)
         finally:
             fs.close()
-        return forwarded, followers
+        return forwarded, followers, stale_served, revalidation_ids
 
     def run(self, trace: Sequence[TileRequest],
             batch_tasks: Optional[Dict[str, Any]] = None,
@@ -697,8 +812,22 @@ class TileFleet:
             batch_arrival_t: float = 0.0,
             ingest_tasks: Optional[Dict[str, Any]] = None,
             ingest_handler: Optional[Callable[[Worker, Any], Any]] = None,
-            ingest_nodes: int = 0) -> ServingReport:
+            ingest_nodes: int = 0,
+            degrade: Optional[DegradePolicy] = None,
+            chaos: Optional[ChaosSchedule] = None) -> ServingReport:
         """Serve a request trace; optionally run a batch campaign alongside.
+
+        `degrade` arms the graceful-degradation ladder (shed / coarse
+        fallback / stale-while-revalidate — see :class:`DegradePolicy`);
+        `chaos` injects a deterministic fault schedule into the fleet
+        (see :mod:`repro.launch.chaos`).  Under chaos, requests that
+        exhaust their retries dead-letter instead of aborting the run —
+        they are counted into ``ServingReport.dead`` and subtracted from
+        ``availability``; the exactly-once audit (every request
+        completed, shed, or dead — none lost) still holds.  Chaos runs
+        that crash serve workers should use an `AutoscalePolicy` (its
+        short lease is the re-delivery path; the fixed-fleet lease is
+        3600 s of virtual time).
 
         `batch_arrival_t` delays the whole batch wave to that virtual
         instant (the Matsu-wheel shape: a reanalysis scan kicked off while
@@ -728,13 +857,16 @@ class TileFleet:
             bus = TileInvalidationBus(self.store, self.meta, self.root,
                                       self.tile_px)
         edge = followers = None
+        stale_list: List[Tuple[float, int]] = []
+        reval_ids: set = set()
         serve_trace: Sequence[TileRequest] = trace
         if self.edge_cache_bytes:
             edge = EdgeCache(self.edge_cache_bytes)
             purges = (self._ingest_purge_events(bus, ingest_tasks)
                       if bus is not None else None)
-            serve_trace, followers = self._edge_filter(trace, edge,
-                                                       purge_events=purges)
+            serve_trace, followers, stale_list, reval_ids = self._edge_filter(
+                trace, edge, purge_events=purges,
+                swr_s=(degrade.swr_s if degrade is not None else 0.0))
         reqs = {f"req{i:06d}": r for i, r in enumerate(serve_trace)}
         tasks: Dict[str, Any] = dict(reqs)
         arrivals = {tid: r.t for tid, r in reqs.items()}
@@ -757,8 +889,26 @@ class TileFleet:
 
         tile_servers: Dict[int, TileServer] = {}
 
+        def _shed_threshold() -> float:
+            # autoscaled fleets express the brownout point per server so
+            # it tracks the current fleet size; fixed fleets use the
+            # policy's absolute depth.  0 disables shedding entirely.
+            if (scaler is not None
+                    and self.autoscale.brownout_queue_per_server > 0):
+                return (self.autoscale.brownout_queue_per_server
+                        * (scaler.last_servers or self.servers))
+            return float(degrade.brownout_depth)
+
         def handler(worker: Worker, payload):
             if isinstance(payload, TileRequest):
+                if degrade is not None:
+                    threshold = _shed_threshold()
+                    if threshold > 0 and worker.pending_depth() > threshold:
+                        # brownout: answer HTTP-503-cheap and move on —
+                        # the whole point is to keep the queue bounded
+                        worker.charge_compute(degrade.shed_cost_s)
+                        return {"hit": False, "nbytes": 0,
+                                "worker": worker.name, "shed": True}
                 srv = tile_servers.get(worker.index)
                 if srv is None:
                     srv = tile_servers[worker.index] = TileServer(
@@ -768,6 +918,22 @@ class TileFleet:
                         charge=worker.charge_compute)
                     if bus is not None:
                         bus.register_cache(srv.cache)
+                if degrade is not None and degrade.coarse_fallback:
+                    delay = worker.virtual_now() - payload.t
+                    if delay > degrade.deadline_s:
+                        arr = srv._array(payload.array)
+                        if payload.level < arr.spec.pyramid_levels:
+                            # deadline already blown in queue: serve the
+                            # parent pyramid tile (quarter the pixels)
+                            coarse = TileRequest(
+                                t=payload.t, level=payload.level + 1,
+                                x=payload.x // 2, y=payload.y // 2,
+                                array=payload.array, fmt=payload.fmt,
+                                region=payload.region)
+                            resp = srv.serve(coarse)
+                            return {"hit": resp.cache_hit,
+                                    "nbytes": resp.nbytes,
+                                    "worker": worker.name, "degraded": True}
                 resp = srv.serve(payload)
                 return {"hit": resp.cache_hit, "nbytes": resp.nbytes,
                         "worker": worker.name}
@@ -785,21 +951,41 @@ class TileFleet:
                                 ingest_nodes=ingest_nodes,
                                 mount_write_hook=(bus.on_write
                                                   if bus is not None
-                                                  else None)))
+                                                  else None),
+                                chaos=chaos))
         report = engine.run(tasks, handler, arrivals=arrivals, pools=pools)
+        dead = set(report.dead_tasks)
         if not report.all_done:
-            raise RuntimeError(f"serving campaign incomplete: "
-                               f"{report.queue_stats} dead={report.dead_tasks}")
+            # under chaos, dead-lettered requests (retry budget spent, all
+            # lease redeliveries burned) are an accounted outcome — but the
+            # exactly-once audit still holds: completed + dead must cover
+            # every task, none lost, none duplicated
+            if chaos is None or (report.queue_stats["completed"] + len(dead)
+                                 != len(tasks)):
+                raise RuntimeError(
+                    f"serving campaign incomplete: "
+                    f"{report.queue_stats} dead={report.dead_tasks}")
 
         latencies: List[float] = []
         samples: List[Tuple[float, float]] = []
         hits = misses = bytes_served = 0
+        shed_n = degraded_n = dead_requests = 0
         first_done: Dict[str, float] = {}  # serving node -> first completion
         for tid, req in reqs.items():
+            if tid in reval_ids:
+                continue  # background revalidation, not client-visible
+            if tid in dead:
+                dead_requests += 1
+                continue
             done_t = report.completion_times[tid]
+            res = report.results[tid]
+            if res.get("shed"):
+                shed_n += 1
+                continue  # no latency sample: the client got a 503
+            if res.get("degraded"):
+                degraded_n += 1
             latencies.append(done_t - req.t)
             samples.append((req.t, done_t - req.t))
-            res = report.results[tid]
             hits += bool(res["hit"])
             misses += not res["hit"]
             bytes_served += res["nbytes"]
@@ -811,7 +997,13 @@ class TileFleet:
         edge_pure = edge_coal = 0
         edge_hit_cost = self.serving_model.edge_hit_cost_s()
         for (t, nbytes, leader) in (followers or ()):
-            resp_t = report.completion_times[leader]
+            resp_t = report.completion_times.get(leader)
+            if resp_t is None:
+                dead_requests += 1  # coalesced onto a dead leader
+                continue
+            if report.results[leader].get("shed"):
+                shed_n += 1  # coalesced onto a shed response
+                continue
             if t < resp_t:
                 lat = (resp_t - t) + edge_hit_cost
                 edge_coal += 1
@@ -820,6 +1012,11 @@ class TileFleet:
                 edge_pure += 1
             latencies.append(lat)
             samples.append((t, lat))
+            bytes_served += nbytes
+        # stale-while-revalidate answers: served from the edge at arrival
+        for (t, nbytes) in stale_list:
+            latencies.append(edge_hit_cost)
+            samples.append((t, edge_hit_cost))
             bytes_served += nbytes
         samples.sort(key=lambda s: s[0])
         evictions = sum(s.cache.stats.evictions for s in tile_servers.values())
@@ -876,7 +1073,10 @@ class TileFleet:
             edge_hit_rate=(edge_pure + edge_coal) / len(trace),
             combined_hit_rate=1.0 - misses / len(trace),
             serve_worker_seconds=serve_worker_seconds,
-            autoscale=autoscale_report, ingest=ingest_stats)
+            autoscale=autoscale_report, ingest=ingest_stats,
+            shed=shed_n, degraded=degraded_n, stale_served=len(stale_list),
+            dead=dead_requests,
+            availability=(len(trace) - shed_n - dead_requests) / len(trace))
 
     def _ingest_purge_events(self, bus: TileInvalidationBus,
                              ingest_tasks: Dict[str, Any],

@@ -28,8 +28,9 @@ SCHEMAS = {
     "BENCH_serving.json": {
         "top": ["bench", "world", "trace", "slo", "rows", "mixed_workload",
                 "million_sweep", "geo_serving", "ingest_wheel", "two_level",
-                "trace_shapes", "encode_model", "predictive_scaling",
-                "autoscaling", "edge_cache", "simulator", "headline_p99_ms"],
+                "availability", "trace_shapes", "encode_model",
+                "predictive_scaling", "autoscaling", "edge_cache",
+                "simulator", "headline_p99_ms"],
         "row": ["servers", "requests", "spike_multiplier", "mixed",
                 "offered_rps", "hit_rate", "cache_evictions", "p50_ms",
                 "p90_ms", "p99_ms", "max_ms", "spike_p99_ms",
@@ -433,6 +434,84 @@ def test_serving_two_level_section_proves_issue_acceptance():
     smoke = rows[0]
     assert smoke["nominal_requests"] >= 100_000
     assert smoke["servers"] >= 100
+
+
+#: every field the availability writer emits per fault-matrix cell —
+#: schema-guarded so writer drift fails CI
+AVAILABILITY_ROW_KEYS = [
+    "crash", "zone_outage", "throttle_storm", "requests", "completed",
+    "shed", "degraded", "dead", "availability", "p50_ms", "p99_ms",
+    "p999_ms", "hedged_reads", "hedge_wins", "store_retries",
+    "retry_backoff_s", "cost_usd", "chaos_fired", "exactly_once",
+    "events", "wall_s",
+]
+
+AVAILABILITY_TOP_KEYS = [
+    "world", "base_rps", "alpha", "seed", "servers", "nominal_requests",
+    "degrade", "lease_s", "brownout_queue_per_server", "fest_overrides",
+    "node_cost_per_hr_usd", "rows", "determinism_ok", "twin_requests",
+    "twin_bit_identical",
+]
+
+
+def test_serving_availability_section_proves_issue_acceptance():
+    """Issue 10 acceptance: the full 2^3 fault matrix (crash x zone
+    outage x throttle storm) at >= 10^5 requests per cell through the
+    graceful-degradation ladder, every cell's exactly-once audit clean
+    (completed + shed + dead == requests), the scheduled faults actually
+    fired, the chaos-disabled twin bit-identical to the pre-chaos
+    engine, and the worst cell seeded-deterministic across a re-run."""
+    with open(ROOT / "BENCH_serving.json") as f:
+        record = json.load(f)
+    section = record["availability"]
+    missing = [k for k in AVAILABILITY_TOP_KEYS if k not in section]
+    assert not missing, f"availability section missing {missing}"
+    # the recovery configuration rides in the record (reproducibility)
+    assert section["degrade"]["deadline_s"] > 0
+    assert section["fest_overrides"]["hedged_reads"] is True
+    assert section["fest_overrides"]["retry_budget_s"] > 0
+    assert section["brownout_queue_per_server"] > 0
+    assert section["nominal_requests"] >= 100_000
+    rows = section["rows"]
+    # the full matrix: one cell per fault combination, each exactly once
+    assert len(rows) == 8
+    combos = {(r["crash"], r["zone_outage"], r["throttle_storm"])
+              for r in rows}
+    assert len(combos) == 8
+    for i, row in enumerate(rows):
+        missing = [k for k in AVAILABILITY_ROW_KEYS if k not in row]
+        assert not missing, f"availability row {i} missing {missing}"
+        # THE acceptance audit: every request completed, shed, or dead
+        assert row["exactly_once"] is True
+        assert row["completed"] + row["shed"] + row["dead"] \
+            == row["requests"]
+        assert 0.0 <= row["availability"] <= 1.0
+        assert row["p999_ms"] >= row["p99_ms"] >= row["p50_ms"] > 0
+        assert row["cost_usd"] > 0
+        # every scheduled fault kind fired (and only scheduled kinds)
+        expected = set()
+        if row["crash"]:
+            expected.add("crash")
+        if row["zone_outage"]:
+            expected.add("zone_outage")
+        if row["throttle_storm"]:
+            expected.add("throttle_storm")
+        assert set(row["chaos_fired"]) == expected
+        # the storm exercised the recovery machinery it targets
+        if row["throttle_storm"]:
+            assert row["store_retries"] > 0 or row["hedge_wins"] > 0
+            assert row["hedged_reads"] > 0
+    fault_free = next(r for r in rows if not any(
+        (r["crash"], r["zone_outage"], r["throttle_storm"])))
+    assert fault_free["availability"] == 1.0
+    assert fault_free["store_retries"] == 0 and fault_free["dead"] == 0
+    # storms must be visible in the tail vs the fault-free cell
+    storm = next(r for r in rows if r["throttle_storm"] and not r["crash"]
+                 and not r["zone_outage"])
+    assert storm["p999_ms"] > fault_free["p999_ms"]
+    # the chaos-disabled twin and the seeded-determinism re-run both held
+    assert section["twin_bit_identical"] is True
+    assert section["determinism_ok"] is True
 
 
 def test_serving_trace_shapes_cover_diurnal_and_flash_crowd():

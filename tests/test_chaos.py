@@ -1,0 +1,537 @@
+"""Chaos layer: deterministic virtual-time fault injection through the
+DES (crash / hang / zone outage / throttle storm / SSD failure / KV
+stall), the recovery machinery it exercises (lease expiry, retry
+budgets, hedged reads, backoff billed into the virtual clock), the
+disabled-twin bit-identity guarantee, and the serving-side
+graceful-degradation ladder (shed / coarse fallback /
+stale-while-revalidate)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkStore,
+    Festivus,
+    FestivusConfig,
+    FlakyObjectStore,
+    InMemoryObjectStore,
+    TransientStoreError,
+)
+from repro.core import perfmodel
+from repro.core.metadata import MetadataStore
+from repro.core.object_store import retrying
+from repro.launch.chaos import (
+    ChaosRuntime,
+    ChaosSchedule,
+    FaultEvent,
+    StoreStormInjector,
+)
+from repro.launch.cluster import ClusterConfig, ClusterEngine
+from repro.serve import TileFleet, TileRequest
+from repro.serve.autoscale import AutoscalePolicy
+from repro.serve.tileserver import DegradePolicy, EdgeCache
+
+KiB = 1024
+MiB = 1024 * 1024
+
+TASK_BYTES = 2 * MiB
+
+
+def _engine(nodes=4, *, chaos=None, lease_s=3600.0, heartbeat_s=None,
+            spec=10**6, fest=None, tasks_per_node=4):
+    """Scan campaign on a primed store: the workhorse chaos harness."""
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x5a" * (8 * TASK_BYTES))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=nodes, vcpus=16, virtual_time=True, lease_s=lease_s,
+        heartbeat_s=heartbeat_s, chaos=chaos,
+        min_completions_for_speculation=spec,
+        festivus=fest or FestivusConfig(block_bytes=1 * MiB,
+                                        readahead_blocks=0, cache_bytes=0,
+                                        max_inflight=2)))
+
+    def handler(worker, payload):
+        i, offset = payload
+        return len(worker.fs.read("obj", offset, TASK_BYTES))
+
+    tasks = {f"s{i}": (i, (i % 8) * TASK_BYTES)
+             for i in range(nodes * tasks_per_node)}
+    return engine, tasks, handler
+
+
+def _run(nodes=4, **kw):
+    engine, tasks, handler = _engine(nodes, **kw)
+    return engine.run(tasks, handler)
+
+
+def _fingerprint(report):
+    """Everything that must be bit-identical between chaos-off twins."""
+    return (
+        report.completion_times,
+        report.results,
+        report.makespan_s,
+        report.queue_stats,
+        [(w.worker, w.tasks_completed, w.virtual_time_s,
+          w.store_stats.bytes_read, w.meta_ops, dict(w.store_faults))
+         for w in report.per_worker],
+        # event/reflow counts must match exactly; wall-clock keys excluded
+        {k: v for k, v in report.simulator.items()
+         if k not in ("wall_s", "events_per_s")},
+    )
+
+
+# ---------------------------------------------------------------------------
+# schedule construction + validation
+# ---------------------------------------------------------------------------
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(t=-1.0, kind="crash", worker=0)
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="meteor")
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="crash")  # no worker
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="zone_outage", duration_s=1.0)  # no domain
+    with pytest.raises(ValueError):
+        # hard zero capacity is rejected: model it as a deep brownout
+        FaultEvent(t=0.0, kind="zone_outage", domain=0, duration_s=1.0,
+                   scale=0.0)
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="hang", worker=0)  # no duration
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="throttle_storm", duration_s=1.0,
+                   fail_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="kv_stall", duration_s=1.0)  # no extra latency
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="crash", worker=0, restart_s=-0.1)
+
+
+def test_schedule_sorts_and_filters():
+    e1 = FaultEvent(t=2.0, kind="crash", worker=1)
+    e2 = FaultEvent(t=1.0, kind="hang", worker=0, duration_s=0.5)
+    e3 = FaultEvent(t=3.0, kind="throttle_storm", duration_s=1.0)  # fleet-wide
+    sched = ChaosSchedule([e1, e2, e3], seed=9)
+    assert [e.t for e in sched.events] == [1.0, 2.0, 3.0]
+    assert bool(sched) and not bool(ChaosSchedule())
+    assert sched.for_worker(0, ("hang",)) == [e2]
+    assert sched.for_worker(1, ("hang",)) == []
+    # fleet-wide (worker=None) events match every index
+    assert sched.for_worker(5, ("throttle_storm",)) == [e3]
+    storm = ChaosSchedule.storm(t=1.0, duration_s=2.0, fail_rate=0.25,
+                                workers=[0, 2], seed=4)
+    assert len(storm.events) == 2 and storm.seed == 4
+    assert {e.worker for e in storm.events} == {0, 2}
+
+
+def test_storm_injector_windowed_and_seeded():
+    inj = StoreStormInjector([(1.0, 2.0, 1.0)], seed=3, worker_index=0)
+    assert not inj.roll(0.5)       # outside the window: never fails
+    assert inj.roll(1.5)           # fail_rate=1.0 inside: always fails
+    assert not inj.roll(2.0)       # window is half-open [start, end)
+    # same seed => same decision sequence; different worker => different rng
+    a = StoreStormInjector([(0.0, 1.0, 0.5)], seed=7, worker_index=1)
+    b = StoreStormInjector([(0.0, 1.0, 0.5)], seed=7, worker_index=1)
+    rolls_a = [a.roll(0.5) for _ in range(64)]
+    rolls_b = [b.roll(0.5) for _ in range(64)]
+    assert rolls_a == rolls_b
+
+
+def test_runtime_build_emits_capacity_pairs():
+    sched = ChaosSchedule([
+        FaultEvent(t=1.0, kind="zone_outage", domain=0, duration_s=2.0,
+                   scale=0.1),
+        FaultEvent(t=0.5, kind="crash", worker=0),
+        FaultEvent(t=0.25, kind="throttle_storm", worker=1, duration_s=1.0),
+    ])
+    rt = ChaosRuntime.build(sched)
+    tags = sorted((t, tag[0]) for t, tag in rt.heap_events)
+    # storm is a static mount window — no heap traffic at all
+    assert tags == [(0.5, "crash"), (1.0, "capacity"), (3.0, "capacity")]
+    assert rt.storm_injector(1) is not None
+    assert rt.storm_injector(0) is None
+    assert rt.kv_stall_windows(0) == ()
+
+
+# ---------------------------------------------------------------------------
+# satellite: retrying() budget + virtual sleep injection
+# ---------------------------------------------------------------------------
+def test_retrying_budget_and_sleep_injection():
+    slept = []
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        raise TransientStoreError("nope")
+
+    # without a budget: all attempts run, sleeps are injected not wall
+    with pytest.raises(TransientStoreError):
+        retrying(flaky, attempts=4, base_delay_s=0.01, sleep=slept.append)
+    assert calls[0] == 4 and len(slept) == 3
+    assert slept == [0.01, 0.02, 0.04]  # exponential backoff
+    # a budget cuts the retry chain before the sleep that would bust it
+    slept.clear()
+    calls[0] = 0
+    with pytest.raises(TransientStoreError):
+        retrying(flaky, attempts=10, base_delay_s=0.01, sleep=slept.append,
+                 budget_s=0.05)
+    assert sum(slept) <= 0.05
+    assert calls[0] < 10
+
+
+def test_flaky_store_counts_injected_faults_per_op():
+    inner = InMemoryObjectStore()
+    inner.put("k", b"x" * 100)
+    flaky = FlakyObjectStore(inner, failure_rate=1.0, seed=1)
+    for _ in range(3):
+        with pytest.raises(TransientStoreError):
+            flaky.get_range("k", 0, 10)
+    with pytest.raises(TransientStoreError):
+        flaky.head("k")
+    assert flaky.injected_by_op == {"get_range": 3, "head": 1}
+    assert flaky.injected_failures == 4
+
+
+# ---------------------------------------------------------------------------
+# the disabled-twin guarantee: chaos wiring must be exactly free when off
+# ---------------------------------------------------------------------------
+def test_empty_schedule_is_bit_identical_twin():
+    base = _run(nodes=4)
+    twin = _run(nodes=4, chaos=ChaosSchedule())
+    assert base.all_done and twin.all_done  # not vacuous
+    assert _fingerprint(base) == _fingerprint(twin)
+    assert twin.chaos == {"scheduled": 0, "seed": 0, "fired": {}}
+    assert base.chaos == {}
+
+
+def test_chaos_requires_virtual_time():
+    with pytest.raises(ValueError):
+        ClusterEngine(InMemoryObjectStore(), config=ClusterConfig(
+            nodes=2, virtual_time=False, chaos=ChaosSchedule()))
+
+
+# ---------------------------------------------------------------------------
+# crash: claim vanishes, lease expiry + restart recover, exactly once
+# ---------------------------------------------------------------------------
+def test_crash_recovers_via_lease_exactly_once():
+    sched = ChaosSchedule([FaultEvent(t=0.004, kind="crash", worker=0,
+                                      restart_s=0.01)])
+    report = _run(nodes=4, chaos=sched, lease_s=0.05, spec=1)
+    assert report.all_done
+    assert report.chaos["fired"] == {"crash": 1}
+    assert report.queue_stats["completed"] == 16
+    # the orphaned claim was re-delivered (expiry or speculation), and the
+    # dead worker's claim never completed twice
+    assert (report.queue_stats["expired"] >= 1
+            or report.queue_stats["speculated"] >= 1)
+    for tid, res in report.results.items():
+        assert res == TASK_BYTES
+
+
+def test_crash_slows_the_campaign_but_restarts():
+    base = _run(nodes=2, tasks_per_node=4)
+    sched = ChaosSchedule([FaultEvent(t=0.004, kind="crash", worker=0,
+                                      restart_s=0.05)])
+    crashed = _run(nodes=2, tasks_per_node=4, chaos=sched, lease_s=0.05)
+    assert crashed.all_done
+    assert crashed.makespan_s > base.makespan_s
+    # the restarted worker kept completing tasks after coming back
+    w0 = [w for w in crashed.per_worker if w.worker == "node0"][0]
+    assert w0.tasks_completed >= 1
+
+
+# ---------------------------------------------------------------------------
+# hang: zombie completion loses first-wins arbitration
+# ---------------------------------------------------------------------------
+def test_hang_zombie_completion_is_discarded():
+    sched = ChaosSchedule([FaultEvent(t=0.002, kind="hang", worker=0,
+                                      duration_s=1.0)])
+    report = _run(nodes=4, chaos=sched, lease_s=0.02, heartbeat_s=0.005,
+                  spec=1)
+    assert report.all_done
+    assert report.chaos["fired"] == {"hang": 1}
+    # the hung worker stopped heartbeating; a re-delivered or speculative
+    # copy finished first and the zombie's late complete lost first-wins
+    assert (report.queue_stats["expired"]
+            + report.queue_stats["speculated"]) >= 1
+    assert report.queue_stats["duplicate_completions"] >= 1
+    assert report.queue_stats["completed"] == 16
+
+
+# ---------------------------------------------------------------------------
+# zone outage / link brownout: fabric capacity dips then restores
+# ---------------------------------------------------------------------------
+def test_zone_outage_slows_then_restores():
+    base = _run(nodes=4)
+    sched = ChaosSchedule([FaultEvent(t=0.005, kind="zone_outage", domain=0,
+                                      duration_s=0.05, scale=0.05)])
+    dipped = _run(nodes=4, chaos=sched)
+    assert dipped.all_done
+    assert dipped.chaos["fired"] == {"zone_outage": 1}
+    assert dipped.makespan_s > base.makespan_s
+    # capacity restored: results identical, only timing differs
+    assert dipped.results == base.results
+
+
+def test_outage_longer_than_campaign_still_finishes():
+    sched = ChaosSchedule([FaultEvent(t=0.0, kind="zone_outage", domain=0,
+                                      duration_s=10.0, scale=0.02)])
+    report = _run(nodes=2, tasks_per_node=2, chaos=sched)
+    assert report.all_done  # deep brownout, not a stall: flows stay finite
+    base = _run(nodes=2, tasks_per_node=2)
+    assert report.makespan_s > 5 * base.makespan_s
+
+
+# ---------------------------------------------------------------------------
+# throttle storm: seeded TransientStoreError bursts + billed recovery
+# ---------------------------------------------------------------------------
+def test_throttle_storm_is_deterministic_and_billed():
+    sched = ChaosSchedule.storm(t=0.0, duration_s=1.0, fail_rate=0.4, seed=7)
+    a = _run(nodes=4, chaos=sched)
+    b = _run(nodes=4, chaos=sched)
+    assert a.all_done and b.all_done
+    assert _fingerprint(a) == _fingerprint(b)  # same seed => same storm
+    assert a.chaos["seed"] == 7
+    # rejections surfaced per-op through worker reports...
+    faults = {}
+    for w in a.per_worker:
+        for op, n in w.store_faults.items():
+            faults[op] = faults.get(op, 0) + n
+    assert faults.get("get_range", 0) > 0
+    # ...and the retry backoff was billed into the virtual clock
+    assert a.festivus_stats.retried_ops > 0
+    assert a.festivus_stats.retry_backoff_s > 0.0
+    base = _run(nodes=4)
+    assert a.makespan_s > base.makespan_s
+
+
+def test_storm_on_one_worker_only_faults_that_mount():
+    sched = ChaosSchedule.storm(t=0.0, duration_s=1.0, fail_rate=0.5,
+                                workers=[0], seed=3)
+    report = _run(nodes=4, chaos=sched)
+    assert report.all_done
+    faulted = {w.worker for w in report.per_worker if w.store_faults}
+    assert faulted == {"node0"}
+
+
+# ---------------------------------------------------------------------------
+# retry budget: a storm outlasting the budget dead-letters, none lost
+# ---------------------------------------------------------------------------
+def test_retry_budget_exhaustion_dead_letters_exactly_once():
+    fest = FestivusConfig(block_bytes=1 * MiB, readahead_blocks=0,
+                          cache_bytes=0, max_inflight=2,
+                          retry_budget_s=0.002)
+    sched = ChaosSchedule.storm(t=0.0, duration_s=100.0, fail_rate=1.0,
+                                seed=1)
+    engine, tasks, handler = _engine(nodes=2, tasks_per_node=2, chaos=sched,
+                                     lease_s=0.05, fest=fest)
+    report = engine.run(tasks, handler)
+    # every op fails forever: nothing can complete, everything dead-letters
+    assert not report.all_done
+    assert len(report.dead_tasks) == len(tasks)
+    assert report.queue_stats["completed"] == 0
+    # exactly-once audit: completed + dead covers the whole campaign
+    assert report.queue_stats["completed"] + len(report.dead_tasks) == len(tasks)
+    assert report.festivus_stats.retry_budget_exhausted > 0
+
+
+# ---------------------------------------------------------------------------
+# hedged reads: second request wins while the first retries
+# ---------------------------------------------------------------------------
+def test_hedged_reads_win_under_storm():
+    fest = FestivusConfig(block_bytes=1 * MiB, readahead_blocks=0,
+                          cache_bytes=0, max_inflight=2,
+                          hedged_reads=True, hedge_delay_floor_s=1e-4)
+    sched = ChaosSchedule.storm(t=0.0, duration_s=1.0, fail_rate=0.4, seed=7)
+    engine, tasks, handler = _engine(nodes=4, chaos=sched, fest=fest)
+    report = engine.run(tasks, handler)
+    assert report.all_done
+    assert report.festivus_stats.hedged_reads > 0
+    assert report.festivus_stats.hedge_wins > 0
+    assert report.festivus_stats.hedge_wins <= report.festivus_stats.hedged_reads
+
+
+def test_hedged_off_is_bit_identical_under_storm():
+    """Hedging changes *recovery*, not the fault pattern: with hedging off
+    the storm path reduces to the classic retry loop."""
+    sched = ChaosSchedule.storm(t=0.0, duration_s=1.0, fail_rate=0.3, seed=5)
+    a = _run(nodes=2, chaos=sched)
+    b = _run(nodes=2, chaos=sched)
+    assert _fingerprint(a) == _fingerprint(b)
+    assert a.festivus_stats.hedged_reads == 0
+
+
+# ---------------------------------------------------------------------------
+# ssd failure: tier drops, reads fall through to the store
+# ---------------------------------------------------------------------------
+def test_ssd_failure_falls_through_to_store():
+    fest = FestivusConfig(block_bytes=1 * MiB, readahead_blocks=0,
+                          cache_bytes=0, max_inflight=2, ssd_bytes=64 * MiB)
+    registry = {}
+    sched = ChaosSchedule([FaultEvent(t=0.004, kind="ssd_failure", worker=0)])
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x5a" * (8 * TASK_BYTES))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=2, virtual_time=True, chaos=sched, festivus=fest,
+        ssd_tier_registry=registry))
+
+    def handler(worker, payload):
+        i, offset = payload
+        return len(worker.fs.read("obj", offset, TASK_BYTES))
+
+    tasks = {f"s{i}": (i, (i % 8) * TASK_BYTES) for i in range(8)}
+    report = engine.run(tasks, handler)
+    assert report.all_done
+    assert report.chaos["fired"] == {"ssd_failure": 1}
+    assert report.festivus_stats.ssd_device_failures == 1
+    # the dead device left the persistent registry: a re-run would get a
+    # fresh tier, not the failed one
+    assert (None, 0) not in registry
+    assert (None, 1) in registry
+
+
+# ---------------------------------------------------------------------------
+# kv stall: metadata ops slow down inside the window
+# ---------------------------------------------------------------------------
+def test_kv_stall_slows_metadata():
+    base = _run(nodes=2, tasks_per_node=2)
+    sched = ChaosSchedule([FaultEvent(t=0.0, kind="kv_stall", duration_s=10.0,
+                                      extra_latency_s=0.005)])
+    stalled = _run(nodes=2, tasks_per_node=2, chaos=sched)
+    assert stalled.all_done
+    assert stalled.makespan_s > base.makespan_s
+    assert stalled.results == base.results
+
+
+# ---------------------------------------------------------------------------
+# serving: graceful-degradation ladder + chaos availability accounting
+# ---------------------------------------------------------------------------
+def _serving_world(hw=128, chunk=32, levels=2, seed=0):
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    cs = ChunkStore(Festivus(inner, meta=meta), "bucket")
+    rng = np.random.default_rng(seed)
+    data = rng.random((hw, hw, 3), dtype=np.float32)
+    arr = cs.create("composite", data.shape, np.float32, (chunk, chunk, 3),
+                    pyramid_levels=levels)
+    arr.write_region((0, 0, 0), data)
+    arr.build_pyramid()
+    return inner, meta
+
+
+def _trace(n=200, dt=0.001, seed=1):
+    rng = np.random.default_rng(seed)
+    return [TileRequest(t=i * dt, level=0, x=int(rng.integers(0, 4)),
+                        y=int(rng.integers(0, 4))) for i in range(n)]
+
+
+def test_degrade_policy_validation():
+    with pytest.raises(ValueError):
+        DegradePolicy(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        DegradePolicy(brownout_depth=-1)
+    with pytest.raises(ValueError):
+        DegradePolicy(swr_s=-1.0)
+    with pytest.raises(ValueError):
+        DegradePolicy(shed_cost_s=-1.0)
+
+
+def test_serving_degrade_off_is_twin():
+    inner, meta = _serving_world()
+    tr = _trace()
+    r1 = TileFleet(inner, meta, "bucket", servers=2, tile_px=32,
+                   cache_bytes=4 * MiB).run(tr)
+    r2 = TileFleet(inner, meta, "bucket", servers=2, tile_px=32,
+                   cache_bytes=4 * MiB).run(tr, degrade=None, chaos=None)
+    assert r1.samples == r2.samples and r1.p99_s == r2.p99_s
+    assert r2.shed == 0 and r2.degraded == 0 and r2.dead == 0
+    assert r2.availability == 1.0
+
+
+def test_serving_sheds_under_brownout_depth():
+    inner, meta = _serving_world()
+    burst = [TileRequest(t=0.0, level=0, x=i % 4, y=i // 4 % 4)
+             for i in range(64)]
+    rep = TileFleet(inner, meta, "bucket", servers=1, tile_px=32,
+                    cache_bytes=4 * MiB).run(
+        burst, degrade=DegradePolicy(brownout_depth=4, coarse_fallback=False))
+    assert rep.shed > 0
+    assert rep.shed + rep.completed == 64
+    assert rep.availability == pytest.approx(rep.completed / 64)
+    # shed responses carry no bytes and no latency samples
+    assert len(rep.samples) == rep.completed
+
+
+def test_serving_coarse_fallback_on_blown_deadline():
+    inner, meta = _serving_world()
+    burst = [TileRequest(t=0.0, level=0, x=i % 4, y=i // 4 % 4)
+             for i in range(64)]
+    rep = TileFleet(inner, meta, "bucket", servers=1, tile_px=32,
+                    cache_bytes=4 * MiB).run(
+        burst, degrade=DegradePolicy(deadline_s=0.001, coarse_fallback=True))
+    # queue delay blows the deadline for everything behind the first few:
+    # they serve the parent pyramid tile instead of failing
+    assert rep.degraded > 0
+    assert rep.availability == 1.0
+    assert rep.completed == 64
+
+
+def test_serving_chaos_crash_availability_accounting():
+    inner, meta = _serving_world()
+    tr = _trace()
+    sched = ChaosSchedule([FaultEvent(t=0.01, kind="crash", worker=0,
+                                      restart_s=0.02)])
+    rep = TileFleet(inner, meta, "bucket", servers=2, tile_px=32,
+                    cache_bytes=4 * MiB,
+                    autoscale=AutoscalePolicy(lease_s=0.05)).run(
+        tr, chaos=sched)
+    assert rep.cluster.chaos["fired"] == {"crash": 1}
+    # exactly-once audit across outcomes
+    assert rep.completed + rep.dead + rep.shed == len(tr)
+    assert 0.0 < rep.availability <= 1.0
+
+
+def test_edge_filter_stale_while_revalidate():
+    inner, meta = _serving_world()
+    fleet = TileFleet(inner, meta, "bucket", servers=1, tile_px=32,
+                      cache_bytes=4 * MiB, edge_cache_bytes=4 * MiB)
+    edge = EdgeCache(4 * MiB)
+    tr = [TileRequest(t=0.00, level=0, x=0, y=0),   # fills the edge
+          TileRequest(t=0.02, level=0, x=0, y=0),   # stale hit (in window)
+          TileRequest(t=0.03, level=0, x=0, y=0),   # follower of revalidation
+          TileRequest(t=0.20, level=0, x=0, y=0)]   # past window after purge 2
+    purges = [(0.01, ("composite", 0, 0, 0)), (0.1, ("composite", 0, 0, 0))]
+    fwd, followers, stale, reval = fleet._edge_filter(
+        tr, edge, purge_events=purges, swr_s=0.05)
+    # req1 was served stale and spawned one background revalidation
+    assert len(stale) == 1 and stale[0][0] == 0.02
+    assert len(reval) == 1
+    # req2 coalesced onto the revalidation's fresh entry
+    assert len(followers) == 1
+    # req3 arrived past the second purge's SWR window: a hard miss
+    assert len(fwd) == 3  # original leader + revalidation + req3
+    # swr_s=0 reproduces the legacy purge path exactly
+    edge2 = EdgeCache(4 * MiB)
+    fwd2, fol2, stale2, reval2 = fleet._edge_filter(
+        tr, edge2, purge_events=purges, swr_s=0.0)
+    assert stale2 == [] and reval2 == set()
+    assert len(fwd2) == 3 and len(fol2) == 1
+
+
+def test_serving_swr_end_to_end():
+    """SWR serves the stale edge entry (edge-hit latency) and counts it."""
+    inner, meta = _serving_world()
+    fleet = TileFleet(inner, meta, "bucket", servers=1, tile_px=32,
+                      cache_bytes=4 * MiB, edge_cache_bytes=4 * MiB)
+    # no ingest => no purges => SWR never triggers, but the plumbing runs
+    rep = fleet.run(_trace(50), degrade=DegradePolicy(swr_s=0.5))
+    assert rep.stale_served == 0
+    assert rep.availability == 1.0

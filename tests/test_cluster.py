@@ -716,3 +716,73 @@ def test_placement_reaches_workers():
     assert rep.all_done
     assert all(p is spread for p in seen)
     assert spread.zones_used() == 2
+
+
+# ---------------------------------------------------------------------------
+# chaos at the engine level: the zombie-worker double-count hazard
+# ---------------------------------------------------------------------------
+def test_chaos_hang_zombie_does_not_double_count_completions():
+    """A hung worker's deferred completion arrives after a speculative
+    copy already finished: exactly one completion per task, the
+    completion timestamp stays the winner's, and the zombie's late
+    report lands in duplicate_completions."""
+    from repro.launch.chaos import ChaosSchedule, FaultEvent
+
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x5a" * (4 * MiB))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    hang_end = 0.002 + 1.0
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=4, virtual_time=True, lease_s=0.02, heartbeat_s=0.005,
+        min_completions_for_speculation=1,
+        chaos=ChaosSchedule([FaultEvent(t=0.002, kind="hang", worker=0,
+                                        duration_s=1.0)]),
+        festivus=FestivusConfig(block_bytes=1 * MiB, readahead_blocks=0,
+                                cache_bytes=0, max_inflight=2)))
+
+    def handler(worker, payload):
+        return len(worker.fs.read("obj", (payload % 4) * MiB, MiB))
+
+    report = engine.run({f"t{i}": i for i in range(16)}, handler)
+    assert report.all_done
+    assert report.queue_stats["completed"] == 16
+    assert report.queue_stats["duplicate_completions"] >= 1
+    assert len(report.completion_times) == 16
+    # the zombie's deferred finish fires at hang end, but every recorded
+    # completion instant is the *winner's* — all strictly before it
+    assert all(t < hang_end for t in report.completion_times.values())
+    # completions tallied per worker sum to queue completions + duplicates
+    assert (sum(w.tasks_completed for w in report.per_worker)
+            == report.queue_stats["completed"])
+
+
+def test_chaos_crash_speculation_handoff_exactly_once():
+    """Crash mid-task with speculation on: the orphaned claim re-delivers,
+    every task completes exactly once, results stay correct."""
+    from repro.launch.chaos import ChaosSchedule, FaultEvent
+
+    inner = InMemoryObjectStore()
+    meta = MetadataStore()
+    inner.put("obj", b"\x5a" * (4 * MiB))
+    driver = Festivus(inner, meta=meta)
+    driver.sync_metadata()
+    driver.close()
+    engine = ClusterEngine(inner, meta=meta, config=ClusterConfig(
+        nodes=4, virtual_time=True, lease_s=0.05,
+        min_completions_for_speculation=1,
+        chaos=ChaosSchedule([FaultEvent(t=0.003, kind="crash", worker=0,
+                                        restart_s=0.01)]),
+        festivus=FestivusConfig(block_bytes=1 * MiB, readahead_blocks=0,
+                                cache_bytes=0, max_inflight=2)))
+
+    def handler(worker, payload):
+        return len(worker.fs.read("obj", (payload % 4) * MiB, MiB))
+
+    report = engine.run({f"t{i}": i for i in range(16)}, handler)
+    assert report.all_done
+    assert report.chaos["fired"] == {"crash": 1}
+    assert report.queue_stats["completed"] == 16
+    assert report.results == {f"t{i}": MiB for i in range(16)}

@@ -161,6 +161,29 @@ def test_zombie_fail_and_heartbeat_after_expiry_ignored():
     assert q.results()["t"] == "ok"
 
 
+def test_zombie_late_complete_keeps_first_completion_time():
+    """After a speculation handoff, the crashed worker's late complete
+    must neither overwrite the result nor move the completion timestamp
+    (the instant a serving tier turns into latency) — and it must count
+    as a duplicate, not a second completion."""
+    clock = Clock()
+    q = TaskQueue(clock=clock, default_lease_s=10)
+    q.submit("t", 0)
+    q.claim("w1")
+    clock.t = 11.0  # w1 crashed: lease expires, w2 takes over
+    assert q.claim("w2").task_id == "t"
+    clock.t = 12.5
+    assert q.complete("t", "w2", "fresh")
+    assert q.completion_times() == {"t": 12.5}
+    clock.t = 99.0  # the zombie wakes up and reports
+    assert not q.complete("t", "w1", "stale")
+    assert not q.heartbeat("t", "w1")
+    assert q.completion_times() == {"t": 12.5}  # timestamp unmoved
+    assert q.results()["t"] == "fresh"
+    assert q.stats["completed"] == 1
+    assert q.stats["duplicate_completions"] == 1
+
+
 def test_speculation_duplicate_dispatch_original_wins():
     """Speculative twin dispatched, but the original finishes first."""
     clock = Clock()

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python tools/perf_smoke.py
 
-Five tripwires, each compared against the committed records' own
+Six tripwires, each compared against the committed records' own
 ``wall_s`` and each failing only past ``--factor`` (default 2x):
 
 * the 512-node cluster-scaling sweep point (BENCH_cluster_scaling.json),
@@ -33,6 +33,13 @@ Five tripwires, each compared against the committed records' own
   tiered) plus the bit-identity twin and the placement probe, so a
   per-hit device-model scan, a revalidation slowdown, or a tier-twin
   divergence re-run all multiply this point's wall-clock.
+* the availability full-storm cell (the ``availability`` section's
+  crash+outage+storm row, re-run through
+  ``benchmarks.serving.availability_point``) — the canary for the
+  chaos layer: fault-event dispatch, storm-window gating, retry/hedge
+  accounting, and the degradation ladder all sit on this cell's
+  wall-clock, so a per-op chaos check that stops being O(1) multiplies
+  it.
 
 Every tripwire's delta lands in the CI job summary
 (``$GITHUB_STEP_SUMMARY``, markdown table) — or on stdout locally — so
@@ -115,6 +122,8 @@ def main(argv=None) -> int:
         failed |= _wheel_tripwire(args.serving_record, args.factor, deltas)
         failed |= _two_level_tripwire(args.serving_record, args.factor,
                                       deltas)
+        failed |= _availability_tripwire(args.serving_record, args.factor,
+                                         deltas)
     _emit_summary(deltas, args.factor)
     return 1 if failed else 0
 
@@ -252,6 +261,44 @@ def _two_level_tripwire(record_path: str, factor: float,
               f"slower than the committed baseline (limit {factor}x).  The "
               f"SSD tier has regressed; check the hit path, the generation "
               f"revalidation, and the tier-disabled twin before merging.",
+              file=sys.stderr, flush=True)
+        return True
+    return False
+
+
+def _availability_tripwire(record_path: str, factor: float,
+                           deltas: list) -> bool:
+    """Re-run the availability matrix's full-storm cell; True on
+    regression.  The cell rides worker crashes, a zone brownout, and a
+    throttle storm through the retry/hedge/degradation machinery, so a
+    chaos gate or recovery path that stops being O(1) per op multiplies
+    its wall-clock."""
+    try:
+        with open(record_path) as f:
+            serving = json.load(f)
+        avail = serving["availability"]
+        arow = next(r for r in avail["rows"]
+                    if r["crash"] and r["zone_outage"]
+                    and r["throttle_storm"])
+    except (OSError, KeyError, IndexError, StopIteration):
+        print("perf-smoke: no committed availability baseline; "
+              "skipping the availability tripwire", flush=True)
+        return False
+    from benchmarks.serving import availability_point
+    point = availability_point(avail["nominal_requests"], avail["servers"],
+                               crash=True, outage=True, storm=True)
+    wall, abase = point["wall_s"], arow["wall_s"]
+    print(f"perf-smoke: availability {point['requests']}-request "
+          f"{avail['servers']}-server full-storm cell wall {wall:.3f}s vs "
+          f"committed baseline {abase:.3f}s", flush=True)
+    ok = not (abase > 0 and wall > factor * abase)
+    deltas.append({"name": "availability full-storm cell",
+                   "baseline_s": abase, "wall_s": wall, "ok": ok})
+    if not ok:
+        print(f"perf-smoke: REGRESSION — full-storm cell {wall / abase:.1f}x "
+              f"slower than the committed baseline (limit {factor}x).  The "
+              f"chaos layer has regressed; check the storm-window gate, the "
+              f"retry/hedge path, and _CHAOS dispatch before merging.",
               file=sys.stderr, flush=True)
         return True
     return False
